@@ -1,0 +1,135 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(single-link worst case; the 2D torus gives each axis its own links, so the
+collective term is an upper bound).
+
+    compute    = HLO_FLOPs_per_chip / 197e12
+    memory     = HLO_bytes_per_chip / 819e9
+    collective = wire_bytes_per_chip / 50e9
+
+All three in seconds; the max is the bottleneck.  roofline_fraction =
+compute / max(terms): 1.0 when compute-bound (the optimization target).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _extrapolate(scan: dict, pa: dict, pb: dict, l_a: int, l_b: int,
+                 l_full: int) -> dict:
+    """Per-layer costs are linear in depth (homogeneous stacks): combine two
+    reduced-depth unrolled probes with the full-depth scan compile."""
+    rec = dict(scan)
+    rec["variant"] = "baseline"
+    rec["extrapolated_from"] = [l_a, l_b, l_full]
+    for key in ("hlo_flops", "hlo_bytes", "collective_wire_bytes"):
+        fa, fb = pa.get(key, 0.0), pb.get(key, 0.0)
+        slope = (fb - fa) / (l_b - l_a)
+        rec[key] = fa + slope * (l_full - l_a)
+    return rec
+
+
+def load_records(art_dir: str = "artifacts/dryrun",
+                 mesh: str = "single", variant: Optional[str] = None) -> List[dict]:
+    raw = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        raw.append(r)
+    # Synthesize extrapolated baselines for heavy archs (scan + 2 probes).
+    by_key: Dict[tuple, Dict[str, dict]] = {}
+    for r in raw:
+        by_key.setdefault((r["arch"], r["shape"]), {})[r.get("variant", "")] = r
+    full_layers = {"deepseek-v3-671b": 61, "gemma2-2b": 26, "llama3.2-3b": 28}
+    out = []
+    for (arch, shape), vs in by_key.items():
+        probes = sorted(int(k[5:]) for k in vs if k.startswith("probe")
+                        and vs[k].get("ok"))
+        if arch in full_layers and "scan" in vs and len(probes) >= 2 \
+                and vs["scan"].get("ok"):
+            la, lb = probes[0], probes[-1]
+            out.append(_extrapolate(vs["scan"], vs[f"probe{la}"],
+                                    vs[f"probe{lb}"], la, lb,
+                                    full_layers[arch]))
+            for k, v in vs.items():
+                if k != "scan" and not k.startswith("probe"):
+                    out.append(v)
+            continue
+        out.extend(vs.values())
+    if variant is not None:
+        out = [r for r in out if r.get("variant") == variant]
+    return sorted(out, key=lambda r: (r["arch"], r["shape"], r.get("variant", "")))
+
+
+def terms(rec: dict) -> Dict[str, float]:
+    compute = rec.get("hlo_flops", 0.0) / PEAK_FLOPS
+    memory = rec.get("hlo_bytes", 0.0) / HBM_BW
+    collective = rec.get("collective_wire_bytes", 0.0) / ICI_BW
+    dom = max(compute, memory, collective)
+    out = {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "bottleneck": ("compute" if dom == compute else
+                       "memory" if dom == memory else "collective"),
+        "roofline_fraction": compute / dom if dom > 0 else 0.0,
+    }
+    n_dev = rec.get("n_devices", 256)
+    mf = rec.get("model_flops", 0.0) / n_dev
+    out["model_flops_per_chip"] = mf
+    out["useful_ratio"] = mf / rec["hlo_flops"] if rec.get("hlo_flops") else 0.0
+    return out
+
+
+def table(records: List[dict]) -> str:
+    hdr = ("| arch | shape | step | variant | compute(s) | memory(s) | "
+           "collective(s) | bottleneck | roofline frac | useful/HLO | "
+           "temp GiB/chip |\n|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in records:
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | - | {r.get('variant')} "
+                        f"| FAILED: {r.get('error', '?')[:60]} |||||||")
+            continue
+        t = terms(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('step')} | {r.get('variant')} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} | {t['collective_s']:.2e} "
+            f"| {t['bottleneck']} | {t['roofline_fraction']:.2f} "
+            f"| {t['useful_ratio']:.2f} "
+            f"| {r.get('temp_size_in_bytes', 0) / 2**30:.2f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def emit_benchmark(art_dir: str = "artifacts/dryrun") -> None:
+    from .common import emit
+    recs = load_records(art_dir)
+    if not recs:
+        emit("roofline/no_artifacts", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for r in recs:
+        if not r.get("ok"):
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, "FAILED")
+            continue
+        t = terms(r)
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r.get('variant')}",
+             max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+             f"bottleneck={t['bottleneck']} frac={t['roofline_fraction']:.2f} "
+             f"useful={t['useful_ratio']:.2f}")
+    out = Path(art_dir).parent / "roofline.md"
+    multi = load_records(art_dir, mesh="multi")
+    out.write_text(
+        "# Roofline — single pod (16x16 = 256 chips)\n\n" + table(recs)
+        + "\n# Roofline — multi-pod (2x16x16 = 512 chips)\n\n" + table(multi))
+    emit("roofline/table_written", 0.0,
+         f"{out} ({len(recs)} single-pod + {len(multi)} multi-pod rows)")

@@ -1,0 +1,45 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: `PYTHONPATH=src python -m benchmarks.run [--only X]`."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+
+    from . import paper_tables as pt
+    from . import roofline
+
+    benches = [
+        ("table2_semantic_embeddings", pt.table2_semantic_embeddings),
+        ("table3_l2_standardization", pt.table3_l2_standardization),
+        ("table4_auto_m", pt.table4_auto_m),
+        ("table7_lloydmax_vs_uniform", pt.table7_lloydmax_vs_uniform),
+        ("fig3_mixed_precision", pt.fig3_mixed_precision),
+        ("table6_cross_kernel_reproducibility", pt.table6_cross_kernel_reproducibility),
+        ("bench_quantized_kv_decode", pt.bench_quantized_kv_decode),
+        ("roofline", roofline.emit_benchmark),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

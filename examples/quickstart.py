@@ -1,0 +1,62 @@
+"""Quickstart: the SQLite deployment model — one file, one call, runs anywhere.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import Allowlist, GlobalStd, MonaVec
+from repro.data.synthetic import (embedding_corpus, pixel_corpus,
+                                  queries_from_corpus)
+
+
+def main() -> None:
+    # --- Cosine semantic embeddings (the paper's primary setting) -----------
+    corpus = embedding_corpus(seed=0, n=20_000, dim=1024)
+    queries = queries_from_corpus(corpus, seed=1, n_q=5)
+
+    index = MonaVec.build(corpus, metric="cosine")        # data-oblivious, 4-bit
+    scores, ids = index.search(queries, k=5)
+    print("cosine top-5 ids:\n", ids)
+
+    # one file ...
+    path = os.path.join(tempfile.gettempdir(), "quickstart.mvec")
+    index.save(path)
+    print(f"saved {os.path.getsize(path) / 2**20:.1f} MiB "
+          f"(f32 would be {corpus.nbytes / 2**20:.0f} MiB)")
+
+    # ... one call, byte-identical results
+    index2 = MonaVec.load(path)
+    scores2, ids2 = index2.search(queries, k=5)
+    assert np.array_equal(ids, ids2) and np.array_equal(scores, scores2)
+    print("reload => byte-identical top-K: OK")
+
+    # --- Pre-filter allowlist ------------------------------------------------
+    allow = Allowlist.from_ids(range(1000), index.backend.ids)
+    _, ids_f = index.search(queries, k=5, allow=allow)
+    assert (ids_f < 1000).all()
+    print("pre-filter allowlist (exactly k allowed results): OK")
+
+    # --- L2 raw-magnitude data: single-pass fit() ----------------------------
+    pixels = pixel_corpus(seed=2, n=5_000, dim=784)
+    std = MonaVec.fit(pixels)                              # global (mu, sigma)
+    l2_index = MonaVec.build(pixels, metric="l2", std=std)
+    _, ids_l2 = l2_index.search(pixels[:3], k=3)
+    assert (ids_l2[:, 0] == np.arange(3).astype(np.uint64)).all()
+    print("L2 + fit(): self-NN recovered: OK")
+
+    # --- HNSW for larger corpora (auto-M policy) ------------------------------
+    print("auto-M:", MonaVec.recommended_m(45_000), "->",
+          MonaVec.recommended_m(1_200_000))
+    hnsw = MonaVec.build(corpus[:5000], metric="cosine", index="hnsw",
+                         m=16, ef_construction=64)
+    _, ids_h = hnsw.search(queries, k=5, ef=64)
+    print("hnsw top-5 ids:\n", ids_h)
+    os.unlink(path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""The paper's technique as a distributed serving workload + arch integration.
+
+1. Distributed 4-bit scan: corpus sharded over the local mesh via shard_map
+   (the same code path the 512-chip dry-run lowers), validated against the
+   single-device scan.
+2. Arch integration: a trained GIN's node embeddings and a two-tower item
+   tower, indexed by MonaVec — retrieval over learned representations.
+
+    PYTHONPATH=src python examples/retrieval_at_scale.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.core import MonaVec, quantize as qz
+from repro.core.scoring import score_f32, topk
+from repro.data.synthetic import embedding_corpus, queries_from_corpus, random_graph
+from repro.dist.retrieval import make_scan_topk_shardmap, scan_topk_pjit
+from repro.models import gnn as gnn_m
+from repro.models import recsys as rs
+
+
+def distributed_scan() -> None:
+    corpus = embedding_corpus(0, 65_536, 512)
+    queries = queries_from_corpus(corpus, 1, 16)
+    enc = qz.encode(jnp.asarray(corpus), metric="cosine")
+    q_rot = qz.encode_query(jnp.asarray(queries), enc)
+
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    with mesh:
+        fn = make_scan_topk_shardmap(mesh, metric="cosine", k=10)
+        vals_sm, ids_sm = fn(q_rot, enc.packed, enc.qnorms)
+        vals_pj, ids_pj = scan_topk_pjit(q_rot, enc.packed, enc.qnorms,
+                                         metric="cosine", k=10)
+    assert np.array_equal(np.asarray(ids_sm), np.asarray(ids_pj))
+    gt = np.asarray(topk(score_f32(jnp.asarray(queries), jnp.asarray(corpus),
+                                   "cosine"), 10)[1])
+    rec = np.mean([len(set(a.tolist()) & set(g.tolist())) / 10
+                   for a, g in zip(np.asarray(ids_sm), gt)])
+    print(f"[dist-scan] shard_map == pjit top-10; Recall@10={rec:.3f} "
+          f"over 65K x 512 corpus")
+
+
+def gin_embedding_index() -> None:
+    """GIN is the one assigned arch the paper's technique can't accelerate
+    directly (DESIGN.md §4) — but its OUTPUT embeddings are index-able."""
+    cfg = C.get("gin-tu").make_smoke()
+    params = gnn_m.init_params(cfg, jax.random.key(0))
+    g = random_graph(5, 2000, 12_000, cfg.d_feat, cfg.n_classes)
+    x = jnp.asarray(g["x"])
+    for lp in params["layers"]:
+        x = gnn_m.gin_layer(lp, x, jnp.asarray(g["src"]), jnp.asarray(g["dst"]),
+                            2000)
+    node_embs = np.asarray(x)
+    idx = MonaVec.build(node_embs, metric="cosine")
+    _, ids = idx.search(node_embs[:5], k=5)
+    same_comm = np.mean(g["labels"][ids[:, 1:].astype(np.int64)] ==
+                        g["labels"][:5, None])
+    print(f"[gin-index] neighbours share the query's community "
+          f"{100 * same_comm:.0f}% of the time (homophily recovered)")
+
+
+def two_tower_candidates() -> None:
+    """retrieval_cand at example scale: MonaVec scan over tower outputs."""
+    cfg = C.get("two-tower-retrieval").make_smoke()
+    params = rs.two_tower_init(cfg, jax.random.key(1))
+    cand = np.asarray(rs.item_embedding(params, cfg, jnp.arange(50_000) % cfg.item_vocab))
+    users = np.asarray(rs.user_embedding(
+        params, cfg, jax.random.randint(jax.random.key(2), (8, cfg.n_user_feats),
+                                        0, cfg.user_vocab)))
+    idx = MonaVec.build(cand, metric="dot")
+    _, ids = idx.search(users, k=10)
+    gt = np.asarray(topk(score_f32(jnp.asarray(users), jnp.asarray(cand), "dot"),
+                         10)[1])
+    rec = np.mean([len(set(a.tolist()) & set(g.tolist())) / 10
+                   for a, g in zip(ids.astype(np.int64), gt)])
+    print(f"[two-tower] 4-bit candidate scan Recall@10={rec:.3f} over 50K items")
+
+
+if __name__ == "__main__":
+    distributed_scan()
+    gin_embedding_index()
+    two_tower_candidates()

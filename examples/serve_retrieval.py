@@ -1,0 +1,75 @@
+"""End-to-end serving driver (the paper's kind: retrieval, not training).
+
+Builds a 100K x 1024 index, then serves batched query traffic through the
+full stack: dense 4-bit scan + BM25 hybrid fusion + pre-filter allowlists +
+multi-tenant namespaces, measuring throughput.
+
+    PYTHONPATH=src python examples/serve_retrieval.py [--n 100000] [--batches 20]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Allowlist, HybridIndex, MonaVec, TenantRegistry
+from repro.core.scoring import score_f32, topk
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--dim", type=int, default=1024)
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=32)
+    args = ap.parse_args()
+
+    print(f"[build] corpus {args.n} x {args.dim} ...")
+    t0 = time.time()
+    corpus = embedding_corpus(0, args.n, args.dim)
+    index = MonaVec.build(corpus, metric="cosine")
+    print(f"[build] 4-bit index in {time.time() - t0:.1f}s "
+          f"({index.backend.enc.packed.size / 2**20:.0f} MiB packed, "
+          f"{corpus.nbytes / 2**20:.0f} MiB f32 equivalent)")
+
+    # Multi-tenancy: per-team namespaces over the same stack.
+    reg = TenantRegistry()
+    reg.put("team-search", "docs", index)
+
+    # Serve batched traffic.
+    total_q, t0 = 0, time.time()
+    recalls = []
+    for b in range(args.batches):
+        q = queries_from_corpus(corpus, 100 + b, args.batch_size)
+        idx = reg.get("team-search", "docs")
+        scores, ids = idx.search(q, k=10)
+        total_q += len(q)
+        if b % 5 == 0:   # spot-check recall vs exact
+            gt = np.asarray(topk(score_f32(
+                jax.numpy.asarray(q), jax.numpy.asarray(corpus), "cosine"), 10)[1])
+            recalls.append(np.mean([
+                len(set(a.tolist()) & set(g.tolist())) / 10
+                for a, g in zip(ids.astype(np.int64), gt)]))
+    dt = time.time() - t0
+    print(f"[serve] {total_q} queries in {dt:.2f}s -> {total_q / dt:.0f} QPS "
+          f"(single CPU core; Recall@10={np.mean(recalls):.3f})")
+
+    # Filtered retrieval: pre-filter allowlist keeps exactly k results.
+    allow = Allowlist.from_ids(range(0, args.n, 100), index.backend.ids)
+    q = queries_from_corpus(corpus, 999, 8)
+    _, ids = index.search(q, k=10, allow=allow)
+    assert (ids.astype(np.int64) % 100 == 0).all()
+    print(f"[filter] 1% allowlist -> exactly {ids.shape[1]} allowed results/query")
+
+    # Hybrid keyword+dense on a subset.
+    docs = [f"document {i} topic-{i % 50}" + (" quantization" if i % 997 == 0 else "")
+            for i in range(10_000)]
+    hy = HybridIndex.build(corpus[:10_000], docs, metric="cosine")
+    vals, ids = hy.search(q[:1], "quantization topic-3", k=5)
+    print(f"[hybrid] RRF fused top-5: {ids.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

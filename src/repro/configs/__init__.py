@@ -1,0 +1,3 @@
+# Architecture configs: importing this package populates the registry.
+from . import lm, gnn, recsys, retrieval  # noqa: F401
+from .registry import Arch, ShapeSpec, all_archs, cells, get  # noqa: F401

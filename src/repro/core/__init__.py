@@ -1,0 +1,20 @@
+# MonaVec core: the paper's primary contribution in JAX.
+#
+# Data-oblivious quantization (RHDH + Lloyd-Max), asymmetric scoring, three
+# index backends, pre-filter allowlist, hybrid BM25+RRF, single-file .mvec
+# persistence, and identity-based multi-tenancy.
+
+from .api import MonaVec
+from .allowlist import Allowlist
+from .bruteforce import BruteForceIndex
+from .hnsw import HnswIndex, recommended_m
+from .hybrid import HybridIndex
+from .ivf import IvfFlatIndex
+from .standardize import COSINE, DOT, L2, GlobalStd
+from .tenancy import TenantRegistry
+
+__all__ = [
+    "MonaVec", "Allowlist", "BruteForceIndex", "HnswIndex", "HybridIndex",
+    "IvfFlatIndex", "TenantRegistry", "GlobalStd", "recommended_m",
+    "COSINE", "DOT", "L2",
+]

@@ -1,0 +1,62 @@
+"""Pre-filter allowlist (paper §3.5, contribution #6).
+
+Applied BEFORE scoring/top-k, never after: post-filtering a selective
+allowlist returns fewer than K results; pre-filtering guarantees exactly
+min(K, |allowlist|) results at full recall regardless of selectivity.
+
+Two variants, auto-selected like the paper's bitvec/HashSet split:
+  * dense  — a boolean mask over row positions (O(1) lookup, cache friendly);
+  * sparse — an explicit sorted id array, materialized into a mask on demand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Mask value for disallowed rows: large-negative instead of -inf so that
+# score arithmetic never produces NaNs (e.g. -inf + finite adjustments).
+NEG = np.float32(-3.0e38)
+
+
+@dataclasses.dataclass
+class Allowlist:
+    """Pre-filter over external ids."""
+
+    mask: np.ndarray  # [n] bool over row positions
+    n_allowed: int
+
+    @staticmethod
+    def from_ids(
+        allowed_ids: Sequence[int],
+        index_ids: np.ndarray,
+        *,
+        dense_threshold: float = 0.01,
+    ) -> "Allowlist":
+        """Build from external ids.  Mirrors the paper's auto-selection: for
+        dense selections a bitmap materializes directly; for sparse ones we
+        go through a sorted-array membership test (np.isin uses sort/search).
+        """
+        allowed = np.asarray(list(allowed_ids), dtype=np.int64)
+        n = len(index_ids)
+        if len(allowed) >= dense_threshold * n:
+            # Dense path: bounded-universe bitmap.
+            lo, hi = index_ids.min(), index_ids.max()
+            bitmap = np.zeros(int(hi - lo + 1), dtype=bool)
+            in_range = (allowed >= lo) & (allowed <= hi)
+            bitmap[(allowed[in_range] - lo).astype(np.int64)] = True
+            mask = bitmap[(index_ids - lo).astype(np.int64)]
+        else:
+            mask = np.isin(index_ids, allowed)
+        return Allowlist(mask=mask, n_allowed=int(mask.sum()))
+
+    def apply(self, scores: jnp.ndarray) -> jnp.ndarray:
+        """Mask scores of disallowed rows to NEG (pre-top-k)."""
+        return jnp.where(jnp.asarray(self.mask), scores, NEG)
+
+
+def apply_optional(scores: jnp.ndarray, allow: Optional[Allowlist]) -> jnp.ndarray:
+    return scores if allow is None else allow.apply(scores)

@@ -1,0 +1,125 @@
+"""MonaVec facade: one class, one file, one call (the SQLite deployment model).
+
+    idx = MonaVec.build(vectors, metric="cosine", index="hnsw")
+    scores, ids = idx.search(queries, k=10)
+    idx.save("corpus.mvec");  idx2 = MonaVec.load("corpus.mvec")
+
+The default configuration (BruteForce over RHDH+Lloyd-Max 4-bit) is
+data-oblivious end to end; `fit()` adds the optional single-pass L2
+calibration; `index="ivf"` is the single opt-in *trained* component.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import mvec_format as fmt
+from .allowlist import Allowlist
+from .bruteforce import BruteForceIndex
+from .hnsw import HnswIndex, recommended_m
+from .ivf import IvfFlatIndex
+from .standardize import COSINE, GlobalStd
+
+Backend = Union[BruteForceIndex, IvfFlatIndex, HnswIndex]
+_TYPE_CODE = {BruteForceIndex: fmt.INDEX_BRUTEFORCE, IvfFlatIndex: fmt.INDEX_IVF,
+              HnswIndex: fmt.INDEX_HNSW}
+
+
+@dataclasses.dataclass
+class MonaVec:
+    backend: Backend
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def fit(sample: jnp.ndarray) -> GlobalStd:
+        """Single-pass global standardization for L2 corpora (paper fit())."""
+        return GlobalStd.fit(sample)
+
+    @staticmethod
+    def recommended_m(n: int) -> int:
+        return recommended_m(n)
+
+    @staticmethod
+    def build(
+        vectors: jnp.ndarray,
+        *,
+        metric: str = COSINE,
+        index: str = "bruteforce",
+        seed: int = 0x6D6F6E61,
+        bits: int = 4,
+        avg_bits: Optional[float] = None,
+        std: Optional[GlobalStd] = None,
+        ids: Optional[np.ndarray] = None,
+        **kwargs,
+    ) -> "MonaVec":
+        vectors = jnp.asarray(vectors)
+        if index == "bruteforce":
+            be = BruteForceIndex.build(
+                vectors, metric=metric, seed=seed, bits=bits, std=std, ids=ids,
+                avg_bits=avg_bits,
+            )
+        elif index == "ivf":
+            be = IvfFlatIndex.build(
+                vectors, metric=metric, seed=seed, bits=bits, std=std, ids=ids, **kwargs
+            )
+        elif index == "hnsw":
+            be = HnswIndex.build(
+                vectors, metric=metric, seed=seed, bits=bits, std=std, ids=ids, **kwargs
+            )
+        else:
+            raise ValueError(f"unknown index {index!r}")
+        return MonaVec(backend=be)
+
+    # -- search --------------------------------------------------------------
+
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int = 10,
+        *,
+        allow: Optional[Allowlist] = None,
+        **kwargs,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        return self.backend.search(jnp.asarray(queries), k, allow=allow, **kwargs)
+
+    # -- persistence -----------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        be = self.backend
+        if isinstance(be, BruteForceIndex):
+            blob, param = None, 0
+        elif isinstance(be, IvfFlatIndex):
+            blob = fmt.pack_ivf_blob(np.asarray(be.centroids), be.order, be.offsets)
+            param = be.nlist
+        else:
+            blob = fmt.pack_hnsw_blob(be)
+            param = be.m
+        fmt.save(path, fmt.MvecFile(
+            enc=be.enc, ids=be.ids, index_type=_TYPE_CODE[type(be)],
+            index_param=param, index_data=blob,
+        ))
+
+    @staticmethod
+    def load(path: str) -> "MonaVec":
+        f = fmt.load(path)
+        if f.index_type == fmt.INDEX_BRUTEFORCE:
+            return MonaVec(BruteForceIndex(enc=f.enc, ids=f.ids))
+        if f.index_type == fmt.INDEX_IVF:
+            cents, order, offsets = fmt.unpack_ivf_blob(f.index_data)
+            return MonaVec(IvfFlatIndex(
+                enc=f.enc, ids=f.ids, centroids=jnp.asarray(cents),
+                order=order, offsets=offsets, nlist=f.index_param,
+            ))
+        if f.index_type == fmt.INDEX_HNSW:
+            nbr0, nbr_hi, node_level, entry, max_level = fmt.unpack_hnsw_blob(f.index_data)
+            return MonaVec(HnswIndex(
+                enc=f.enc, ids=f.ids, neighbors0=nbr0, neighbors_hi=nbr_hi,
+                node_level=node_level, entry_point=entry, max_level=max_level,
+                m=f.index_param,
+            ))
+        raise ValueError(f"unknown index type {f.index_type}")

@@ -1,0 +1,61 @@
+"""BruteForce backend (paper §3.4.1): SIMD-vectorized linear scan.
+
+Zero build time, deterministic, memory-compact — the recommended default for
+embedded/offline corpora.  On TPU the scan is the Pallas nibble-dot kernel
+over the full packed corpus; scores then pre-filter + top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import quantize as qz
+from .allowlist import Allowlist, apply_optional
+from .scoring import topk
+
+
+@dataclasses.dataclass
+class BruteForceIndex:
+    enc: qz.Encoded
+    ids: np.ndarray  # [n] external ids (u64 in the .mvec file)
+
+    @staticmethod
+    def build(
+        vectors: jnp.ndarray,
+        *,
+        ids: Optional[np.ndarray] = None,
+        metric: str = "cosine",
+        seed: int = 0x6D6F6E61,
+        bits: int = 4,
+        std=None,
+        avg_bits: Optional[float] = None,
+    ) -> "BruteForceIndex":
+        n = vectors.shape[0]
+        if avg_bits is not None and avg_bits != 4:
+            enc = qz.encode_mixed(vectors, metric=metric, seed=seed, avg_bits=avg_bits, std=std)
+        else:
+            enc = qz.encode(vectors, metric=metric, seed=seed, bits=bits, std=std)
+        if ids is None:
+            ids = np.arange(n, dtype=np.uint64)
+        return BruteForceIndex(enc=enc, ids=np.asarray(ids, dtype=np.uint64))
+
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int,
+        *,
+        allow: Optional[Allowlist] = None,
+        use_kernel: Optional[bool] = None,   # None = backend dispatch
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (scores [b,k], external_ids [b,k]).  Deterministic:
+        stable top-k (lower row index wins ties)."""
+        q_rot = qz.encode_query(jnp.atleast_2d(queries), self.enc)
+        scores = ops.score_packed(q_rot, self.enc, use_kernel=use_kernel)
+        scores = apply_optional(scores, allow)
+        vals, idx = topk(scores, min(k, self.enc.n))
+        return np.asarray(vals), self.ids[np.asarray(idx)]

@@ -1,0 +1,326 @@
+"""HNSW backend (paper §3.4.3): fp32-build / 4-bit-search, deterministic.
+
+Paper-faithful properties reproduced here:
+  * **Sequential, single-threaded build** (§2.1): insertion order is the data
+    order; level assignment is a seeded per-insertion stream -> the same
+    vectors always produce the SAME graph (parallel-build libraries cannot
+    offer this).
+  * **FP32 build** (contribution #5): graph edges are selected with exact f32
+    dot products over the rotated vectors; quantization noise (~0.01-0.02)
+    exceeds the neighbor score gap (~0.001-0.003) and would corrupt topology.
+  * **Metric-aware build scoring** (contribution #3): L2 uses
+    ``<q,v> - ||v||^2 / 2`` (monotone in -||q-v||^2); plain dot product gives
+    the wrong topology (0.31 -> 0.62 Recall@10 in the paper).
+  * **Auto-M** (contribution #4): M=32 below 1e6 vectors, 64 at or above.
+  * **4-bit search**: query-time scoring uses the packed Lloyd-Max codes via
+    the same dequant path as BruteForce; only ranking noise, no structural
+    damage.
+
+The query-time beam search is a fixed-shape ``lax.while_loop`` (jit/TPU
+friendly): a single (score, id, expanded) frontier of width ef, a visited
+bitmap, and stable top-k merges — deterministic by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lloydmax, quantize as qz
+from .allowlist import NEG, Allowlist
+from .rhdh import rhdh_apply
+from .scoring import adjust_scores
+from .standardize import COSINE, L2, prepare
+
+
+def recommended_m(n: int) -> int:
+    """Auto-M policy (paper contribution #4): graph diameter grows with N."""
+    return 32 if n < 1_000_000 else 64
+
+
+def _build_scores(q: np.ndarray, vecs: np.ndarray, metric: str) -> np.ndarray:
+    """FP32 build-time scores of q against rows of vecs (higher = closer)."""
+    raw = vecs @ q
+    if metric == L2:
+        return raw - 0.5 * np.sum(vecs * vecs, axis=1)
+    return raw
+
+
+@dataclasses.dataclass
+class HnswIndex:
+    enc: qz.Encoded
+    ids: np.ndarray
+    neighbors0: np.ndarray          # [n, 2M] int32, -1 padded (level 0)
+    neighbors_hi: np.ndarray        # [max_level, n, M] int32 (levels 1..max)
+    node_level: np.ndarray          # [n] int8
+    entry_point: int
+    max_level: int
+    m: int
+
+    # ------------------------------------------------------------------
+    # Build.
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def build(
+        vectors: jnp.ndarray,
+        *,
+        ids: Optional[np.ndarray] = None,
+        metric: str = COSINE,
+        seed: int = 0x6D6F6E61,
+        bits: int = 4,
+        std=None,
+        m: Optional[int] = None,
+        ef_construction: int = 100,
+    ) -> "HnswIndex":
+        n = int(vectors.shape[0])
+        if m is None:
+            m = recommended_m(n)
+        enc = qz.encode(vectors, metric=metric, seed=seed, bits=bits, std=std)
+
+        # FP32 build buffer: rotated, quantizer-space vectors (paper keeps the
+        # fp32 vectors during construction and drops them afterwards).
+        prepared = prepare(jnp.asarray(vectors, jnp.float32), metric, std)
+        rot = np.asarray(rhdh_apply(prepared, seed, normalized=False))
+
+        m0 = 2 * m
+        ml = 1.0 / math.log(m)
+        level_rng = np.random.RandomState(seed & 0x7FFFFFFF)
+        levels = np.minimum(
+            (-np.log(np.maximum(level_rng.uniform(size=n), 1e-12)) * ml).astype(np.int32),
+            31,
+        )
+        max_level = int(levels.max()) if n else 0
+
+        nbr0 = np.full((n, m0), -1, dtype=np.int32)
+        nbr_hi = np.full((max_level, n, m), -1, dtype=np.int32) if max_level else np.zeros(
+            (0, n, m), dtype=np.int32
+        )
+
+        def neighbors(node: int, level: int) -> np.ndarray:
+            arr = nbr0[node] if level == 0 else nbr_hi[level - 1, node]
+            return arr[arr >= 0]
+
+        def set_neighbors(node: int, level: int, nbrs: np.ndarray) -> None:
+            cap = m0 if level == 0 else m
+            arr = np.full(cap, -1, dtype=np.int32)
+            arr[: len(nbrs)] = nbrs[:cap]
+            if level == 0:
+                nbr0[node] = arr
+            else:
+                nbr_hi[level - 1, node] = arr
+
+        def search_layer(q: np.ndarray, entry: int, ef: int, level: int) -> List[Tuple[float, int]]:
+            """Classic ef-beam over one layer; deterministic heap keys (score, id)."""
+            s0 = float(_build_scores(q, rot[entry: entry + 1], metric)[0])
+            visited = {entry}
+            cand = [(-s0, entry)]                 # max-heap by score
+            res = [(s0, entry)]                   # min-heap of size ef
+            heapq.heapify(cand)
+            heapq.heapify(res)
+            while cand:
+                cs, c = heapq.heappop(cand)
+                if -cs < res[0][0] and len(res) >= ef:
+                    break
+                nbrs = [v for v in neighbors(c, level) if v not in visited]
+                if not nbrs:
+                    continue
+                visited.update(nbrs)
+                nb = np.asarray(nbrs, dtype=np.int64)
+                ss = _build_scores(q, rot[nb], metric)
+                for s, v in zip(ss, nb):
+                    if len(res) < ef or s > res[0][0]:
+                        heapq.heappush(res, (float(s), int(v)))
+                        heapq.heappush(cand, (-float(s), int(v)))
+                        if len(res) > ef:
+                            heapq.heappop(res)
+            return sorted(res, key=lambda t: (-t[0], t[1]))
+
+        entry_point = 0
+        cur_max = int(levels[0]) if n else 0
+        for i in range(1, n):
+            q = rot[i]
+            li = int(levels[i])
+            ep = entry_point
+            # Greedy descent through layers above li.
+            for l in range(cur_max, li, -1):
+                improved = True
+                cur_s = float(_build_scores(q, rot[ep: ep + 1], metric)[0])
+                while improved:
+                    improved = False
+                    nb = neighbors(ep, l)
+                    if len(nb) == 0:
+                        continue
+                    ss = _build_scores(q, rot[nb.astype(np.int64)], metric)
+                    j = int(np.argmax(ss))
+                    if ss[j] > cur_s:
+                        cur_s, ep, improved = float(ss[j]), int(nb[j]), True
+            # Insert at layers min(li, cur_max) .. 0.
+            for l in range(min(li, cur_max), -1, -1):
+                res = search_layer(q, ep, ef_construction, l)
+                cap = m0 if l == 0 else m
+                sel = np.asarray([v for _, v in res[:m]], dtype=np.int32)
+                set_neighbors(i, l, sel)
+                # Bidirectional connect with deterministic prune-by-score.
+                for v in sel:
+                    ex = neighbors(int(v), l)
+                    if i not in ex:
+                        ex = np.append(ex, i).astype(np.int32)
+                    if len(ex) > cap:
+                        ss = _build_scores(rot[int(v)], rot[ex.astype(np.int64)], metric)
+                        keep = np.lexsort((ex, -ss))[:cap]   # score desc, id asc
+                        ex = ex[keep]
+                    set_neighbors(int(v), l, ex)
+                ep = int(res[0][1])
+            if li > cur_max:
+                cur_max = li
+                entry_point = i
+
+        if ids is None:
+            ids = np.arange(n, dtype=np.uint64)
+        return HnswIndex(
+            enc=enc, ids=np.asarray(ids, dtype=np.uint64),
+            neighbors0=nbr0, neighbors_hi=nbr_hi, node_level=levels.astype(np.int8),
+            entry_point=entry_point, max_level=cur_max, m=m,
+        )
+
+    # ------------------------------------------------------------------
+    # Search (jitted fixed-shape beam, 4-bit scoring).
+    # ------------------------------------------------------------------
+
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int,
+        *,
+        ef: int = 64,
+        allow: Optional[Allowlist] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        queries = jnp.atleast_2d(queries)
+        q_rot = qz.encode_query(queries, self.enc)
+        allow_mask = (
+            jnp.ones((self.enc.n,), bool) if allow is None else jnp.asarray(allow.mask)
+        )
+        vals, rows = _hnsw_search_jit(
+            q_rot,
+            self.enc.packed,
+            self.enc.qnorms,
+            jnp.asarray(self.neighbors0),
+            jnp.asarray(self.neighbors_hi) if self.max_level else None,
+            allow_mask,
+            entry=self.entry_point,
+            ef=ef,
+            k=min(k, ef),
+            metric=self.enc.metric,
+            max_level=self.max_level,
+        )
+        rows = np.asarray(rows)
+        out_ids = self.ids[np.maximum(rows, 0)].copy()
+        out_ids[rows < 0] = np.uint64(0xFFFFFFFFFFFFFFFF)  # sentinel: no result
+        return np.asarray(vals), out_ids
+
+
+# ---------------------------------------------------------------------------
+# Jitted beam search.
+# ---------------------------------------------------------------------------
+
+def _score_rows(q_rot, packed, qnorms, rows, metric):
+    """4-bit score of selected rows against one rotated query (fixed order)."""
+    pr = jnp.take(packed, jnp.maximum(rows, 0), axis=0)        # [r, bytes]
+    codes = qz.unpack_4bit(pr)
+    deq = lloydmax.dequantize(codes, 4)
+    raw = deq @ q_rot
+    return adjust_scores(raw, jnp.take(qnorms, jnp.maximum(rows, 0)), metric)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("entry", "ef", "k", "metric", "max_level")
+)
+def _hnsw_search_jit(
+    q_rot, packed, qnorms, nbr0, nbr_hi, allow_mask, *, entry, ef, k, metric, max_level
+):
+    n = packed.shape[0]
+
+    def one_query(q):
+        # --- Greedy descent over upper layers (ef=1). ---
+        ep = jnp.int32(entry)
+        for level in range(max_level, 0, -1):
+            table = nbr_hi[level - 1]
+
+            def cond(state):
+                _, _, improved = state
+                return improved
+
+            def body(state):
+                cur, cur_s, _ = state
+                nbrs = table[cur]                                  # [M]
+                valid = nbrs >= 0
+                ss = jnp.where(valid, _score_rows(q, packed, qnorms, nbrs, metric), NEG)
+                j = jnp.argmax(ss)
+                better = ss[j] > cur_s
+                return (
+                    jnp.where(better, nbrs[j], cur),
+                    jnp.where(better, ss[j], cur_s),
+                    better,
+                )
+
+            s0 = _score_rows(q, packed, qnorms, ep[None], metric)[0]
+            ep, _, _ = jax.lax.while_loop(cond, body, (ep, s0, jnp.bool_(True)))
+
+        # --- Level-0 beam of width ef. ---
+        # Pre-filter semantics over a graph: the beam routes over ALL nodes
+        # (restricting traversal would disconnect the graph for selective
+        # allowlists), but only allowed nodes enter the RESULT set — i.e. the
+        # allowlist is applied before ranking, never as a post-filter.
+        m0 = nbr0.shape[1]
+        s_entry = _score_rows(q, packed, qnorms, ep[None], metric)[0]
+        scores = jnp.full((ef,), NEG, jnp.float32).at[0].set(s_entry)
+        ids_ = jnp.full((ef,), -1, jnp.int32).at[0].set(ep)
+        expanded = jnp.zeros((ef,), bool)
+        visited = jnp.zeros((n,), bool).at[ep].set(True)
+        r_scores = jnp.where(allow_mask[ep], scores, NEG)[:ef]     # results
+        r_ids = jnp.where(allow_mask[ep], ids_, -1)[:ef]
+
+        def cond(state):
+            scores, ids_, expanded, visited, r_scores, r_ids = state
+            frontier = (~expanded) & (ids_ >= 0)
+            return jnp.any(frontier)
+
+        def body(state):
+            scores, ids_, expanded, visited, r_scores, r_ids = state
+            frontier = (~expanded) & (ids_ >= 0)
+            sel = jnp.argmax(jnp.where(frontier, scores, NEG))
+            expanded = expanded.at[sel].set(True)
+            nbrs = nbr0[ids_[sel]]                                 # [2M]
+            nv = jnp.maximum(nbrs, 0)
+            fresh = (nbrs >= 0) & (~visited[nv])
+            visited = visited.at[nv].max(fresh)
+            ns_all = _score_rows(q, packed, qnorms, nbrs, metric)
+            ns = jnp.where(fresh, ns_all, NEG)
+            # Beam merge: existing beam first, then new candidates (stable).
+            all_s = jnp.concatenate([scores, ns])
+            all_i = jnp.concatenate([ids_, nbrs])
+            all_e = jnp.concatenate([expanded, jnp.zeros((m0,), bool)])
+            top_s, pos = jax.lax.top_k(all_s, ef)
+            # Result merge: allowed fresh candidates only.
+            ns_res = jnp.where(fresh & allow_mask[nv], ns_all, NEG)
+            rs = jnp.concatenate([r_scores, ns_res])
+            ri = jnp.concatenate([r_ids, nbrs])
+            r_top, r_pos = jax.lax.top_k(rs, ef)
+            return top_s, all_i[pos], all_e[pos], visited, r_top, ri[r_pos]
+
+        scores, ids_, expanded, visited, r_scores, r_ids = jax.lax.while_loop(
+            cond, body, (scores, ids_, expanded, visited, r_scores, r_ids)
+        )
+        r_ids = jnp.where(r_scores > NEG, r_ids, -1)
+        top_s, pos = jax.lax.top_k(r_scores, k)
+        return top_s, r_ids[pos]
+
+    return jax.vmap(one_query)(q_rot)

@@ -1,0 +1,60 @@
+"""Hybrid dense+sparse retrieval (paper §3.6): MonaVec dense + BM25, fused by RRF.
+
+Pipeline (paper):
+  1. query embedded (dense) + tokenized (sparse) simultaneously;
+  2. dense top-K and BM25 top-K retrieved independently;
+  3. RRF combination; 4. final top-K.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .allowlist import Allowlist
+from .bm25 import Bm25Index
+from .bruteforce import BruteForceIndex
+from .rrf import rrf_fuse
+
+
+@dataclasses.dataclass
+class HybridIndex:
+    dense: BruteForceIndex
+    sparse: Bm25Index
+
+    @staticmethod
+    def build(
+        vectors: jnp.ndarray,
+        docs: Sequence[str],
+        *,
+        metric: str = "cosine",
+        seed: int = 0x6D6F6E61,
+        std=None,
+    ) -> "HybridIndex":
+        assert vectors.shape[0] == len(docs)
+        return HybridIndex(
+            dense=BruteForceIndex.build(vectors, metric=metric, seed=seed, std=std),
+            sparse=Bm25Index.build(docs),
+        )
+
+    def search(
+        self,
+        query_vec: jnp.ndarray,
+        query_text: str,
+        k: int,
+        *,
+        fetch_k: Optional[int] = None,
+        rrf_k: int = 60,
+        allow: Optional[Allowlist] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        fetch_k = fetch_k or max(2 * k, 20)
+        _, dense_ids = self.dense.search(query_vec, fetch_k, allow=allow)
+        _, sparse_rows = self.sparse.search(query_text, fetch_k)
+        sparse_ids = self.dense.ids[sparse_rows]
+        if allow is not None:
+            keep = allow.mask[sparse_rows]
+            sparse_ids = sparse_ids[keep]
+        return rrf_fuse([dense_ids[0], sparse_ids], k=rrf_k, top_k=k)

@@ -1,0 +1,179 @@
+"""IvfFlat backend (paper §3.4.2): metric-aware k-means + inverted lists.
+
+The single opt-in TRAINED component (paper Table 1): Lloyd's algorithm over the
+corpus.  Metric awareness:
+  * cosine — centroids L2-normalized after every mean update (direction is the
+    representative, magnitude irrelevant);
+  * dot/L2 — raw means.
+
+Clustering runs in ROTATED f32 space: the rotation is orthogonal, so cluster
+geometry is identical to input space, and query/centroid scoring then shares
+the rotated query with the packed scan.  Deterministic: seeded farthest-point
+init, fixed iteration count, stable argmin tie-breaks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import quantize as qz
+from .allowlist import NEG, Allowlist
+from .scoring import topk
+from .standardize import COSINE, L2, prepare
+
+
+def _assign(x: jnp.ndarray, cents: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Nearest centroid per row.  argmin/argmax are stable (lowest index)."""
+    if metric == L2:
+        d2 = (
+            jnp.sum(x * x, axis=1, keepdims=True)
+            - 2.0 * x @ cents.T
+            + jnp.sum(cents * cents, axis=1)[None, :]
+        )
+        return jnp.argmin(d2, axis=1)
+    return jnp.argmax(x @ cents.T, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "metric", "iters"))
+def _kmeans(x: jnp.ndarray, init: jnp.ndarray, *, n_clusters: int, metric: str, iters: int):
+    """Fixed-iteration Lloyd's; empty clusters keep their previous centroid."""
+
+    def step(cents, _):
+        a = _assign(x, cents, metric)
+        one_hot = jax.nn.one_hot(a, n_clusters, dtype=x.dtype)      # [n, k]
+        sums = one_hot.T @ x                                        # [k, d]
+        counts = jnp.sum(one_hot, axis=0)[:, None]                  # [k, 1]
+        means = sums / jnp.maximum(counts, 1.0)
+        new = jnp.where(counts > 0, means, cents)
+        if metric == COSINE:
+            new = new / jnp.maximum(jnp.linalg.norm(new, axis=1, keepdims=True), 1e-12)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, init, None, length=iters)
+    return cents, _assign(x, cents, metric)
+
+
+def _seeded_init(x: np.ndarray, k: int, seed: int, metric: str) -> np.ndarray:
+    """Deterministic farthest-point (k-means++-style, greedy) initialization."""
+    rng = np.random.RandomState(seed & 0x7FFFFFFF)
+    n = x.shape[0]
+    first = int(rng.randint(n))
+    chosen = [first]
+    if metric == L2:
+        d = np.sum((x - x[first]) ** 2, axis=1)
+    else:
+        d = 1.0 - x @ x[first] / (np.linalg.norm(x, axis=1) * np.linalg.norm(x[first]) + 1e-12)
+    for _ in range(k - 1):
+        nxt = int(np.argmax(d))  # deterministic: greedy farthest, stable argmax
+        chosen.append(nxt)
+        if metric == L2:
+            d = np.minimum(d, np.sum((x - x[nxt]) ** 2, axis=1))
+        else:
+            d = np.minimum(
+                d, 1.0 - x @ x[nxt] / (np.linalg.norm(x, axis=1) * np.linalg.norm(x[nxt]) + 1e-12)
+            )
+    return x[np.asarray(chosen)]
+
+
+@dataclasses.dataclass
+class IvfFlatIndex:
+    enc: qz.Encoded
+    ids: np.ndarray                 # [n] external ids
+    centroids: jnp.ndarray          # [nlist, d'] rotated f32
+    order: np.ndarray               # [n] row permutation grouping clusters
+    offsets: np.ndarray             # [nlist+1] CSR offsets into ``order``
+    nlist: int
+
+    @staticmethod
+    def build(
+        vectors: jnp.ndarray,
+        *,
+        ids: Optional[np.ndarray] = None,
+        metric: str = COSINE,
+        seed: int = 0x6D6F6E61,
+        bits: int = 4,
+        std=None,
+        nlist: int = 64,
+        train_iters: int = 25,
+    ) -> "IvfFlatIndex":
+        n = vectors.shape[0]
+        enc = qz.encode(vectors, metric=metric, seed=seed, bits=bits, std=std)
+        # Cluster in rotated f32 space (normalized rotation: unit geometry).
+        prepared = prepare(jnp.asarray(vectors, jnp.float32), metric, std)
+        from .rhdh import rhdh_apply
+
+        rot = rhdh_apply(prepared, seed, normalized=False)
+        init = jnp.asarray(_seeded_init(np.asarray(rot), nlist, seed, metric))
+        cents, assign = _kmeans(rot, init, n_clusters=nlist, metric=metric, iters=train_iters)
+        assign = np.asarray(assign)
+        order = np.argsort(assign, kind="stable").astype(np.int64)
+        counts = np.bincount(assign, minlength=nlist)
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        if ids is None:
+            ids = np.arange(n, dtype=np.uint64)
+        return IvfFlatIndex(
+            enc=enc, ids=np.asarray(ids, dtype=np.uint64), centroids=cents,
+            order=order, offsets=offsets, nlist=nlist,
+        )
+
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int,
+        *,
+        nprobe: int = 8,
+        allow: Optional[Allowlist] = None,
+        use_kernel: bool = True,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Probe the nprobe nearest cells, scan their lists with the packed
+        kernel.  Candidate sets are padded to a fixed size so the scoring is
+        a single fixed-shape jit call per batch."""
+        queries = jnp.atleast_2d(queries)
+        q_rot = qz.encode_query(queries, self.enc)
+        metric = self.enc.metric
+        if metric == L2:
+            cs = (
+                q_rot @ self.centroids.T
+                - 0.5 * jnp.sum(self.centroids * self.centroids, axis=1)[None, :]
+            )
+        else:
+            cs = q_rot @ self.centroids.T
+        _, probe = topk(cs, min(nprobe, self.nlist))          # [b, nprobe]
+        probe = np.asarray(probe)
+
+        counts = self.offsets[1:] - self.offsets[:-1]
+        max_cand = int(np.sort(counts)[::-1][: min(nprobe, self.nlist)].sum())
+        max_cand = max(max_cand, k)
+        b = queries.shape[0]
+        cand = np.full((b, max_cand), -1, dtype=np.int64)
+        for i in range(b):
+            rows = np.concatenate(
+                [self.order[self.offsets[c]: self.offsets[c + 1]] for c in probe[i]]
+            )
+            cand[i, : len(rows)] = rows
+        cand_j = jnp.asarray(np.maximum(cand, 0))
+        valid = jnp.asarray(cand >= 0)
+
+        # Gather candidate rows and score them (per-query candidate matrices).
+        packed_c = jnp.take(self.enc.packed, cand_j, axis=0)   # [b, mc, bytes]
+        qn_c = jnp.take(self.enc.qnorms, cand_j, axis=0)       # [b, mc]
+        deq = qz.decode(
+            dataclasses.replace(self.enc, packed=packed_c.reshape(-1, packed_c.shape[-1]))
+        ).reshape(b, max_cand, -1)
+        raw = jnp.einsum("bd,bmd->bm", q_rot, deq)
+        from .scoring import adjust_scores
+
+        scores = adjust_scores(raw, qn_c, metric)
+        if allow is not None:
+            scores = jnp.where(jnp.asarray(allow.mask)[cand_j], scores, NEG)
+        scores = jnp.where(valid, scores, NEG)
+        vals, pos = topk(scores, min(k, max_cand))
+        rows = np.take_along_axis(cand, np.asarray(pos), axis=1)
+        return np.asarray(vals), self.ids[np.maximum(rows, 0)]

@@ -1,0 +1,186 @@
+"""`.mvec` single-file index format, version 6 (paper §3.8).
+
+Fixed 56-byte header followed by variable-length blocks.  The embedded SEED
+makes load→search reproduce the same top-K on any platform; all payloads are
+little-endian, integer code bytes are bit-identical across machines.
+
+Header layout (offsets in bytes, little-endian):
+    0   MAGIC       4s   b"MVEC"
+    4   VERSION     u32  6 (7 when a mixed-precision permutation block is
+                         persisted — our documented extension, DESIGN.md §2)
+    8   DIM         u32  input dimension d
+    12  METRIC      u8   0=Cosine 1=Dot 2=L2
+    13  BIT_WIDTH   u8   2, 3 (mixed) or 4
+    14  INDEX_TYPE  u8   0=BruteForce 1=IvfFlat 2=HNSW
+    15  PAD         u8
+    16  COUNT       u64
+    24  SEED        u64  rotation seed (ChaCha20 in the paper; threefry here)
+    32  N4_DIMS     u32  4-bit dims in mixed mode
+    36  INDEX_PARAMS 8B  (u32 nlist / M, u32 reserved)
+    44  HAS_STD     u8   1 if global standardization block follows
+    45  PAD         u8
+    46  RESERVED    10B  (pads the header to exactly 56 bytes)
+
+Blocks (in order): STD_MEAN [f32 × dim], STD_INV_STD [f32 × dim] (if HAS_STD;
+scalar globals replicated per the paper's field spec), PERM [i32 × dim_pad]
+(v7 only), VECTORS [u8], IDS [u64], NORMS [f32], INDEX_DATA (backend blob).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import struct
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as qz
+from .standardize import COSINE, DOT, L2, GlobalStd
+
+MAGIC = b"MVEC"
+HEADER_LEN = 56
+_METRIC_CODE = {COSINE: 0, DOT: 1, L2: 2}
+_METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
+INDEX_BRUTEFORCE, INDEX_IVF, INDEX_HNSW = 0, 1, 2
+
+
+def _write_array(buf: io.BytesIO, arr: np.ndarray) -> None:
+    """Length-prefixed raw little-endian block."""
+    raw = np.ascontiguousarray(arr).astype(arr.dtype.newbyteorder("<")).tobytes()
+    buf.write(struct.pack("<Q", len(raw)))
+    buf.write(raw)
+
+
+def _read_array(buf: io.BytesIO, dtype: np.dtype, shape=None) -> np.ndarray:
+    (nbytes,) = struct.unpack("<Q", buf.read(8))
+    arr = np.frombuffer(buf.read(nbytes), dtype=np.dtype(dtype).newbyteorder("<"))
+    return arr.reshape(shape) if shape is not None else arr
+
+
+@dataclasses.dataclass
+class MvecFile:
+    enc: qz.Encoded
+    ids: np.ndarray
+    index_type: int
+    index_param: int = 0          # nlist (IVF) or M (HNSW)
+    index_data: Optional[bytes] = None
+
+
+def save(path: str, f: MvecFile) -> None:
+    enc = f.enc
+    version = 7 if enc.perm is not None else 6
+    has_std = enc.std is not None
+    header = struct.pack(
+        "<4sIIBBBBQQIIIBB10s",
+        MAGIC, version, enc.dim,
+        _METRIC_CODE[enc.metric], enc.bits, f.index_type, 0,
+        enc.n, enc.seed & 0xFFFFFFFFFFFFFFFF,
+        enc.n4_dims, f.index_param, 0,
+        1 if has_std else 0, 0, b"\x00" * 10,
+    )
+    assert len(header) == HEADER_LEN, len(header)
+    buf = io.BytesIO()
+    buf.write(header)
+    if has_std:
+        # Scalar globals replicated across dim (format field is [f32 × dim]).
+        _write_array(buf, np.full(enc.dim, enc.std.mean, dtype=np.float32))
+        _write_array(buf, np.full(enc.dim, enc.std.inv_std, dtype=np.float32))
+    if enc.perm is not None:
+        _write_array(buf, enc.perm.astype(np.int32))
+    _write_array(buf, np.asarray(enc.packed, dtype=np.uint8))
+    _write_array(buf, np.asarray(f.ids, dtype=np.uint64))
+    _write_array(buf, np.asarray(enc.qnorms, dtype=np.float32))
+    blob = f.index_data or b""
+    buf.write(struct.pack("<Q", len(blob)))
+    buf.write(blob)
+    with open(path, "wb") as fh:
+        fh.write(buf.getvalue())
+
+
+def load(path: str) -> MvecFile:
+    with open(path, "rb") as fh:
+        data = fh.read()
+    (
+        magic, version, dim, metric_c, bits, index_type, _pad,
+        count, seed, n4_dims, index_param, _res, has_std, _pad2, _tail,
+    ) = struct.unpack("<4sIIBBBBQQIIIBB10s", data[:HEADER_LEN])
+    if magic != MAGIC:
+        raise ValueError(f"not a .mvec file (magic={magic!r})")
+    if not (1 <= version <= 7):
+        raise ValueError(f"unsupported .mvec version {version}")
+    buf = io.BytesIO(data[HEADER_LEN:])
+    std = None
+    if has_std:
+        mean = _read_array(buf, np.float32)
+        inv = _read_array(buf, np.float32)
+        std = GlobalStd(mean=float(mean[0]), inv_std=float(inv[0]))
+    perm = None
+    if version >= 7:
+        perm = _read_array(buf, np.int32)
+    packed = _read_array(buf, np.uint8)
+    ids = _read_array(buf, np.uint64)
+    qnorms = _read_array(buf, np.float32)
+    (blob_len,) = struct.unpack("<Q", buf.read(8))
+    blob = buf.read(blob_len) if blob_len else None
+
+    from .rhdh import next_pow2
+
+    dim_pad = next_pow2(dim)
+    if bits == 4:
+        bytes_per = dim_pad // 2
+    elif bits == 2:
+        bytes_per = dim_pad // 4
+    else:  # mixed
+        bytes_per = n4_dims // 2 + (dim_pad - n4_dims) // 4
+    packed = packed.reshape(count, bytes_per)
+    enc = qz.Encoded(
+        packed=jnp.asarray(packed), qnorms=jnp.asarray(qnorms), seed=int(seed),
+        metric=_METRIC_NAME[metric_c], bits=int(bits), dim=int(dim),
+        dim_pad=dim_pad, n4_dims=int(n4_dims), std=std, perm=perm,
+    )
+    return MvecFile(
+        enc=enc, ids=ids, index_type=int(index_type),
+        index_param=int(index_param), index_data=blob,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend blobs (INDEX_DATA): length-prefixed numpy arrays.
+# ---------------------------------------------------------------------------
+
+def pack_ivf_blob(centroids: np.ndarray, order: np.ndarray, offsets: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    _write_array(buf, centroids.astype(np.float32))
+    buf.write(struct.pack("<II", *centroids.shape))
+    _write_array(buf, order.astype(np.int64))
+    _write_array(buf, offsets.astype(np.int64))
+    return buf.getvalue()
+
+
+def unpack_ivf_blob(blob: bytes):
+    buf = io.BytesIO(blob)
+    cents = _read_array(buf, np.float32)
+    nlist, d = struct.unpack("<II", buf.read(8))
+    return cents.reshape(nlist, d), _read_array(buf, np.int64), _read_array(buf, np.int64)
+
+
+def pack_hnsw_blob(idx) -> bytes:
+    buf = io.BytesIO()
+    buf.write(struct.pack("<IIIii", idx.neighbors0.shape[0], idx.neighbors0.shape[1],
+                          idx.neighbors_hi.shape[0], idx.entry_point, idx.max_level))
+    _write_array(buf, idx.neighbors0.astype(np.int32))
+    _write_array(buf, idx.neighbors_hi.astype(np.int32))
+    _write_array(buf, idx.node_level.astype(np.int8))
+    return buf.getvalue()
+
+
+def unpack_hnsw_blob(blob: bytes):
+    buf = io.BytesIO(blob)
+    n, m0, nhi, entry, max_level = struct.unpack("<IIIii", buf.read(20))
+    nbr0 = _read_array(buf, np.int32).reshape(n, m0)
+    nbr_hi = _read_array(buf, np.int32)
+    nbr_hi = nbr_hi.reshape(nhi, n, m0 // 2) if nhi else np.zeros((0, n, m0 // 2), np.int32)
+    node_level = _read_array(buf, np.int8)
+    return nbr0, nbr_hi, node_level, entry, max_level

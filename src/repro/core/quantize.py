@@ -1,0 +1,217 @@
+"""Encode pipeline: prepare -> RHDH -> Lloyd-Max -> nibble pack (+ norms).
+
+This is the paper's quantization core (§3.1), end to end.  Everything here is
+data-oblivious for cosine/dot; L2 optionally consumes a GlobalStd from fit().
+
+Packed layouts
+--------------
+4-bit: two codes per byte, code[2i] in the low nibble, code[2i+1] in the high
+nibble (matches the paper's .mvec payload arithmetic: d=1024 -> 512 B/vector).
+2-bit: four codes per byte, little-endian within the byte.
+Mixed: [4-bit block | 2-bit block] per vector (§3.2), with the 4-bit block
+holding either the leading dims (paper-faithful mode) or the top-variance dims
+under a persisted permutation (our format v7 extension — the paper computes the
+permutation but does not persist it; we do, and record the deviation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lloydmax
+from .rhdh import next_pow2, rhdh_apply
+from .standardize import COSINE, DOT, L2, GlobalStd, prepare
+
+
+# ---------------------------------------------------------------------------
+# Nibble / crumb packing.
+# ---------------------------------------------------------------------------
+
+def pack_4bit(codes: jnp.ndarray) -> jnp.ndarray:
+    """[..., d] uint8 codes in [0,16) -> [..., d//2] packed bytes."""
+    d = codes.shape[-1]
+    assert d % 2 == 0, "4-bit packing requires even dim"
+    c = codes.reshape(codes.shape[:-1] + (d // 2, 2)).astype(jnp.uint8)
+    return (c[..., 0] | (c[..., 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_4bit(packed: jnp.ndarray) -> jnp.ndarray:
+    """[..., d//2] packed bytes -> [..., d] uint8 codes."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (packed.shape[-1] * 2,))
+
+
+def pack_2bit(codes: jnp.ndarray) -> jnp.ndarray:
+    """[..., d] uint8 codes in [0,4) -> [..., d//4] packed bytes."""
+    d = codes.shape[-1]
+    assert d % 4 == 0, "2-bit packing requires dim % 4 == 0"
+    c = codes.reshape(codes.shape[:-1] + (d // 4, 4)).astype(jnp.uint8)
+    return (c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4) | (c[..., 3] << 6)).astype(jnp.uint8)
+
+
+def unpack_2bit(packed: jnp.ndarray) -> jnp.ndarray:
+    parts = [(packed >> (2 * i)) & 0x3 for i in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(packed.shape[:-1] + (packed.shape[-1] * 4,))
+
+
+# ---------------------------------------------------------------------------
+# Encoded corpus container.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Encoded:
+    """A quantized corpus (the in-memory form of the .mvec payload)."""
+
+    packed: jnp.ndarray          # [n, bytes_per_vec] uint8
+    qnorms: jnp.ndarray          # [n] f32 — norm of the DEQUANTIZED rotated vector
+    seed: int                    # RHDH seed (lives in the .mvec header)
+    metric: str
+    bits: int                    # 4, 2, or 3 (mixed)
+    dim: int                     # original input dim d
+    dim_pad: int                 # rotated dim d' = next_pow2(d)
+    n4_dims: int = 0             # 4-bit dims in mixed mode (paper header N4_DIMS)
+    std: Optional[GlobalStd] = None
+    perm: Optional[np.ndarray] = None   # mixed-mode variance permutation (v7 ext)
+
+    @property
+    def n(self) -> int:
+        return int(self.packed.shape[0])
+
+    def bytes_per_vector(self) -> int:
+        return int(self.packed.shape[-1])
+
+
+def _quantize_rotated(rot: jnp.ndarray, bits: int, table: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rotated f32 -> (codes, dequantized values)."""
+    codes = lloydmax.quantize(rot, bits, table=table)
+    deq = lloydmax.dequantize(codes, bits, table=table)
+    return codes, deq
+
+
+def encode(
+    x: jnp.ndarray,
+    *,
+    metric: str = COSINE,
+    seed: int = 0x6D6F6E61,  # "mona"
+    bits: int = 4,
+    std: Optional[GlobalStd] = None,
+    table: str = "lloydmax",
+) -> Encoded:
+    """Full pipeline on a [n, d] batch.  Pure function of (x, args) — the same
+    inputs produce the same packed bytes on every platform (determinism)."""
+    assert bits in (2, 4), "use encode_mixed for the 4/2 split"
+    n, d = x.shape
+    prepared = prepare(x.astype(jnp.float32), metric, std)
+    rot = rhdh_apply(prepared, seed, normalized=False)  # quantizer space: ~N(0,1)
+    codes, deq = _quantize_rotated(rot, bits, table)
+    qnorms = jnp.linalg.norm(deq, axis=-1)
+    packed = pack_4bit(codes) if bits == 4 else pack_2bit(codes)
+    return Encoded(
+        packed=packed, qnorms=qnorms, seed=seed, metric=metric, bits=bits,
+        dim=d, dim_pad=rot.shape[-1], std=std,
+    )
+
+
+def decode(enc: Encoded) -> jnp.ndarray:
+    """Dequantize to rotated-space f32 (debug / oracle path)."""
+    if enc.bits == 4:
+        codes = unpack_4bit(enc.packed)
+        return lloydmax.dequantize(codes, 4)
+    if enc.bits == 2:
+        codes = unpack_2bit(enc.packed)
+        return lloydmax.dequantize(codes, 2)
+    return decode_mixed(enc)
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision (paper §3.2): water-filling 4-bit / 2-bit split.
+# ---------------------------------------------------------------------------
+
+def allocate_bits(dim_pad: int, avg_bits: float) -> int:
+    """Number of 4-bit dims n4 such that (4 n4 + 2 (d'-n4)) / d' == avg_bits.
+
+    The paper derives the variance threshold analytically from the desired
+    average width; with a two-level {2,4} codebook this reduces to the closed
+    form below (clamped, and rounded to a multiple of 4 so both blocks pack).
+    """
+    n4 = int(round(dim_pad * (avg_bits - 2.0) / 2.0))
+    n4 = max(0, min(dim_pad, n4))
+    return (n4 // 4) * 4
+
+
+def variance_permutation(sample_rot: jnp.ndarray) -> np.ndarray:
+    """Dims sorted by descending variance over a rotated sample (water-filling).
+
+    Ties broken by index for determinism.
+    """
+    var = np.asarray(jnp.var(sample_rot, axis=0))
+    # np.argsort with kind='stable' on -var: descending variance, index tiebreak.
+    return np.argsort(-var, kind="stable").astype(np.int32)
+
+
+def encode_mixed(
+    x: jnp.ndarray,
+    *,
+    metric: str = COSINE,
+    seed: int = 0x6D6F6E61,
+    avg_bits: float = 3.0,
+    std: Optional[GlobalStd] = None,
+    perm: Optional[np.ndarray] = None,
+) -> Encoded:
+    """Mixed 4/2-bit encoding.  If ``perm`` is None the 4-bit block holds the
+    LEADING dims (the paper's current implementation, §3.2 'Implementation
+    status'); passing a variance permutation enables the v7 persisted-perm mode.
+    """
+    n, d = x.shape
+    prepared = prepare(x.astype(jnp.float32), metric, std)
+    rot = rhdh_apply(prepared, seed, normalized=False)
+    d_pad = rot.shape[-1]
+    n4 = allocate_bits(d_pad, avg_bits)
+
+    if perm is not None:
+        rot = rot[:, jnp.asarray(perm)]
+
+    rot4, rot2 = rot[:, :n4], rot[:, n4:]
+    codes4, deq4 = _quantize_rotated(rot4, 4, "lloydmax")
+    codes2, deq2 = _quantize_rotated(rot2, 2, "lloydmax")
+    qnorms = jnp.sqrt(jnp.sum(deq4 * deq4, axis=-1) + jnp.sum(deq2 * deq2, axis=-1))
+    packed = jnp.concatenate([pack_4bit(codes4), pack_2bit(codes2)], axis=-1)
+    return Encoded(
+        packed=packed, qnorms=qnorms, seed=seed, metric=metric, bits=3,
+        dim=d, dim_pad=d_pad, n4_dims=n4, std=std,
+        perm=None if perm is None else np.asarray(perm),
+    )
+
+
+def decode_mixed(enc: Encoded) -> jnp.ndarray:
+    n4 = enc.n4_dims
+    b4 = n4 // 2
+    codes4 = unpack_4bit(enc.packed[:, :b4])
+    codes2 = unpack_2bit(enc.packed[:, b4:])
+    deq = jnp.concatenate(
+        [lloydmax.dequantize(codes4, 4), lloydmax.dequantize(codes2, 2)], axis=-1
+    )
+    if enc.perm is not None:
+        inv = np.empty_like(enc.perm)
+        inv[enc.perm] = np.arange(len(enc.perm), dtype=enc.perm.dtype)
+        deq = deq[:, jnp.asarray(inv)]
+    return deq
+
+
+def encode_query(
+    q: jnp.ndarray,
+    enc_meta: Encoded,
+) -> jnp.ndarray:
+    """Query-side preparation: SAME prepare+rotate as the corpus, NO quantization
+    (asymmetric scoring keeps the query in f32 — paper §3.3/§5.2)."""
+    prepared = prepare(q.astype(jnp.float32), enc_meta.metric, enc_meta.std)
+    rot = rhdh_apply(prepared, enc_meta.seed, normalized=False)
+    if enc_meta.perm is not None:
+        rot = rot[..., jnp.asarray(enc_meta.perm)]
+    return rot

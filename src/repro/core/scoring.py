@@ -1,0 +1,86 @@
+"""Asymmetric scoring (paper §3.3): f32 query × packed 4-bit corpus.
+
+The reference path here is pure jnp (dequantize-then-matmul); the production
+hot path is the Pallas kernel in ``repro.kernels.nibble_dot`` which fuses the
+nibble unpack, compare-select dequant, and the MXU matmul.  Both share the
+metric adjustment below and are validated against each other in tests.
+
+Metric adjustments (q_norm = ||dequantized rotated vector||):
+    cosine: s / q_norm        (length renormalization, RaBitQ-inspired)
+    dot:    s
+    l2:     s - q_norm^2 / 2  (from -||q-v||^2 = 2<q,v> - ||q||^2 - ||v||^2,
+                               dropping the query-constant; HIGHER = closer)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import lloydmax, quantize as qz
+from .standardize import COSINE, DOT, L2
+
+
+def adjust_scores(raw: jnp.ndarray, qnorms: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Apply the per-metric score correction.  raw: [..., n]; qnorms: [n]."""
+    if metric == COSINE:
+        return raw / jnp.maximum(qnorms, 1e-12)
+    if metric == DOT:
+        return raw
+    if metric == L2:
+        return raw - 0.5 * qnorms * qnorms
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def score_packed_ref(
+    q_rot: jnp.ndarray,
+    enc: qz.Encoded,
+) -> jnp.ndarray:
+    """Reference scoring: [b, d'] rotated f32 queries vs Encoded corpus -> [b, n].
+
+    Dequantize the whole corpus then one matmul.  Used as the oracle for the
+    Pallas kernel and for small corpora; O(n d') f32 intermediate.
+    """
+    deq = qz.decode(enc)                     # [n, d']
+    raw = q_rot @ deq.T                      # [b, n]
+    return adjust_scores(raw, enc.qnorms, enc.metric)
+
+
+def score_f32(
+    q: jnp.ndarray,
+    corpus: jnp.ndarray,
+    metric: str,
+) -> jnp.ndarray:
+    """Exact f32 scoring (the sqlite-vec-style accuracy ceiling / ground truth).
+
+    Returns 'higher is better' scores for every metric.
+    """
+    if metric == COSINE:
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        cn = corpus / jnp.maximum(jnp.linalg.norm(corpus, axis=-1, keepdims=True), 1e-12)
+        return qn @ cn.T
+    if metric == DOT:
+        return q @ corpus.T
+    if metric == L2:
+        # -||q - v||^2, expanded for one matmul.
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        v2 = jnp.sum(corpus * corpus, axis=-1)
+        return 2.0 * (q @ corpus.T) - q2 - v2[None, :]
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def topk(scores: jnp.ndarray, k: int):
+    """Deterministic top-k: jax.lax.top_k is stable (lower index wins ties)."""
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx
+
+
+def build_score_l2(q_rot: jnp.ndarray, v_rot: jnp.ndarray) -> jnp.ndarray:
+    """HNSW L2 *build-time* score  <q,v> - ||v||^2/2  (paper contribution #3).
+
+    Monotone in -||q-v||^2 for fixed q; using plain <q,v> here corrupts the
+    graph topology (0.31 -> 0.62 Recall@10 on fashion-mnist when fixed).
+    """
+    return q_rot @ v_rot.T - 0.5 * jnp.sum(v_rot * v_rot, axis=-1)[None, :]

@@ -1,0 +1,82 @@
+"""Metric-aware input preparation (paper §3.1.1).
+
+- Cosine: unit-normalize.
+- L2: optional *global scalar* standardization (x - mu)/sigma with scalar mu,
+  sigma over ALL entries of a representative sample — a uniform scaling, so it
+  preserves Euclidean ordering exactly (the paper's contribution #2).
+- Dot: raw passthrough (magnitude is signal).
+
+Per-dimension whitening is provided only as the ablation baseline: it changes
+the metric to Mahalanobis and the paper shows it LOSES to global scaling
+(0.53 vs 0.62 Recall@10 on fashion-mnist).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+COSINE = "cosine"
+DOT = "dot"
+L2 = "l2"
+METRICS = (COSINE, DOT, L2)
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalStd:
+    """Scalar (mu, sigma) computed by fit(); persisted in the .mvec v6 block."""
+
+    mean: float
+    inv_std: float
+
+    @staticmethod
+    def fit(sample: jnp.ndarray, eps: float = 1e-12) -> "GlobalStd":
+        """Single pass, summary statistics only (paper Table 1: 'Calibration')."""
+        x = np.asarray(sample, dtype=np.float64)
+        mu = float(x.mean())
+        sigma = float(x.std())
+        return GlobalStd(mean=mu, inv_std=1.0 / max(sigma, eps))
+
+    def transform(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (x - jnp.float32(self.mean)) * jnp.float32(self.inv_std)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerDimWhiten:
+    """Ablation baseline ONLY (Mahalanobis — breaks L2 ordering, paper §3.1.1)."""
+
+    mean: np.ndarray
+    inv_std: np.ndarray
+
+    @staticmethod
+    def fit(sample: jnp.ndarray, eps: float = 1e-6) -> "PerDimWhiten":
+        x = np.asarray(sample, dtype=np.float64)
+        mu = x.mean(axis=0)
+        sigma = np.maximum(x.std(axis=0), eps)
+        return PerDimWhiten(mean=mu.astype(np.float32), inv_std=(1.0 / sigma).astype(np.float32))
+
+    def transform(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (x - jnp.asarray(self.mean)) * jnp.asarray(self.inv_std)
+
+
+def unit_normalize(x: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(n, eps)
+
+
+def prepare(
+    x: jnp.ndarray,
+    metric: str,
+    std: Optional[GlobalStd] = None,
+) -> jnp.ndarray:
+    """Metric-aware input preparation stage (Figure 1 of the paper)."""
+    if metric == COSINE:
+        return unit_normalize(x)
+    if metric == L2:
+        return std.transform(x) if std is not None else x
+    if metric == DOT:
+        return x
+    raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")

@@ -1,0 +1,77 @@
+"""Identity-based multi-tenancy (paper §3.9) as a pure-function contract.
+
+The paper's service layer verifies Bearer tokens against an OAuth2-style
+introspection endpoint; here the HTTP hop is abstracted to an injected
+``verify(token) -> user_id | None`` callable (the five-line adapter the paper
+describes), with the same semantics:
+
+  * verifier configured  -> failures are rejected (None namespace);
+    responses are cached for ``cache_ttl`` seconds; a stale cache entry is
+    served if the verifier raises (graceful degradation).
+  * standalone mode (no verifier) -> the token IS the namespace key.
+  * no token -> the shared ``__public__`` namespace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+from .api import MonaVec
+
+PUBLIC_NAMESPACE = "__public__"
+
+
+@dataclasses.dataclass
+class TenantRegistry:
+    verifier: Optional[Callable[[str], Optional[str]]] = None
+    cache_ttl: float = 30.0
+    _cache: Dict[str, Tuple[float, Optional[str]]] = dataclasses.field(default_factory=dict)
+    _spaces: Dict[str, Dict[str, MonaVec]] = dataclasses.field(default_factory=dict)
+    _clock: Callable[[], float] = time.monotonic
+
+    # -- identity ----------------------------------------------------------
+
+    def resolve_namespace(self, token: Optional[str]) -> Optional[str]:
+        """Token -> namespace key (None = reject / 401)."""
+        if token is None or token == "":
+            return PUBLIC_NAMESPACE
+        if self.verifier is None:
+            return token  # standalone: token-as-namespace
+        now = self._clock()
+        hit = self._cache.get(token)
+        if hit is not None and now - hit[0] < self.cache_ttl:
+            return hit[1]
+        try:
+            user = self.verifier(token)
+        except Exception:
+            if hit is not None:  # stale cache served on verifier outage
+                return hit[1]
+            return None
+        self._cache[token] = (now, user)
+        return user
+
+    # -- collections ----------------------------------------------------------
+
+    def put(self, token: Optional[str], name: str, index: MonaVec) -> str:
+        ns = self.resolve_namespace(token)
+        if ns is None:
+            raise PermissionError("401: token rejected")
+        self._spaces.setdefault(ns, {})[name] = index
+        return ns
+
+    def get(self, token: Optional[str], name: str) -> MonaVec:
+        ns = self.resolve_namespace(token)
+        if ns is None:
+            raise PermissionError("401: token rejected")
+        try:
+            return self._spaces[ns][name]
+        except KeyError:
+            raise KeyError(f"collection {name!r} not found in namespace {ns!r}") from None
+
+    def collections(self, token: Optional[str]):
+        ns = self.resolve_namespace(token)
+        if ns is None:
+            raise PermissionError("401: token rejected")
+        return sorted(self._spaces.get(ns, {}).keys())

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: blocked Walsh-Hadamard transform (RHDH hot path).
+
+TPU adaptation: the classic O(d log d) butterfly FWHT is log2(d) serial
+VPU-shuffle stages — poor MXU utilization.  We instead use the Kronecker
+factorization  H_{ab} = H_a (x) H_b  and compute  Y = H_a X H_b  on an
+(a, b) reshape of each vector: two small dense matmuls that run on the MXU.
+For d'=1024 (a=b=32 -> padded to MXU tiles) this moves ~all FLOPs to the
+systolic array.  The Hadamard factors are passed in as f32 operands
+(constant-folded by XLA; <= 256x256 each).
+
+Grid: one axis over row blocks.  Per block VMEM: x + y = 2 * br * d' * 4B
+(br=256, d'=1024 -> 2 MiB) plus the two factors (<= 512 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.rhdh import _split_pow2, hadamard_matrix
+
+
+def _hadamard_kernel(x_ref, ha_ref, hb_ref, o_ref):
+    x = x_ref[...]                                    # [br, a, b]
+    ha = ha_ref[...]                                  # [a, a]
+    hb = hb_ref[...]                                  # [b, b]
+    br, a, b = x.shape
+    # Right-multiply by H_b: collapse (br, a) and hit the MXU once.
+    t = jnp.dot(x.reshape(br * a, b), hb, preferred_element_type=jnp.float32)
+    t = t.reshape(br, a, b)
+    # Left-multiply by H_a on the middle axis.
+    y = jax.lax.dot_general(
+        t, ha,
+        dimension_numbers=(((1,), (0,)), ((), ())),   # [br, b, a] after contract
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = y.transpose(0, 2, 1)                 # back to [br, a, b]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fwht_pallas(
+    x: jnp.ndarray,          # [n, d'] f32, d' a power of two
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Unnormalized FWHT over the last axis via the Kronecker-factored kernel."""
+    n, d = x.shape
+    assert d & (d - 1) == 0, f"d'={d} must be a power of two"
+    a, b = _split_pow2(d)
+    ha = jnp.asarray(hadamard_matrix(a))
+    hb = jnp.asarray(hadamard_matrix(b))
+
+    pad = (-n) % block_rows
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    np_ = xp.shape[0]
+    xr = xp.reshape(np_, a, b)
+    grid = (np_ // block_rows,)
+
+    y = pl.pallas_call(
+        _hadamard_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, a, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, a, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, a, b), jnp.float32),
+        interpret=interpret,
+    )(xr, ha, hb)
+    y = y.reshape(np_, d)
+    return y[:n] if pad else y

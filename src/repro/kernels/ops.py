@@ -1,0 +1,133 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``score_packed`` is the production scoring entry point: it handles padding to
+block multiples, the deinterleaved-query trick, metric adjustment, and backend
+dispatch (Pallas kernel on TPU / interpret-mode validation on CPU / pure-jnp
+fallback that lowers cleanly under pjit on any backend — the analogue of the
+paper's runtime SIMD dispatch, §3.7).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+from repro.core.scoring import adjust_scores
+from . import nibble_dot, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def deinterleave_query(q_rot: jnp.ndarray, ways: int) -> jnp.ndarray:
+    """[b, d] -> [ways, b, d/ways]: plane p holds dims p, p+ways, p+2*ways, ..."""
+    b, d = q_rot.shape
+    return q_rot.reshape(b, d // ways, ways).transpose(2, 0, 1)
+
+
+def nibble_score_raw(
+    packed: jnp.ndarray,
+    q_rot: jnp.ndarray,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Raw 4-bit scores [b, n]; pads to tile multiples and unpads the result.
+
+    Dispatch (the paper's runtime-SIMD-dispatch analogue, §3.7): the Pallas
+    kernel on TPU; elsewhere the pure-jnp reference (XLA-fused) — interpret
+    mode executes the kernel body per grid cell in python and is for
+    VALIDATION, not throughput.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_kernel:
+        return ref.nibble_dot_ref(packed, q_rot)
+
+    n, dk = packed.shape
+    b = q_rot.shape[0]
+    planes = deinterleave_query(q_rot, 2)             # [2, b, dk]
+
+    bq = min(128, _round_up(b, 8))
+    bn = min(256, _round_up(n, 128))
+    bk = min(256, dk)
+    b_pad, n_pad = _round_up(b, bq), _round_up(n, bn)
+    # k padding is safe: padded query planes are zero, so centroid(0) bytes
+    # contribute exactly 0.  n/b padding is sliced off below.
+    packed_p = jnp.pad(packed, ((0, n_pad - n), (0, 0)))
+    planes_p = jnp.pad(planes, ((0, 0), (0, b_pad - b), (0, 0)))
+    out = nibble_dot.nibble_dot_raw(
+        packed_p, planes_p[0], planes_p[1],
+        block_q=bq, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return out[:b, :n]
+
+
+def crumb_score_raw(
+    packed: jnp.ndarray,
+    q_rot: jnp.ndarray,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Raw 2-bit scores [b, n]."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_kernel:
+        return ref.crumb_dot_ref(packed, q_rot)
+
+    n, dk = packed.shape
+    b = q_rot.shape[0]
+    planes = deinterleave_query(q_rot, 4)             # [4, b, dk]
+    bq = min(128, _round_up(b, 8))
+    bn = min(256, _round_up(n, 128))
+    bk = min(128, dk)
+    b_pad, n_pad = _round_up(b, bq), _round_up(n, bn)
+    packed_p = jnp.pad(packed, ((0, n_pad - n), (0, 0)))
+    planes_p = jnp.pad(planes, ((0, 0), (0, b_pad - b), (0, 0)))
+    out = nibble_dot.crumb_dot_raw(
+        packed_p, planes_p,
+        block_q=bq, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return out[:b, :n]
+
+
+def score_packed(
+    q_rot: jnp.ndarray,
+    enc: qz.Encoded,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Metric-adjusted scores [b, n] for an Encoded corpus (any bit mode)."""
+    if enc.bits == 4:
+        raw = nibble_score_raw(enc.packed, q_rot, use_kernel=use_kernel, interpret=interpret)
+    elif enc.bits == 2:
+        raw = crumb_score_raw(enc.packed, q_rot, use_kernel=use_kernel, interpret=interpret)
+    elif enc.bits == 3:  # mixed [4-bit | 2-bit]
+        b4 = enc.n4_dims // 2
+        raw4 = nibble_score_raw(
+            enc.packed[:, :b4], q_rot[:, : enc.n4_dims],
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        raw2 = crumb_score_raw(
+            enc.packed[:, b4:], q_rot[:, enc.n4_dims:],
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        raw = raw4 + raw2
+    else:  # pragma: no cover
+        raise ValueError(f"unsupported bits={enc.bits}")
+    return adjust_scores(raw, enc.qnorms, enc.metric)

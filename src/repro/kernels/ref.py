@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These mirror the kernels' semantics with no tiling, packing tricks, or fused
+dequant — the simplest possible correct implementation.  All kernel tests
+assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lloydmax
+from repro.core.quantize import unpack_2bit, unpack_4bit
+from repro.core.rhdh import hadamard_matrix
+
+
+def nibble_dot_ref(packed: jnp.ndarray, q_rot: jnp.ndarray) -> jnp.ndarray:
+    """[n, d/2] packed uint8, [b, d] rotated f32 query -> [b, n] raw scores."""
+    codes = unpack_4bit(packed)                       # [n, d]
+    deq = lloydmax.dequantize(codes, 4)               # [n, d] f32
+    return q_rot @ deq.T
+
+
+def crumb_dot_ref(packed: jnp.ndarray, q_rot: jnp.ndarray) -> jnp.ndarray:
+    """[n, d/4] packed uint8 (2-bit codes), [b, d] query -> [b, n]."""
+    codes = unpack_2bit(packed)
+    deq = lloydmax.dequantize(codes, 2)
+    return q_rot @ deq.T
+
+
+def mixed_dot_ref(
+    packed: jnp.ndarray, q_rot: jnp.ndarray, n4_dims: int
+) -> jnp.ndarray:
+    """Mixed [4-bit block | 2-bit block] layout (paper §3.2)."""
+    b4 = n4_dims // 2
+    s4 = nibble_dot_ref(packed[:, :b4], q_rot[:, :n4_dims])
+    s2 = crumb_dot_ref(packed[:, b4:], q_rot[:, n4_dims:])
+    return s4 + s2
+
+
+def hadamard_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Direct H @ x on the last axis (unnormalized), O(d^2) oracle."""
+    d = x.shape[-1]
+    H = jnp.asarray(hadamard_matrix(d))
+    return x @ H.T

@@ -1,0 +1,237 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) — the
+first two lines below pin 512 placeholder host devices BEFORE any jax import.
+Do NOT import this module from tests/benches (they must see 1 device).
+
+Per cell this records: compile success, memory_analysis (bytes per device),
+cost_analysis (HLO FLOPs / bytes), and the collective schedule parsed from
+the optimized HLO (op kind, result bytes, replica-group size, estimated wire
+bytes per device) — the inputs to EXPERIMENTS.md §Roofline.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+import repro.configs as configs                    # noqa: E402
+from repro.dist.steps import build_cell            # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(pred|[suf]\d+|bf16|f16|c64|c128)\[([\d,]*)\]")
+
+
+def _array_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo: str, default_group: int):
+    """Sum collective result bytes + estimate wire bytes/device from HLO."""
+    stats = {}
+    details = []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rest = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rest):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # Result type is everything before the op name.
+        result_part = rest.split(kind)[0]
+        rbytes = _array_bytes(result_part)
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm2 = re.search(r"replica_groups=\[\d+,(\d+)\]", rest)
+            g = int(gm2.group(1)) if gm2 else default_group
+        g = max(g, 1)
+        if kind == "all-gather":
+            wire = rbytes * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * rbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = rbytes * (g - 1)          # result is 1/g of the operand
+        elif kind == "all-to-all":
+            wire = rbytes * (g - 1) / g
+        else:                                 # collective-permute
+            wire = float(rbytes)
+        s = stats.setdefault(kind, {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+        s["count"] += 1
+        s["result_bytes"] += rbytes
+        s["wire_bytes"] += wire
+        details.append({"kind": kind, "bytes": rbytes, "group": g, "wire": wire})
+    details.sort(key=lambda d: -d["wire"])
+    return stats, details[:20]
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, variant: str,
+             out_dir: Path, hlo_dir=None) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    arch = configs.get(arch_id)
+    shape = next(s for s in arch.shapes if s.name == shape_name)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "ok": False,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+    try:
+        cell = build_cell(arch, shape, mesh, variant)
+        rec["step"] = cell.step_name
+        rec["model_flops"] = cell.model_flops
+        jitted = jax.jit(cell.fn, out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        with mesh:
+            lowered = jitted.lower(*cell.args)
+            t_low = time.time()
+            compiled = lowered.compile()
+            t_comp = time.time()
+        rec["lower_s"] = round(t_low - t0, 1)
+        rec["compile_s"] = round(t_comp - t_low, 1)
+
+        mem = compiled.memory_analysis()
+        for field in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            rec[field] = int(getattr(mem, field, 0) or 0)
+
+        # Memory twin: the production (scan) form — XLA:CPU's scheduler keeps
+        # far more live in the unrolled FLOP-accounting form than a real
+        # TPU job (which runs the scan) would; see Cell.fn_mem.
+        if cell.fn_mem is not None:
+            jit_mem = jax.jit(cell.fn_mem, out_shardings=cell.out_shardings_mem,
+                              donate_argnums=cell.donate_mem)
+            with mesh:
+                comp_mem = jit_mem.lower(*cell.args_mem).compile()
+            mm = comp_mem.memory_analysis()
+            rec["temp_size_unrolled"] = rec["temp_size_in_bytes"]
+            rec["temp_size_in_bytes"] = int(mm.temp_size_in_bytes or 0)
+            rec["argument_size_in_bytes"] = int(mm.argument_size_in_bytes or 0)
+            rec["output_size_in_bytes"] = int(mm.output_size_in_bytes or 0)
+            del comp_mem
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["hlo_flops"] = float(cost.get("flops", 0.0))
+        rec["hlo_transcendentals"] = float(cost.get("transcendentals", 0.0))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+
+        hlo = compiled.as_text()
+        rec["hlo_len"] = len(hlo)
+        stats, top = parse_collectives(hlo, default_group=rec["n_devices"])
+        rec["collectives"] = stats
+        rec["top_collectives"] = top
+        rec["collective_wire_bytes"] = sum(s["wire_bytes"] for s in stats.values())
+        if hlo_dir is not None:
+            (hlo_dir / f"{arch_id}__{shape_name}__{mesh_kind}__{variant}.hlo.txt").write_text(hlo)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out = out_dir / f"{arch_id}__{shape_name}__{mesh_kind}__{variant}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')[:120]})"
+    print(f"[dryrun] {arch_id} x {shape_name} x {mesh_kind} x {variant}: "
+          f"{status} in {rec['total_s']}s", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true", help="run every registered cell")
+    ap.add_argument("--include-extra", action="store_true",
+                    help="include the monavec-scan supplementary cells")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    hlo_dir = Path(args.out) / "hlo" if args.save_hlo else None
+    if hlo_dir:
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    # Archs whose full-depth unrolled FLOP-accounting compile is intractable
+    # on this 1-core container: compile the production scan form (the required
+    # artifact + memory) plus two reduced-depth unrolled probes; per-layer
+    # costs extrapolate linearly to full depth (benchmarks.roofline).
+    heavy = {
+        "deepseek-v3-671b": ["scan", "probe5", "probe9"],
+        "gemma2-2b": ["scan", "probe4", "probe8"],   # windows alternate: even probes
+        "llama3.2-3b": ["scan", "probe5", "probe9"],
+    }
+
+    if args.all:
+        todo = []
+        for mk in meshes:               # finish single-pod table first
+            for arch, shape in configs.cells():
+                if arch.family == "retrieval" and not args.include_extra:
+                    continue
+                variants = heavy.get(arch.arch_id, [args.variant]) \
+                    if arch.family == "lm" else [args.variant]
+                for v in variants:
+                    todo.append((arch.arch_id, shape.name, mk, v))
+        print(f"[dryrun] {len(todo)} cells queued", flush=True)
+        n_fail = 0
+        for arch_id, shape_name, mk, v in todo:
+            f = out_dir / f"{arch_id}__{shape_name}__{mk}__{v}.json"
+            if args.skip_existing and f.exists() and json.loads(f.read_text()).get("ok"):
+                print(f"[dryrun] skip existing {f.name}", flush=True)
+                continue
+            rec = run_cell(arch_id, shape_name, mk, v, out_dir, hlo_dir)
+            n_fail += 0 if rec["ok"] else 1
+        print(f"[dryrun] done; {n_fail} failures", flush=True)
+        raise SystemExit(1 if n_fail else 0)
+
+    assert args.arch and args.shape, "--arch/--shape required without --all"
+    recs = [run_cell(args.arch, args.shape, mk, args.variant, out_dir, hlo_dir)
+            for mk in meshes]
+    raise SystemExit(0 if all(r["ok"] for r in recs) else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1x1 mesh over whatever devices exist — smoke tests / CPU examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh ('pod' extends DP across pods)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def has_pod(mesh) -> bool:
+    return "pod" in mesh.axis_names

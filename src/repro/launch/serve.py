@@ -1,0 +1,74 @@
+"""Retrieval serving launcher: the service layer as a batched offline loop.
+
+The paper ships FastAPI/REST; in this offline runtime the same contract is a
+pure function: token -> namespace -> collection -> top-k.  This CLI builds
+(or loads) a .mvec index and serves deterministic batched query traffic.
+
+    PYTHONPATH=src python -m repro.launch.serve --n 50000 [--index hnsw]
+    PYTHONPATH=src python -m repro.launch.serve --load corpus.mvec
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import MonaVec, TenantRegistry
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--dim", type=int, default=1024)
+    ap.add_argument("--index", default="bruteforce",
+                    choices=["bruteforce", "ivf", "hnsw"])
+    ap.add_argument("--load", default=None, help="serve an existing .mvec file")
+    ap.add_argument("--save", default=None)
+    ap.add_argument("--batches", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--token", default=None, help="tenant token (standalone mode)")
+    args = ap.parse_args()
+
+    if args.load:
+        index = MonaVec.load(args.load)
+        corpus = None
+        print(f"[serve] loaded {args.load}: n={index.backend.enc.n} "
+              f"metric={index.backend.enc.metric}")
+    else:
+        corpus = embedding_corpus(0, args.n, args.dim)
+        kw = {"nlist": 128} if args.index == "ivf" else (
+            {"m": 16, "ef_construction": 64} if args.index == "hnsw" else {})
+        t0 = time.time()
+        index = MonaVec.build(corpus, metric="cosine", index=args.index, **kw)
+        print(f"[serve] built {args.index} over {args.n}x{args.dim} "
+              f"in {time.time() - t0:.1f}s")
+        if args.save:
+            index.save(args.save)
+            print(f"[serve] saved {args.save}")
+
+    reg = TenantRegistry()
+    ns = reg.put(args.token, "default", index)
+    print(f"[serve] namespace={ns!r}")
+
+    dim = index.backend.enc.dim
+    total, t0 = 0, time.time()
+    for b in range(args.batches):
+        if corpus is not None:
+            q = queries_from_corpus(corpus, 100 + b, args.batch_size)
+        else:
+            rng = np.random.RandomState(100 + b)
+            q = rng.randn(args.batch_size, dim).astype(np.float32)
+        idx = reg.get(args.token, "default")
+        scores, ids = idx.search(q, k=args.k)
+        total += len(q)
+    dt = time.time() - t0
+    print(f"[serve] {total} queries in {dt:.2f}s -> {total / dt:.0f} QPS "
+          f"(deterministic: rerun reproduces identical ids)")
+
+
+if __name__ == "__main__":
+    main()

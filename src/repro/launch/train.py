@@ -1,0 +1,71 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--steps N]``.
+
+Runs a REDUCED (smoke) config end to end on local devices — the full configs
+are exercised via the dry-run (this container is CPU-only).  The same Cell
+machinery drives real-mesh launches on TPU fleets.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import repro.configs as C
+    from repro.data import synthetic as syn
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.loop import train
+    from repro.train.optimizer import AdamWConfig
+
+    arch = C.get(args.arch)
+    cfg = arch.make_smoke()
+    key = jax.random.key(args.seed)
+
+    if arch.family == "lm":
+        from repro.models import transformer as tf
+        loss_fn = lambda p, b: tf.lm_loss(p, cfg, b["tokens"])
+        init_fn = lambda: tf.init_params(cfg, key)
+        batch_fn = lambda step: syn.lm_batch(args.seed, step, args.batch,
+                                             args.seq_len, cfg.vocab)
+    elif arch.family == "gnn":
+        from repro.models import gnn as g
+        graph = syn.random_graph(args.seed, 500, 2500, cfg.d_feat, cfg.n_classes)
+        loss_fn = lambda p, b: g.nll_loss(
+            g.forward_full(p, cfg, b["x"], b["src"], b["dst"]), b["labels"])
+        init_fn = lambda: g.init_params(cfg, key)
+        batch_fn = lambda step: graph
+    elif arch.family == "recsys":
+        from repro.models import recsys as rs
+        from repro.dist.steps import _RS_INIT, _RS_LOSS
+        init = _RS_INIT[args.arch]
+        loss = _RS_LOSS[args.arch]
+        loss_fn = lambda p, b: loss(p, cfg, b)
+        init_fn = lambda: init(cfg, key)
+        batch_fn = lambda step: syn.recsys_batch(args.seed, step, args.arch,
+                                                 cfg, args.batch)
+    else:
+        raise SystemExit(f"--arch {args.arch}: use examples/retrieval scripts")
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    res = train(loss_fn=loss_fn, init_params_fn=init_fn, batch_fn=batch_fn,
+                n_steps=args.steps, opt_cfg=AdamWConfig(lr=1e-3), ckpt=ckpt)
+    first, last = res.losses[0], float(np.mean(res.losses[-5:]))
+    print(f"[train] {args.arch}: steps {res.start_step}->{res.end_step} "
+          f"loss {first:.4f} -> {last:.4f} stragglers={len(res.straggler_steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .transformer import TransformerConfig, init_params, forward, lm_loss  # noqa: F401
+from .gnn import GINConfig  # noqa: F401
+from .recsys import DIENConfig, DLRMConfig, FMConfig, TwoTowerConfig  # noqa: F401

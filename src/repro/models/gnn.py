@@ -1,0 +1,113 @@
+"""GIN (Graph Isomorphism Network, arXiv:1810.00826) — segment_sum message passing.
+
+JAX has no CSR/CSC sparse; message passing is implemented over an explicit
+edge index (src, dst) with ``jax.ops.segment_sum`` — gather source features,
+scatter-add into destinations.  This IS the system's SpMM layer (taxonomy
+§GNN), not a stub.
+
+Modes:
+  * full-graph node classification (cora-like / ogbn-products-like shapes);
+  * sampled minibatch (GraphSAGE-style fanout sampling; the sampler lives in
+    repro.data.graphs) — aggregation depth equals len(fanout);
+  * batched small graphs with sum-readout graph classification (molecule).
+
+Config (assigned): n_layers=5, d_hidden=64, sum aggregator, learnable eps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense, mlp, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 7
+    readout: str = "node"          # "node" | "graph"
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_params(cfg: GINConfig, key):
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_feat if i == 0 else cfg.d_hidden
+        layers.append({
+            "mlp": mlp_init(keys[i], (d_in, cfg.d_hidden, cfg.d_hidden),
+                            dtype=cfg.jnp_dtype),
+            "eps": jnp.zeros((), cfg.jnp_dtype),       # learnable (GIN-eps)
+        })
+    return {"layers": layers,
+            "head": mlp_init(keys[-1], (cfg.d_hidden, cfg.n_classes),
+                             dtype=cfg.jnp_dtype)}
+
+
+def gin_layer(lp, x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+              n_nodes: int) -> jnp.ndarray:
+    """h'_i = MLP((1+eps) h_i + sum_{j in N(i)} h_j)  via gather + segment_sum."""
+    msgs = jnp.take(x, src, axis=0)                           # [E, D] gather
+    agg = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    h = (1.0 + lp["eps"]) * x + agg
+    return mlp(lp["mlp"], h, act=jax.nn.relu, final_act=jax.nn.relu)
+
+
+def forward_full(params, cfg: GINConfig, x: jnp.ndarray,
+                 edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                 graph_ids: Optional[jnp.ndarray] = None,
+                 n_graphs: int = 1) -> jnp.ndarray:
+    """Full-graph forward.  x [N, F]; edges as index arrays.
+
+    Returns node logits [N, C] (readout="node") or graph logits [G, C].
+    """
+    n = x.shape[0]
+    for lp in params["layers"]:
+        x = gin_layer(lp, x, edge_src, edge_dst, n)
+    if cfg.readout == "graph":
+        assert graph_ids is not None
+        pooled = jax.ops.segment_sum(x, graph_ids, num_segments=n_graphs)
+        return mlp(params["head"], pooled)
+    return mlp(params["head"], x)
+
+
+def forward_sampled(params, cfg: GINConfig, feats: jnp.ndarray,
+                    blocks: Tuple[Tuple[jnp.ndarray, jnp.ndarray, int], ...]) -> jnp.ndarray:
+    """Minibatch forward over fanout-sampled blocks (DGL-style nested frontiers).
+
+    ``feats`` are input features of the OUTERMOST frontier.  Frontiers nest:
+    the first ``n_dst`` rows of each frontier are the next (smaller) frontier,
+    with the seed nodes first.  ``blocks[l] = (src, dst, n_dst)``: block l's
+    edges index into the current frontier (src) and the child frontier (dst).
+    Aggregation depth = len(blocks) (the assigned fanout 15-10 gives 2 hops;
+    DESIGN.md §Arch-applicability notes the reduced depth for sampled mode).
+    """
+    h = jnp.asarray(feats)
+    for l, (src, dst, n_dst) in enumerate(blocks):
+        layer = params["layers"][l]
+        msgs = jnp.take(h, src, axis=0)
+        agg = jax.ops.segment_sum(msgs, dst, num_segments=n_dst)
+        hh = (1.0 + layer["eps"]) * h[:n_dst] + agg
+        h = mlp(layer["mlp"], hh, act=jax.nn.relu, final_act=jax.nn.relu)
+    return mlp(params["head"], h)
+
+
+def nll_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+             mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.mean(ll)

@@ -1,0 +1,158 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are produced through low-rank latents:
+    q:  x -> W_dq [D, r_q] -> norm -> W_uq [r_q, H*(d_nope + d_rope)]
+    kv: x -> W_dkv [D, r_kv + d_rope]; the r_kv latent is normed and expanded
+        by W_uk (keys) / W_uv (values); the d_rope slice is a single shared
+        rope key across heads.
+
+The decode path uses the ABSORBED formulation: W_uk is folded into the query
+(q_nope @ W_uk^T per head) so attention runs directly against the cached
+latent c_kv [B, S, r_kv] — the latent IS the KV cache (r_kv + d_rope = 576
+floats/token vs H*dh*2 = 32768 for naive MHA at deepseek-v3 scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, dense, dense_init, rms_norm, rope_angles, softcap
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def cache_dim(self) -> int:
+        return self.kv_lora_rank + self.qk_rope_dim
+
+
+def mla_init(key, d_model: int, n_heads: int, mla: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    h = n_heads
+    return {
+        "w_dq": dense_init(ks[0], d_model, mla.q_lora_rank, dtype=dtype),
+        "q_ln": jnp.zeros((mla.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], mla.q_lora_rank, h * (mla.qk_nope_dim + mla.qk_rope_dim), dtype=dtype),
+        "w_dkv": dense_init(ks[2], d_model, mla.kv_lora_rank + mla.qk_rope_dim, dtype=dtype),
+        "kv_ln": jnp.zeros((mla.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[3], mla.kv_lora_rank, h * mla.qk_nope_dim, dtype=dtype),
+        "w_uv": dense_init(ks[4], mla.kv_lora_rank, h * mla.v_head_dim, dtype=dtype),
+        "w_o": dense_init(ks[5], h * mla.v_head_dim, d_model, dtype=dtype),
+    }
+
+
+def _project_q(p, x, n_heads: int, mla: MLAConfig, sin, cos):
+    """x [B,S,D] -> (q_nope [B,S,H,dn], q_rope [B,S,H,dr])."""
+    b, s, _ = x.shape
+    q_lat = rms_norm(dense(p["w_dq"], x), p["q_ln"])
+    q = dense(p["w_uq"], q_lat).reshape(b, s, n_heads, mla.qk_nope_dim + mla.qk_rope_dim)
+    q_nope, q_rope = q[..., : mla.qk_nope_dim], q[..., mla.qk_nope_dim:]
+    return q_nope, apply_rope(q_rope, sin, cos)
+
+
+def _project_kv_latent(p, x, mla: MLAConfig, sin, cos):
+    """x [B,S,D] -> latent cache slice [B,S,r_kv + d_rope] (normed + roped)."""
+    lat = dense(p["w_dkv"], x)
+    c_kv = rms_norm(lat[..., : mla.kv_lora_rank], p["kv_ln"])
+    k_rope = lat[..., mla.kv_lora_rank:][:, :, None, :]          # [B,S,1,dr]
+    k_rope = apply_rope(k_rope, sin, cos)[:, :, 0, :]
+    return jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def mla_attention(
+    p,
+    x: jnp.ndarray,               # [B, S, D]
+    positions: jnp.ndarray,       # [S]
+    mask: jnp.ndarray,            # [S, S] bool
+    *,
+    n_heads: int,
+    mla: MLAConfig,
+    rope_theta: float,
+    attn_softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Full-sequence (train/prefill) MLA; absorbed scoring against the latent."""
+    b, s, _ = x.shape
+    sin, cos = rope_angles(positions, mla.qk_rope_dim, rope_theta)
+    q_nope, q_rope = _project_q(p, x, n_heads, mla, sin, cos)
+    cache = _project_kv_latent(p, x, mla, sin, cos)              # [B,S,r+dr]
+    return mla_attend(p, q_nope, q_rope, cache, mask, n_heads=n_heads, mla=mla,
+                      attn_softcap=attn_softcap).astype(x.dtype)
+
+
+def mla_attend(
+    p,
+    q_nope: jnp.ndarray,          # [B, Sq, H, dn]
+    q_rope: jnp.ndarray,          # [B, Sq, H, dr]
+    cache: jnp.ndarray,           # [B, Sk, r_kv + dr] latent
+    mask: jnp.ndarray,            # [Sq, Sk] or [B, Sq, Sk]
+    *,
+    n_heads: int,
+    mla: MLAConfig,
+    attn_softcap: float = 0.0,
+    logits_spec=None,             # sharding for [B, H, Sq, Sk] logits
+    q_chunks: int = 1,
+) -> jnp.ndarray:
+    """Absorbed-matmul attention against the latent cache -> [B, Sq, H*dv].
+
+    q_chunks > 1: python-unrolled query blocks with per-block remat (see
+    gqa_attention); the latent cache is shared across blocks."""
+    sq = q_nope.shape[1]
+    if q_chunks > 1 and sq % q_chunks == 0 and sq > 1:
+        core = jax.checkpoint(
+            lambda qn, qr, mi: _mla_attend_core(
+                p, qn, qr, cache, mi, n_heads=n_heads, mla=mla,
+                attn_softcap=attn_softcap, logits_spec=logits_spec))
+        qc = sq // q_chunks
+        outs = []
+        for i in range(q_chunks):
+            mi = mask[..., i * qc:(i + 1) * qc, :]
+            outs.append(core(q_nope[:, i * qc:(i + 1) * qc],
+                             q_rope[:, i * qc:(i + 1) * qc], mi))
+        return jnp.concatenate(outs, axis=1)
+    return _mla_attend_core(p, q_nope, q_rope, cache, mask, n_heads=n_heads,
+                            mla=mla, attn_softcap=attn_softcap,
+                            logits_spec=logits_spec)
+
+
+def _mla_attend_core(
+    p, q_nope, q_rope, cache, mask, *, n_heads, mla, attn_softcap=0.0,
+    logits_spec=None,
+) -> jnp.ndarray:
+    r = mla.kv_lora_rank
+    c_kv, k_rope = cache[..., :r], cache[..., r:]
+    b, sq, h, dn = q_nope.shape
+
+    # Absorb W_uk into the query: q_lat[b,s,h,r] = q_nope . W_uk_head^T
+    w_uk = p["w_uk"]["w"].reshape(r, h, dn)                       # [r, H, dn]
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk, preferred_element_type=jnp.float32)
+
+    logits = jnp.einsum("bshr,btr->bhst", q_lat, c_kv, preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=jnp.float32)
+    if logits_spec is not None:
+        from .layers import wsc
+        logits = wsc(logits, *logits_spec)                 # [B, H, Sq, Sk]
+    logits *= 1.0 / np.sqrt(mla.qk_nope_dim + mla.qk_rope_dim)
+    if attn_softcap > 0:
+        logits = softcap(logits, attn_softcap)
+    m = mask[None, None] if mask.ndim == 2 else mask[:, None]
+    logits = jnp.where(m, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Attend in latent space, then expand with W_uv (absorbed on the output).
+    lat_out = jnp.einsum("bhst,btr->bshr", probs.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)      # [B,Sq,H,r]
+    w_uv = p["w_uv"]["w"].reshape(r, h, mla.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", lat_out.astype(c_kv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, sq, h * mla.v_head_dim)
+    return dense(p["w_o"], out.astype(c_kv.dtype))

@@ -1,0 +1,341 @@
+"""RecSys architectures: DLRM, DIEN (AUGRU), two-tower retrieval, FM.
+
+The embedding LOOKUP is the hot path.  JAX has no native ``nn.EmbeddingBag``;
+we implement it as ``jnp.take`` + ``jax.ops.segment_sum`` (taxonomy §RecSys —
+this is part of the system, not a gap).  Tables are laid out [V, D] and are
+row- or table-sharded over the 'model' mesh axis in the dry-run.
+
+``retrieval_cand`` (two-tower, 1M candidates) is the paper's own setting at
+production scale: candidate scoring goes through either an exact f32 matmul
+or the MonaVec 4-bit packed scan (``score_candidates_packed``), making the
+quantized kernel a first-class serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense, dense_init, mlp, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (take + segment_sum).
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * (1.0 / np.sqrt(dim))).astype(dtype)
+
+
+def embedding_bag(
+    table: jnp.ndarray,          # [V, D]
+    indices: jnp.ndarray,        # [n_lookups] flat ids
+    bag_ids: jnp.ndarray,        # [n_lookups] which bag each lookup belongs to
+    n_bags: int,
+    *,
+    combiner: str = "sum",
+    weights: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Ragged multi-hot bag reduce: rows = take, reduce = segment_sum/max."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if combiner == "max":
+        return jax.ops.segment_max(rows, bag_ids, num_segments=n_bags)
+    out = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if combiner == "mean":
+        counts = jax.ops.segment_sum(jnp.ones_like(indices, jnp.float32), bag_ids,
+                                     num_segments=n_bags)
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean binary cross-entropy from logits, f32."""
+    lg = logits.astype(jnp.float32).reshape(-1)
+    lb = labels.astype(jnp.float32).reshape(-1)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * lb + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091): bottom MLP + embeddings + dot interaction + top MLP.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_sizes: Tuple[int, ...] = tuple([1 << 20] * 26)   # ~1M rows each
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def dlrm_init(cfg: DLRMConfig, key):
+    k_bot, k_emb, k_top = jax.random.split(key, 3)
+    n_f = cfg.n_sparse + 1
+    d_interact = n_f * (n_f - 1) // 2 + cfg.embed_dim
+    return {
+        "bot": mlp_init(k_bot, (cfg.n_dense,) + cfg.bot_mlp, dtype=cfg.jnp_dtype),
+        "tables": [embedding_init(jax.random.fold_in(k_emb, i), v, cfg.embed_dim,
+                                  cfg.jnp_dtype)
+                   for i, v in enumerate(cfg.vocab_sizes)],
+        "top": mlp_init(k_top, (d_interact,) + cfg.top_mlp, dtype=cfg.jnp_dtype),
+    }
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense_x: jnp.ndarray,
+                 sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """dense_x [B, 13]; sparse_ids [B, 26] (single-hot per field) -> logits [B]."""
+    b = dense_x.shape[0]
+    z = mlp(params["bot"], dense_x, act=jax.nn.relu, final_act=jax.nn.relu)  # [B, D]
+    embs = [jnp.take(t, sparse_ids[:, i], axis=0)
+            for i, t in enumerate(params["tables"])]                          # 26x[B,D]
+    feats = jnp.stack([z] + embs, axis=1)                                     # [B, 27, D]
+    # Dot interaction: pairwise inner products, strictly-lower triangle.
+    gram = jnp.einsum("bnd,bmd->bnm", feats, feats, preferred_element_type=jnp.float32)
+    n_f = cfg.n_sparse + 1
+    iu = jnp.tril_indices(n_f, k=-1)
+    interactions = gram[:, iu[0], iu[1]]                                      # [B, 351]
+    top_in = jnp.concatenate([interactions.astype(z.dtype), z], axis=-1)
+    return mlp(params["top"], top_in, act=jax.nn.relu)[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, batch) -> jnp.ndarray:
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["sparse"])
+    return bce_loss(logits, batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# DIEN (arXiv:1809.03672): GRU interest extraction + AUGRU interest evolution.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: Tuple[int, ...] = (200, 80)
+    item_vocab: int = 1 << 20
+    cat_vocab: int = 1 << 14
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_in(self) -> int:
+        return 2 * self.embed_dim       # item ++ category
+
+
+def _gru_init(key, d_in: int, d_h: int, dtype):
+    k1, k2 = jax.random.split(key)
+    s_in, s_h = 1.0 / np.sqrt(d_in), 1.0 / np.sqrt(d_h)
+    return {
+        "w": (jax.random.normal(k1, (d_in, 3 * d_h)) * s_in).astype(dtype),
+        "u": (jax.random.normal(k2, (d_h, 3 * d_h)) * s_h).astype(dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, *, update_gate_scale=None):
+    """Standard GRU cell; AUGRU scales the update gate by attention weight."""
+    gates = x @ p["w"] + h @ p["u"] + p["b"]
+    dh = h.shape[-1]
+    r = jax.nn.sigmoid(gates[..., :dh])
+    z = jax.nn.sigmoid(gates[..., dh: 2 * dh])
+    if update_gate_scale is not None:
+        z = z * update_gate_scale[..., None]             # AUGRU: a_t * z_t
+    n = jnp.tanh(x @ p["w"][:, 2 * dh:] + r * (h @ p["u"][:, 2 * dh:]) + p["b"][2 * dh:])
+    return (1.0 - z) * h + z * n
+
+
+def dien_init(cfg: DIENConfig, key):
+    ks = jax.random.split(key, 6)
+    dtype = cfg.jnp_dtype
+    return {
+        "item_emb": embedding_init(ks[0], cfg.item_vocab, cfg.embed_dim, dtype),
+        "cat_emb": embedding_init(ks[1], cfg.cat_vocab, cfg.embed_dim, dtype),
+        "gru1": _gru_init(ks[2], cfg.d_in, cfg.gru_dim, dtype),
+        "augru": _gru_init(ks[3], cfg.gru_dim, cfg.gru_dim, dtype),
+        "att": dense_init(ks[4], cfg.gru_dim + cfg.d_in, 1, bias=True, dtype=dtype),
+        "mlp": mlp_init(ks[5], (cfg.gru_dim + 2 * cfg.d_in,) + cfg.mlp + (1,),
+                        dtype=dtype),
+    }
+
+
+def dien_forward(params, cfg: DIENConfig, batch, *, unroll: bool = False) -> jnp.ndarray:
+    """batch: hist_items/hist_cats [B,S], target_item/target_cat [B] -> logits [B].
+
+    unroll=True python-unrolls the two recurrences (dry-run FLOP accounting:
+    XLA counts a while-loop body once regardless of trip count)."""
+    hist = jnp.concatenate([
+        jnp.take(params["item_emb"], batch["hist_items"], axis=0),
+        jnp.take(params["cat_emb"], batch["hist_cats"], axis=0),
+    ], axis=-1)                                              # [B, S, 2E]
+    target = jnp.concatenate([
+        jnp.take(params["item_emb"], batch["target_item"], axis=0),
+        jnp.take(params["cat_emb"], batch["target_cat"], axis=0),
+    ], axis=-1)                                              # [B, 2E]
+    b = hist.shape[0]
+
+    # Interest extraction: GRU over the behaviour sequence (lax.scan over time).
+    def step1(h, x_t):
+        h = _gru_cell(params["gru1"], h, x_t)
+        return h, h
+    h0 = jnp.zeros((b, cfg.gru_dim), hist.dtype)
+    hist_t = hist.transpose(1, 0, 2)
+    if unroll:
+        hh, acc = h0, []
+        for t in range(cfg.seq_len):
+            hh, _ = step1(hh, hist_t[t])
+            acc.append(hh)
+        interests = jnp.stack(acc)
+    else:
+        _, interests = jax.lax.scan(step1, h0, hist_t)           # [S, B, H]
+
+    # Attention vs the target ad (concat-MLP scoring), softmax over time.
+    tgt = jnp.broadcast_to(target[None], (cfg.seq_len, b, cfg.d_in))
+    att_logits = dense(params["att"], jnp.concatenate([interests, tgt], -1))[..., 0]
+    att = jax.nn.softmax(att_logits.astype(jnp.float32), axis=0).astype(hist.dtype)
+
+    # Interest evolution: AUGRU (attention scales the update gate).
+    def step2(h, inp):
+        i_t, a_t = inp
+        h = _gru_cell(params["augru"], h, i_t, update_gate_scale=a_t)
+        return h, None
+    if unroll:
+        h_final = h0
+        for t in range(cfg.seq_len):
+            h_final, _ = step2(h_final, (interests[t], att[t]))
+    else:
+        h_final, _ = jax.lax.scan(step2, h0, (interests, att))
+
+    hist_mean = jnp.mean(hist, axis=1)
+    feats = jnp.concatenate([h_final, target, hist_mean], axis=-1)
+    return mlp(params["mlp"], feats, act=jax.nn.sigmoid)[:, 0]
+
+
+def dien_loss(params, cfg: DIENConfig, batch) -> jnp.ndarray:
+    return bce_loss(dien_forward(params, cfg, batch), batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (RecSys'19): sampled softmax with logQ correction.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    user_vocab: int = 1 << 21
+    item_vocab: int = 1 << 21
+    n_user_feats: int = 8           # multi-hot history bag size
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def two_tower_init(cfg: TwoTowerConfig, key):
+    ks = jax.random.split(key, 4)
+    dtype = cfg.jnp_dtype
+    return {
+        "user_emb": embedding_init(ks[0], cfg.user_vocab, cfg.embed_dim, dtype),
+        "item_emb": embedding_init(ks[1], cfg.item_vocab, cfg.embed_dim, dtype),
+        "user_tower": mlp_init(ks[2], (cfg.embed_dim,) + cfg.tower_mlp, dtype=dtype),
+        "item_tower": mlp_init(ks[3], (cfg.embed_dim,) + cfg.tower_mlp, dtype=dtype),
+    }
+
+
+def user_embedding(params, cfg: TwoTowerConfig, user_hist: jnp.ndarray) -> jnp.ndarray:
+    """user_hist [B, n_feats] item-id bags -> L2-normalized user vectors [B, D]."""
+    b, n = user_hist.shape
+    bag = embedding_bag(params["user_emb"], user_hist.reshape(-1),
+                        jnp.repeat(jnp.arange(b), n), b, combiner="mean")
+    u = mlp(params["user_tower"], bag, act=jax.nn.relu)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-12)
+
+
+def item_embedding(params, cfg: TwoTowerConfig, item_ids: jnp.ndarray) -> jnp.ndarray:
+    rows = jnp.take(params["item_emb"], item_ids, axis=0)
+    v = mlp(params["item_tower"], rows, act=jax.nn.relu)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-12)
+
+
+def two_tower_loss(params, cfg: TwoTowerConfig, batch,
+                   temperature: float = 0.05) -> jnp.ndarray:
+    """In-batch sampled softmax with logQ correction (Yi et al., RecSys'19)."""
+    u = user_embedding(params, cfg, batch["user_hist"])      # [B, D]
+    v = item_embedding(params, cfg, batch["item_id"])        # [B, D]
+    logits = (u @ v.T) / temperature                         # [B, B]
+    logq = jnp.log(jnp.maximum(batch["item_freq"], 1e-9))    # sampling correction
+    logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def score_candidates_f32(user_vec: jnp.ndarray, cand_vecs: jnp.ndarray) -> jnp.ndarray:
+    """Exact retrieval scoring: [B, D] x [N, D] -> [B, N] (baseline path)."""
+    return jnp.einsum("bd,nd->bn", user_vec, cand_vecs,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# FM (Rendle, ICDM'10): O(nk) sum-square pairwise interactions.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_sizes: Tuple[int, ...] = tuple([1 << 18] * 39)
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def fm_init(cfg: FMConfig, key):
+    k_v, k_w = jax.random.split(key)
+    dtype = cfg.jnp_dtype
+    return {
+        "v": [embedding_init(jax.random.fold_in(k_v, i), s, cfg.embed_dim, dtype)
+              for i, s in enumerate(cfg.vocab_sizes)],
+        "w": [embedding_init(jax.random.fold_in(k_w, i), s, 1, dtype)
+              for i, s in enumerate(cfg.vocab_sizes)],
+        "b": jnp.zeros((), dtype),
+    }
+
+
+def fm_forward(params, cfg: FMConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """sparse_ids [B, 39] -> logits [B].  Pairwise term via the sum-square
+    trick: sum_{i<j} <v_i, v_j> = 1/2 [ (sum v_i)^2 - sum v_i^2 ]."""
+    vs = jnp.stack([jnp.take(t, sparse_ids[:, i], axis=0)
+                    for i, t in enumerate(params["v"])], axis=1)   # [B, F, K]
+    lin = sum(jnp.take(t, sparse_ids[:, i], axis=0)[:, 0]
+              for i, t in enumerate(params["w"]))                  # [B]
+    s = jnp.sum(vs, axis=1)                                        # [B, K]
+    pair = 0.5 * jnp.sum(s * s - jnp.sum(vs * vs, axis=1), axis=-1)
+    return params["b"] + lin + pair
+
+
+def fm_loss(params, cfg: FMConfig, batch) -> jnp.ndarray:
+    return bce_loss(fm_forward(params, cfg, batch["sparse"]), batch["label"])

@@ -1,0 +1,554 @@
+"""Decoder-only transformer family covering the assigned LM architectures.
+
+One config dataclass spans: dense GQA (llama3, qwen1.5 with QKV bias), local+
+global alternating attention with logit softcaps (gemma2), MoE FFN stacks
+(olmoe), and MLA attention + shared/routed experts + MTP (deepseek-v3).
+
+Layers are scanned (`jax.lax.scan`) over stacked per-layer params — this keeps
+the traced HLO size O(1) in depth, which matters both for multi-pod dry-run
+compile times and for XLA's ability to overlap collectives with compute in
+the backward pass.  Heterogeneous stacks (DeepSeek's 3 dense + 58 MoE layers)
+are expressed as consecutive homogeneous "blocks", each with its own scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kvcache import KVSpec, init_cache, quant_attention_decode, quantize_kv
+from .layers import (apply_rope, attention_scores_mask, dense, dense_init,
+                     gqa_attention, rms_norm, rope_angles, softcap, swiglu,
+                     swiglu_init, wsc)
+from .mla import MLAConfig, mla_attend, mla_init, _project_kv_latent, _project_q
+from .moe import MoEConfig, moe_ffn, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False                 # qwen1.5
+    attn_softcap: float = 0.0              # gemma2: 50
+    final_softcap: float = 0.0             # gemma2: 30
+    window: int = 0                        # sliding-window size for local layers
+    window_pattern: str = "none"           # "none" | "alternate" (gemma2)
+    post_norms: bool = False               # gemma2 post-attn/post-ffn norms
+    embed_scale: bool = False              # gemma2 multiplies embeds by sqrt(D)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mtp: bool = False                      # deepseek multi-token prediction
+    mtp_weight: float = 0.3
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"             # "full" | "dots" (save matmul
+                                           # outputs: ~no fwd recompute in bwd,
+                                           # costs activation memory)
+    loss_chunk: int = 0                    # >0: chunked CE (never materializes
+                                           # the full [B,S,V] f32 logits)
+    unroll: bool = False                   # python-unroll the layer stack.
+    # Dry-run cells unroll: XLA cost_analysis counts a while-loop body ONCE
+    # regardless of trip count, so scanned stacks under-report FLOPs by ~L x.
+    # Training keeps scan (compact HLO, better collective overlap).
+    dp_axes: Optional[Tuple[str, ...]] = None  # activation batch-sharding axes;
+    # set by the distributed cell builder (layers.wsc at layer boundaries).
+    act_shard: Optional[str] = None        # ALSO shard layer-boundary
+    # activations' model dim (ZeRO-style): scan-carried remat residuals are
+    # [B_local, S, D] per layer — at deepseek scale 61 x 940 MB/chip unless
+    # d_model is sharded too (costs an all-gather per layer use).
+    bf16_matmul: bool = False              # matmul outputs stay bf16 (layers._acc)
+    attn_q_chunks: int = 1                 # query-block chunking (memory)
+    attn_kv_shard: Optional[str] = None    # shard KV heads (GQA) / heads (MLA)
+    attn_seq_shard: Optional[str] = None   # shard a sequence axis of the tile
+    attn_seq_axis: str = "kv"              # which axis: "kv" (keys) | "q"
+    vocab_shard: Optional[str] = None      # shard [.., V] logits (loss/serve)
+
+    def logits_spec(self):
+        """Sharding for attention score tiles (None = unconstrained)."""
+        if not (self.dp_axes or self.attn_kv_shard or self.attn_seq_shard):
+            return None
+        s_sh = self.attn_seq_shard if self.attn_seq_axis == "q" else None
+        t_sh = self.attn_seq_shard if self.attn_seq_axis == "kv" else None
+        if self.mla:   # [B, H, Sq, Sk]
+            return (self.dp_axes, self.attn_kv_shard, s_sh, t_sh)
+        return (self.dp_axes, self.attn_kv_shard, None, s_sh, t_sh)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def block_layout(self) -> List[Tuple[str, int]]:
+        """Consecutive homogeneous (ffn_kind, n_layers) blocks."""
+        if self.moe and self.moe.first_dense_layers:
+            return [("dense", self.moe.first_dense_layers),
+                    ("moe", self.n_layers - self.moe.first_dense_layers)]
+        return [("moe" if self.moe else "dense", self.n_layers)]
+
+    def layer_windows(self) -> np.ndarray:
+        """Per-layer sliding-window sizes (0 = full attention)."""
+        w = np.zeros(self.n_layers, dtype=np.int32)
+        if self.window_pattern == "alternate":
+            w[0::2] = self.window                 # even layers local (gemma2)
+        elif self.window_pattern == "all":
+            w[:] = self.window
+        return w
+
+    def param_count(self) -> int:
+        """Total parameter count (for MODEL_FLOPS = 6*N*D roofline terms)."""
+        leaves = jax.eval_shape(lambda k: init_params(self, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(leaves))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        total = self.param_count()
+        if not self.moe:
+            return total
+        m = self.moe
+        n_moe_layers = self.n_layers - m.first_dense_layers
+        per_expert = 3 * self.d_model * m.d_ff_expert
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: TransformerConfig, dtype):
+    if cfg.mla:
+        p = {"ln": jnp.zeros((cfg.d_model,), dtype),
+             "mla": mla_init(key, cfg.d_model, cfg.n_heads, cfg.mla, dtype=dtype)}
+    else:
+        ks = jax.random.split(key, 4)
+        h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        p = {
+            "ln": jnp.zeros((cfg.d_model,), dtype),
+            "q": dense_init(ks[0], cfg.d_model, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "k": dense_init(ks[1], cfg.d_model, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "v": dense_init(ks[2], cfg.d_model, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "o": dense_init(ks[3], h * dh, cfg.d_model, dtype=dtype),
+        }
+    if cfg.post_norms:
+        p["post_ln"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _layer_init(key, cfg: TransformerConfig, kind: str):
+    dtype = cfg.jnp_dtype
+    k_attn, k_ffn = jax.random.split(key)
+    p = {"attn": _attn_init(k_attn, cfg, dtype),
+         "ffn_ln": jnp.zeros((cfg.d_model,), dtype)}
+    if kind == "moe":
+        p["ffn"] = moe_init(k_ffn, cfg.d_model, cfg.moe, dtype=dtype)
+    else:
+        p["ffn"] = swiglu_init(k_ffn, cfg.d_model, cfg.d_ff, dtype=dtype)
+    if cfg.post_norms:
+        p["post_ffn_ln"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key):
+    dtype = cfg.jnp_dtype
+    k_embed, k_blocks, k_head, k_mtp = jax.random.split(key, 4)
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model))
+                  * (1.0 / np.sqrt(cfg.d_model))).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": [],
+    }
+    for bi, (kind, n) in enumerate(cfg.block_layout()):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, bi), n)
+        params["blocks"].append(jax.vmap(lambda k: _layer_init(k, cfg, kind))(keys))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dtype=dtype)
+    if cfg.mtp:
+        km1, km2 = jax.random.split(k_mtp)
+        params["mtp"] = {
+            "proj": dense_init(km1, 2 * cfg.d_model, cfg.d_model, dtype=dtype),
+            "layer": _layer_init(km2, cfg, "dense"),
+            "ln": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (shared by train/prefill/decode).
+# ---------------------------------------------------------------------------
+
+def _attn_full(lp, x, positions, window, cfg: TransformerConfig):
+    """Full-sequence self-attention sublayer (train / prefill).
+
+    Returns (out, kv_for_cache) where kv is (k, v) [B,S,KV,dh] for GQA or the
+    latent [B,S,r+dr] for MLA (prefill cache write-out).
+    """
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    mask = attention_scores_mask(positions, positions, window)
+    if cfg.mla:
+        b, s, _ = h.shape
+        sin, cos = rope_angles(positions, cfg.mla.qk_rope_dim, cfg.rope_theta)
+        q_nope, q_rope = _project_q(lp["mla"], h, cfg.n_heads, cfg.mla, sin, cos)
+        latent = _project_kv_latent(lp["mla"], h, cfg.mla, sin, cos)
+        out = mla_attend(lp["mla"], q_nope, q_rope, latent, mask,
+                         n_heads=cfg.n_heads, mla=cfg.mla,
+                         attn_softcap=cfg.attn_softcap,
+                         logits_spec=cfg.logits_spec(),
+                         q_chunks=cfg.attn_q_chunks).astype(x.dtype)
+        kv = latent
+    else:
+        b, s, _ = h.shape
+        hh, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        sin, cos = rope_angles(positions, dh, cfg.rope_theta)
+        q = dense(lp["q"], h).reshape(b, s, hh, dh)
+        k = dense(lp["k"], h).reshape(b, s, kvh, dh)
+        v = dense(lp["v"], h).reshape(b, s, kvh, dh)
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+        out = gqa_attention(q, k, v, mask, scale=dh ** -0.5,
+                            attn_softcap=cfg.attn_softcap,
+                            logits_spec=cfg.logits_spec(),
+                            q_chunks=cfg.attn_q_chunks)
+        out = dense(lp["o"], out.reshape(b, s, hh * dh))
+        kv = (k, v)
+    if cfg.post_norms:
+        out = rms_norm(out, lp["post_ln"], cfg.norm_eps)
+    return out, kv
+
+
+def _ffn_sublayer(lp, x, kind: str, cfg: TransformerConfig):
+    h = rms_norm(x, lp["ffn_ln"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_ffn(lp["ffn"], h, cfg.moe)
+    else:
+        y, aux = swiglu(lp["ffn"], h), jnp.float32(0.0)
+    if cfg.post_norms:
+        y = rms_norm(y, lp["post_ffn_ln"], cfg.norm_eps)
+    return y, aux
+
+
+def _layer_full(lp, x, positions, window, kind: str, cfg: TransformerConfig):
+    a, kv = _attn_full(lp["attn"], x, positions, window, cfg)
+    x = x + a
+    if cfg.dp_axes:
+        x = wsc(x, cfg.dp_axes, None, None)
+    f, aux = _ffn_sublayer(lp, x, kind, cfg)
+    x = x + f
+    if cfg.dp_axes:
+        x = wsc(x, cfg.dp_axes, None, cfg.act_shard)
+    return x, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward.
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: TransformerConfig, tokens: jnp.ndarray,
+            *, collect_cache: bool = False, skip_head: bool = False):
+    """tokens [B, S] -> (logits [B,S,V] f32 | None, h_final, aux, cache|None)."""
+    from .layers import pop_matmul_out, push_matmul_out
+    _prev = push_matmul_out(cfg.jnp_dtype if cfg.bf16_matmul else None)
+    try:
+        return _forward_inner(params, cfg, tokens, collect_cache=collect_cache,
+                              skip_head=skip_head)
+    finally:
+        pop_matmul_out(_prev)
+
+
+def _forward_inner(params, cfg: TransformerConfig, tokens: jnp.ndarray,
+                   *, collect_cache: bool = False, skip_head: bool = False):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.dp_axes:
+        x = wsc(x, cfg.dp_axes, None, None)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    aux_total = jnp.float32(0.0)
+    caches = []
+    offset = 0
+    for (kind, n), bp in zip(cfg.block_layout(), params["blocks"]):
+        w_block = jax.lax.dynamic_slice_in_dim(windows, offset, n)
+        offset += n
+
+        def layer_fn(carry, inp, _kind=kind):
+            lp, w = inp
+            y, aux, kv = _layer_full(lp, carry, positions, w, _kind, cfg)
+            ys = kv if collect_cache else None
+            return y, (aux, ys)
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            f = jax.checkpoint(layer_fn, policy=policy)
+        else:
+            f = layer_fn
+        if cfg.unroll:
+            kv_list = []
+            for i in range(n):
+                lp_i = jax.tree.map(lambda a: a[i], bp)
+                x, (aux_i, kv_i) = f(x, (lp_i, w_block[i]))
+                aux_total = aux_total + aux_i
+                if collect_cache:
+                    kv_list.append(kv_i)
+            if collect_cache:
+                kvs = jax.tree.map(lambda *ls: jnp.stack(ls), *kv_list)
+                caches.append(kvs)
+        else:
+            x, (auxs, kvs) = jax.lax.scan(f, x, (bp, w_block))
+            aux_total = aux_total + jnp.sum(auxs)
+            if collect_cache:
+                caches.append(kvs)
+
+    h_final = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = None if skip_head else _lm_head(params, cfg, h_final)
+    return logits, h_final, aux_total, (caches if collect_cache else None)
+
+
+def _lm_head(params, cfg: TransformerConfig, h):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["lm_head"], h).astype(jnp.float32)
+    if cfg.vocab_shard or cfg.dp_axes:
+        # Keep logits vocab-sharded: at 128k-256k vocabs an all-gathered
+        # [B, chunk, V] f32 buffer is the single biggest allocation in the
+        # whole train step (measured 93 GiB/device unsharded on qwen).
+        logits = wsc(logits, cfg.dp_axes, None, cfg.vocab_shard)
+    if cfg.final_softcap > 0:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def _xent(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy, f32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _xent_from_hidden(params, cfg: TransformerConfig, h: jnp.ndarray,
+                      targets: jnp.ndarray) -> jnp.ndarray:
+    """CE from final hidden states.  With cfg.loss_chunk > 0 the [B,S,V] f32
+    logits are never materialized: a remat'd scan recomputes each sequence
+    chunk's logits in both fwd and bwd (peak activation B*chunk*V instead of
+    B*S*V — the difference between fitting and OOM at 128k-256k vocabs)."""
+    s = h.shape[1]
+    chunk = cfg.loss_chunk
+    if chunk <= 0 or s <= chunk:
+        return _xent(_lm_head(params, cfg, h), targets)
+
+    n_chunks = s // chunk
+    main = n_chunks * chunk
+    h_c = h[:, :main].reshape(h.shape[0], n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+    t_c = targets[:, :main].reshape(targets.shape[0], n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xt):
+        hc, tc = xt
+        return carry + _xent(_lm_head(params, cfg, hc), tc) * chunk, None
+
+    if cfg.unroll:
+        total = jnp.float32(0.0)
+        for i in range(n_chunks):
+            total, _ = chunk_loss(total, (h_c[i], t_c[i]))
+    else:
+        total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (h_c, t_c))
+    if main < s:  # remainder chunk (e.g. MTP's S-2 tail)
+        total = total + _xent(_lm_head(params, cfg, h[:, main:]),
+                              targets[:, main:]) * (s - main)
+    return total / s
+
+
+def lm_loss(params, cfg: TransformerConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Causal LM loss (+ MoE aux, + MTP head for deepseek)."""
+    use_chunked = cfg.loss_chunk > 0
+    if use_chunked:
+        # Skip the head inside forward(); compute CE chunkwise from hiddens.
+        _, h_final, aux, _ = forward(params, cfg, tokens, skip_head=True)
+        loss = _xent_from_hidden(params, cfg, h_final[:, :-1], tokens[:, 1:]) + aux
+    else:
+        logits, h_final, aux, _ = forward(params, cfg, tokens)
+        loss = _xent(logits[:, :-1], tokens[:, 1:]) + aux
+    if cfg.mtp:
+        # Predict token t+2 from (h_t, embed(token_{t+1})) through one extra
+        # layer sharing embeddings and the LM head (DeepSeek-V3 MTP, depth 1).
+        emb_next = jnp.take(params["embed"], tokens[:, 1:-1], axis=0)
+        h_in = jnp.concatenate([h_final[:, :-2], emb_next], axis=-1)
+        h = dense(params["mtp"]["proj"], h_in)
+        s = h.shape[1]
+        pos = jnp.arange(s, dtype=jnp.int32)
+        h, _, _ = _layer_full(params["mtp"]["layer"], h, pos, 0, "dense", cfg)
+        h = rms_norm(h, params["mtp"]["ln"], cfg.norm_eps)
+        if use_chunked:
+            mtp_xent = _xent_from_hidden(params, cfg, h, tokens[:, 2:])
+        else:
+            mtp_xent = _xent(_lm_head(params, cfg, h), tokens[:, 2:])
+        loss = loss + cfg.mtp_weight * mtp_xent
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a KV cache).
+# ---------------------------------------------------------------------------
+
+def kv_spec(cfg: TransformerConfig, batch: int, max_len: int,
+            quantized: bool = False) -> KVSpec:
+    if cfg.mla:
+        # Latent cache: one "head" of cache_dim per token.
+        return KVSpec(batch=batch, max_len=max_len, n_kv_heads=1,
+                      head_dim=cfg.mla.cache_dim, quantized=quantized,
+                      dtype=cfg.jnp_dtype)
+    return KVSpec(batch=batch, max_len=max_len, n_kv_heads=cfg.n_kv_heads,
+                  head_dim=cfg.head_dim, quantized=quantized,
+                  dtype=cfg.jnp_dtype)
+
+
+def init_decode_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                      *, quantized: bool = False):
+    spec = kv_spec(cfg, batch, max_len, quantized)
+    if cfg.mla:
+        return [
+            {"latent": jnp.zeros((n, batch, max_len, cfg.mla.cache_dim), cfg.jnp_dtype)}
+            for _, n in cfg.block_layout()
+        ]
+    return [init_cache(n, spec) for _, n in cfg.block_layout()]
+
+
+def _attn_decode(lp, x, cache_layer, cur_len, window, cfg: TransformerConfig,
+                 spec: KVSpec):
+    """One-token attention; returns (out, updated cache_layer)."""
+    b = x.shape[0]
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    pos = jnp.full((1,), cur_len, jnp.int32)
+    kpos = jnp.arange(spec.max_len, dtype=jnp.int32)
+    valid = kpos[None, :] <= cur_len                     # [1, S]
+    w = jnp.asarray(window)                              # traced per-layer value
+    in_w = (cur_len - kpos[None, :]) < jnp.where(w > 0, w, jnp.int32(2**30))
+    mask = valid & in_w
+
+    if cfg.mla:
+        sin, cos = rope_angles(pos, cfg.mla.qk_rope_dim, cfg.rope_theta)
+        q_nope, q_rope = _project_q(lp["mla"], h, cfg.n_heads, cfg.mla, sin, cos)
+        new_lat = _project_kv_latent(lp["mla"], h, cfg.mla, sin, cos)  # [B,1,C]
+        lat = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["latent"], new_lat.astype(cache_layer["latent"].dtype), cur_len, axis=1)
+        out = mla_attend(lp["mla"], q_nope, q_rope, lat, mask,
+                         n_heads=cfg.n_heads, mla=cfg.mla,
+                         attn_softcap=cfg.attn_softcap,
+                         logits_spec=cfg.logits_spec()).astype(x.dtype)
+        new_cache = {"latent": lat}
+    else:
+        hh, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        sin, cos = rope_angles(pos, dh, cfg.rope_theta)
+        q = apply_rope(dense(lp["q"], h).reshape(b, 1, hh, dh), sin, cos)
+        k = apply_rope(dense(lp["k"], h).reshape(b, 1, kvh, dh), sin, cos)
+        v = dense(lp["v"], h).reshape(b, 1, kvh, dh)
+        if spec.quantized:
+            kc, ks = quantize_kv(k, spec)
+            vc, vs = quantize_kv(v, spec)
+            new_cache = {
+                "k_codes": jax.lax.dynamic_update_slice_in_dim(cache_layer["k_codes"], kc, cur_len, axis=1),
+                "v_codes": jax.lax.dynamic_update_slice_in_dim(cache_layer["v_codes"], vc, cur_len, axis=1),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(cache_layer["k_scale"], ks, cur_len, axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(cache_layer["v_scale"], vs, cur_len, axis=1),
+            }
+            out = quant_attention_decode(
+                q, new_cache["k_codes"], new_cache["v_codes"],
+                new_cache["k_scale"], new_cache["v_scale"], mask, spec,
+                scale=dh ** -0.5, attn_softcap=cfg.attn_softcap)
+        else:
+            kf = jax.lax.dynamic_update_slice_in_dim(
+                cache_layer["k"], k.astype(cache_layer["k"].dtype), cur_len, axis=1)
+            vf = jax.lax.dynamic_update_slice_in_dim(
+                cache_layer["v"], v.astype(cache_layer["v"].dtype), cur_len, axis=1)
+            out = gqa_attention(q, kf, vf, mask, scale=dh ** -0.5,
+                                attn_softcap=cfg.attn_softcap,
+                                logits_spec=cfg.logits_spec())
+            new_cache = {"k": kf, "v": vf}
+        out = dense(lp["o"], out.reshape(b, 1, hh * dh))
+    if cfg.post_norms:
+        out = rms_norm(out, lp["post_ln"], cfg.norm_eps)
+    return out, new_cache
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens: jnp.ndarray,
+                cur_len: jnp.ndarray, *, quantized: bool = False):
+    """tokens [B, 1] + cache at length cur_len -> (logits [B, V], new cache)."""
+    b = tokens.shape[0]
+    spec = kv_spec(cfg, b, _cache_len(cache), quantized)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    new_cache = []
+    offset = 0
+    for (kind, n), bp, cb in zip(cfg.block_layout(), params["blocks"], cache):
+        w_block = jax.lax.dynamic_slice_in_dim(windows, offset, n)
+        offset += n
+
+        def layer_fn(carry, inp, _kind=kind):
+            lp, layer_cache, w = inp
+            a, nc = _attn_decode(lp["attn"], carry, layer_cache, cur_len, w, cfg, spec)
+            y = carry + a
+            f, _ = _ffn_sublayer(lp, y, _kind, cfg)
+            out = y + f
+            if cfg.dp_axes:
+                out = wsc(out, cfg.dp_axes, None, None)
+            return out, nc
+
+        if cfg.unroll:
+            nc_list = []
+            for i in range(n):
+                lp_i = jax.tree.map(lambda a: a[i], bp)
+                cb_i = jax.tree.map(lambda a: a[i], cb)
+                x, nc_i = layer_fn(x, (lp_i, cb_i, w_block[i]))
+                nc_list.append(nc_i)
+            nc = jax.tree.map(lambda *ls: jnp.stack(ls), *nc_list)
+        else:
+            x, nc = jax.lax.scan(layer_fn, x, (bp, cb, w_block))
+        new_cache.append(nc)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+def _cache_len(cache) -> int:
+    leaf = jax.tree.leaves(cache[0])[0]
+    return leaf.shape[2]           # [L, B, S, ...]
+
+
+def prefill(params, cfg: TransformerConfig, tokens: jnp.ndarray,
+            *, last_only: bool = False):
+    """Full forward that also returns the per-block KV caches (bf16/latent).
+
+    last_only=True returns only the final position's logits [B, V] — the
+    serving-realistic prefill output (avoids the [B,S,V] materialization)."""
+    logits, h_final, _, caches = forward(params, cfg, tokens,
+                                         collect_cache=True, skip_head=last_only)
+    if last_only:
+        logits = _lm_head(params, cfg, h_final[:, -1:])[:, 0]
+    out = []
+    for (kind, n), kv in zip(cfg.block_layout(), caches):
+        if cfg.mla:
+            out.append({"latent": kv})                       # [L,B,S,C]
+        else:
+            k, v = kv
+            out.append({"k": k, "v": v})                     # [L,B,S,KV,dh]
+    return logits, out

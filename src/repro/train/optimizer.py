@@ -1,0 +1,109 @@
+"""AdamW with global-norm clipping, configurable moment dtype, and optional
+int8 error-feedback gradient compression (distributed-optimization trick).
+
+No optax dependency: the update is ~40 lines and owning it lets us (a) keep
+moments in bf16 for the 671B dry-run memory budget, (b) interpose the
+compression stage exactly where a real fleet would compress the cross-pod
+all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # "bfloat16" for the biggest configs
+    compress_grads: bool = False      # int8 + error feedback (see compress())
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros(a.shape, dt), p)
+    state = {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def compress_int8(g: jnp.ndarray, ef: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 quantization of one gradient tensor.
+
+    Returns (dequantized int8 gradient, new error buffer).  On real hardware
+    the int8 payload is what crosses the wire (8x less cross-pod traffic);
+    under XLA SPMD we model the value semantics (quantize -> reduce -> requant
+    error) so convergence behaviour is faithful.
+    """
+    gf = g.astype(jnp.float32) + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, grad_norm)."""
+    step = state["step"] + 1
+
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_int8, grads, state["ef"])
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda pr: pr[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_ef = None
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    triples = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    unzip = lambda i: jax.tree.map(lambda t: t[i], triples,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_params = unzip(0)
+    new_state = {"m": unzip(1), "v": unzip(2), "step": step}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    return new_params, new_state, gnorm
+
+
+def make_train_step(loss_fn, cfg: AdamWConfig):
+    """loss_fn(params, batch) -> scalar.  Returns step(params, state, batch)."""
+
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, gnorm = adamw_update(grads, state, params, cfg)
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step

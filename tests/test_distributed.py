@@ -1,0 +1,190 @@
+"""Distribution + fault-tolerance behaviour on the local (CPU) mesh."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import quantize as qz
+from repro.core.scoring import score_f32, topk
+from repro.data import synthetic as syn
+from repro.dist.retrieval import (make_scan_topk_shardmap, scan_topk_f32,
+                                  scan_topk_pjit)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import SimulatedFailure, train
+from repro.train.optimizer import (AdamWConfig, adamw_update, compress_int8,
+                                   global_norm, init_opt_state)
+
+
+def local_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestDistributedRetrieval:
+    def test_shardmap_matches_pjit_scan(self, rng):
+        corpus = syn.embedding_corpus(0, 1024, 128)
+        enc = qz.encode(jnp.asarray(corpus), metric="cosine", seed=3)
+        q = qz.encode_query(jnp.asarray(corpus[:4] + 0.05), enc)
+        mesh = local_mesh()
+        with mesh:
+            v1, i1 = scan_topk_pjit(q, enc.packed, enc.qnorms,
+                                    metric="cosine", k=10)
+            fn = make_scan_topk_shardmap(mesh, metric="cosine", k=10)
+            v2, i2 = fn(q, enc.packed, enc.qnorms)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+    def test_shardmap_f32_matches_direct(self, rng):
+        cand = rng.randn(512, 64).astype(np.float32)
+        user = rng.randn(3, 64).astype(np.float32)
+        mesh = local_mesh()
+        with mesh:
+            v1, i1 = scan_topk_f32(jnp.asarray(user), jnp.asarray(cand), k=5)
+            fn = make_scan_topk_f32_shardmap = None
+        from repro.dist.retrieval import make_scan_topk_f32_shardmap
+        with mesh:
+            fn = make_scan_topk_f32_shardmap(mesh, k=5)
+            v2, i2 = fn(jnp.asarray(user), jnp.asarray(cand))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    def test_quantized_scan_recall_vs_exact(self):
+        corpus = syn.embedding_corpus(1, 2048, 256)
+        queries = syn.queries_from_corpus(corpus, 2, 16)
+        enc = qz.encode(jnp.asarray(corpus), metric="cosine", seed=3)
+        q = qz.encode_query(jnp.asarray(queries), enc)
+        v, i = scan_topk_pjit(q, enc.packed, enc.qnorms, metric="cosine", k=10)
+        _, gt = topk(score_f32(jnp.asarray(queries), jnp.asarray(corpus),
+                               "cosine"), 10)
+        rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                       for a, b in zip(np.asarray(i), np.asarray(gt))])
+        assert rec > 0.85
+
+
+class TestGradientCompression:
+    def test_int8_ef_roundtrip_bounded_error(self, rng):
+        g = jnp.asarray(rng.randn(128, 64).astype(np.float32))
+        ef = jnp.zeros_like(g)
+        deq, new_ef = compress_int8(g, ef)
+        assert float(jnp.max(jnp.abs(deq - g))) <= float(jnp.max(jnp.abs(g))) / 127 + 1e-6
+        # error feedback carries the residual
+        np.testing.assert_allclose(np.asarray(deq + new_ef), np.asarray(g),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_ef_accumulates_over_steps(self, rng):
+        """With error feedback, the SUM of compressed grads tracks the sum of
+        true grads (the property that preserves convergence)."""
+        true = [jnp.asarray(rng.randn(32).astype(np.float32) * 0.01)
+                for _ in range(50)]
+        ef = jnp.zeros(32)
+        sent = []
+        for g in true:
+            d, ef = compress_int8(g, ef)
+            sent.append(d)
+        total_err = np.abs(np.asarray(sum(sent) - sum(true)))
+        assert total_err.max() < 0.01 * 50 / 127 + 1e-4
+
+    def test_training_with_compression_converges(self, rng):
+        w_true = rng.randn(8).astype(np.float32)
+        x = rng.randn(256, 8).astype(np.float32)
+        y = x @ w_true
+        params = {"w": jnp.zeros(8)}
+        cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, compress_grads=True)
+        state = init_opt_state(params, cfg)
+        for _ in range(150):
+            grads = jax.grad(lambda p: jnp.mean((x @ p["w"] - y) ** 2))(params)
+            params, state, _ = adamw_update(grads, state, params, cfg)
+        assert float(jnp.max(jnp.abs(params["w"] - w_true))) < 0.05
+
+
+class TestCheckpointRestart:
+    def _mk(self, tmp, steps, fail_at=None):
+        from repro.models import transformer as tf
+        import repro.configs as C
+        cfg = C.get("qwen1.5-0.5b").make_smoke()
+        ckpt = CheckpointManager(tmp, keep=2)
+        return train(
+            loss_fn=lambda p, b: tf.lm_loss(p, cfg, b["tokens"]),
+            init_params_fn=lambda: tf.init_params(cfg, jax.random.key(0)),
+            batch_fn=lambda s: {"tokens": jnp.asarray(
+                syn.lm_batch(0, s, 2, 16, cfg.vocab)["tokens"])},
+            n_steps=steps, opt_cfg=AdamWConfig(lr=1e-3),
+            ckpt=ckpt, ckpt_every=4, simulate_failure_at=fail_at,
+        )
+
+    def test_crash_restore_bitwise_identical(self):
+        with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+            ref = self._mk(d1, 12)                       # uninterrupted run
+            with pytest.raises(SimulatedFailure):
+                self._mk(d2, 12, fail_at=9)              # crash at step 9
+            resumed = self._mk(d2, 12)                   # restart, same dir
+            assert resumed.start_step == 8               # newest complete ckpt
+            # losses after resume match the uninterrupted run exactly
+            np.testing.assert_allclose(resumed.losses, ref.losses[8:],
+                                       rtol=1e-6)
+            for a, b in zip(jax.tree.leaves(ref.params),
+                            jax.tree.leaves(resumed.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_k_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            self._mk(d, 12)
+            ckpt = CheckpointManager(d, keep=2)
+            assert len(ckpt.all_steps()) <= 2
+
+    def test_restore_onto_different_sharding(self):
+        """Elastic restart: leaves saved unsharded restore onto any mesh."""
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"w": jnp.arange(16.0).reshape(4, 4), "b": jnp.ones(4)}
+            ckpt = CheckpointManager(d)
+            ckpt.save(1, tree)
+            mesh = local_mesh()
+            sh = {"w": NamedSharding(mesh, P("data", None)),
+                  "b": NamedSharding(mesh, P())}
+            restored, manifest = ckpt.restore(tree, shardings=sh)
+            np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                          np.asarray(tree["w"]))
+            assert restored["w"].sharding == sh["w"]
+            assert manifest["step"] == 1
+
+    def test_tmp_dir_never_restored(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt = CheckpointManager(d)
+            ckpt.save(5, {"x": jnp.ones(3)})
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))   # crashed write
+            assert ckpt.latest_step() == 5
+
+
+class TestOptimizer:
+    def test_adamw_matches_reference_impl(self, rng):
+        """Against a hand-rolled numpy AdamW for one step."""
+        p = {"w": jnp.asarray(rng.randn(5).astype(np.float32))}
+        g = {"w": jnp.asarray(rng.randn(5).astype(np.float32) * 0.1)}
+        cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01,
+                          clip_norm=1e9)
+        state = init_opt_state(p, cfg)
+        new_p, state, _ = adamw_update(g, state, p, cfg)
+        m = 0.1 * np.asarray(g["w"])
+        v = 0.05 * np.asarray(g["w"]) ** 2
+        mhat, vhat = m / 0.1, v / 0.05
+        expect = (np.asarray(p["w"]) - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8)
+                                               + 0.01 * np.asarray(p["w"])))
+        np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-5)
+
+    def test_clip_norm(self, rng):
+        p = {"w": jnp.zeros(4)}
+        g = {"w": jnp.asarray(np.full(4, 100.0, np.float32))}
+        cfg = AdamWConfig(clip_norm=1.0)
+        state = init_opt_state(p, cfg)
+        _, _, gnorm = adamw_update(g, state, p, cfg)
+        assert float(gnorm) == pytest.approx(200.0)
+
+    def test_moment_dtype_bf16(self):
+        p = {"w": jnp.ones(4)}
+        cfg = AdamWConfig(moment_dtype="bfloat16")
+        state = init_opt_state(p, cfg)
+        assert state["m"]["w"].dtype == jnp.bfloat16

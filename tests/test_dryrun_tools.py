@@ -1,0 +1,99 @@
+"""Unit tests for the dry-run tooling: HLO collective parser + roofline math.
+
+(The actual 512-device compiles run via `python -m repro.launch.dryrun`; here
+we test the analysis layer on synthetic inputs.)
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+
+def _parse(hlo, default_group=256):
+    # import from the module without triggering its XLA_FLAGS side effect
+    import importlib.util
+    import sys
+    from pathlib import Path
+    spec = importlib.util.find_spec("repro.launch.dryrun")
+    src = Path(spec.origin).read_text()
+    ns = {}
+    # execute only the parser part (skip the env mutation + jax import)
+    marker = 'import argparse'
+    body = src[src.index(marker):src.index("def run_cell")]
+    exec("import re\n" + body, ns)
+    return ns["parse_collectives"](hlo, default_group)
+
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[256,512]{1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+  %cp = f32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-reduce(%a, %b), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_kinds_and_bytes(self):
+        stats, top = _parse(HLO)
+        assert stats["all-reduce"]["count"] == 2
+        # 16*1024*4 = 65536 and tuple 2*8*8*4 = 512
+        assert stats["all-reduce"]["result_bytes"] == 65536 + 512
+        assert stats["all-gather"]["result_bytes"] == 256 * 512 * 2
+        assert stats["reduce-scatter"]["result_bytes"] == 64 * 4
+        assert stats["collective-permute"]["result_bytes"] == 128 * 4
+
+    def test_wire_models(self):
+        stats, _ = _parse(HLO)
+        # all-reduce ring: 2*(g-1)/g * bytes, g=4 -> 1.5x
+        assert stats["all-reduce"]["wire_bytes"] == pytest.approx(
+            2 * 65536 * 3 / 4 + 2 * 512 * 7 / 8)
+        # all-gather: (g-1)/g * result, g=16 from [16,16] grouping
+        assert stats["all-gather"]["wire_bytes"] == pytest.approx(
+            256 * 512 * 2 * 15 / 16)
+        # reduce-scatter: (g-1) * result
+        assert stats["reduce-scatter"]["wire_bytes"] == pytest.approx(64 * 4 * 1)
+
+    def test_group_size_from_replica_groups(self):
+        _, top = _parse(HLO)
+        groups = {t["kind"]: t["group"] for t in top}
+        assert groups["all-gather"] == 16
+        assert groups["reduce-scatter"] == 2
+
+
+class TestRooflineMath:
+    def test_terms_and_bottleneck(self):
+        from benchmarks.roofline import terms
+        rec = {"hlo_flops": 197e12, "hlo_bytes": 0.0,
+               "collective_wire_bytes": 0.0, "model_flops": 197e12 * 256,
+               "n_devices": 256}
+        t = terms(rec)
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["bottleneck"] == "compute"
+        assert t["roofline_fraction"] == pytest.approx(1.0)
+        assert t["useful_ratio"] == pytest.approx(1.0)
+
+    def test_collective_bound(self):
+        from benchmarks.roofline import terms
+        rec = {"hlo_flops": 1e12, "hlo_bytes": 0.0,
+               "collective_wire_bytes": 50e9 * 10, "model_flops": 0.0,
+               "n_devices": 256}
+        t = terms(rec)
+        assert t["bottleneck"] == "collective"
+        assert t["roofline_fraction"] < 0.01
+
+    def test_extrapolation_linear(self):
+        from benchmarks.roofline import _extrapolate
+        scan = {"ok": True, "hlo_flops": 0.0, "hlo_bytes": 0.0,
+                "collective_wire_bytes": 0.0, "variant": "scan"}
+        pa = {"hlo_flops": 10.0, "hlo_bytes": 100.0, "collective_wire_bytes": 5.0}
+        pb = {"hlo_flops": 18.0, "hlo_bytes": 180.0, "collective_wire_bytes": 9.0}
+        rec = _extrapolate(scan, pa, pb, 5, 9, 61)
+        # slope 2/layer from L=5 -> 10 + 2*56 = 122
+        assert rec["hlo_flops"] == pytest.approx(122.0)
+        assert rec["hlo_bytes"] == pytest.approx(100 + 20 * 56)
+        assert rec["collective_wire_bytes"] == pytest.approx(5 + 1 * 56)
+        assert rec["variant"] == "baseline"

@@ -1,0 +1,215 @@
+"""Index backend behaviour: recall, determinism, allowlist, persistence."""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Allowlist, BruteForceIndex, GlobalStd, HnswIndex,
+                        HybridIndex, IvfFlatIndex, MonaVec, recommended_m)
+from repro.core.bm25 import Bm25Index, tokenize
+from repro.core.rrf import rrf_fuse
+from repro.core.scoring import score_f32, topk
+from repro.data.synthetic import embedding_corpus, pixel_corpus, queries_from_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return embedding_corpus(0, 3000, 128)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return queries_from_corpus(corpus, 1, 25)
+
+
+@pytest.fixture(scope="module")
+def gt(corpus, queries):
+    return np.asarray(topk(score_f32(jnp.asarray(queries), jnp.asarray(corpus),
+                                     "cosine"), 10)[1])
+
+
+def recall10(ids, gt):
+    return np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                    for a, b in zip(ids.astype(np.int64), gt)])
+
+
+class TestBruteForce:
+    def test_high_recall_on_clustered(self, corpus, queries, gt):
+        idx = BruteForceIndex.build(jnp.asarray(corpus), metric="cosine")
+        _, ids = idx.search(jnp.asarray(queries), 10)
+        assert recall10(ids, gt) > 0.85   # paper band on semantic embeddings
+
+    def test_reload_reproduces_exactly(self, corpus, queries):
+        """The paper's determinism guarantee: load -> search is identical."""
+        idx = MonaVec.build(corpus, metric="cosine")
+        s1, i1 = idx.search(queries, 10)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "c.mvec")
+            idx.save(p)
+            s2, i2 = MonaVec.load(p).search(queries, 10)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(s1, s2)      # byte-identical scores
+
+    def test_prefilter_allowlist_exact_k(self, corpus, queries):
+        """Pre-filter guarantees exactly k allowed results (paper §3.5)."""
+        idx = BruteForceIndex.build(jnp.asarray(corpus), metric="cosine")
+        allow = Allowlist.from_ids(range(100), idx.ids)
+        _, ids = idx.search(jnp.asarray(queries), 10, allow=allow)
+        assert (ids < 100).all()
+        assert ids.shape == (len(queries), 10)
+        # selective allowlist: recall vs exact filtered search is perfect
+        gt_f = score_f32(jnp.asarray(queries), jnp.asarray(corpus[:100]), "cosine")
+        _, gt_ids = topk(gt_f, 10)
+        enc_gt = np.asarray(gt_ids)
+        got = ids.astype(np.int64)
+        overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                           for a, b in zip(got, enc_gt)])
+        assert overlap > 0.85
+
+    def test_sparse_allowlist_variant(self, corpus):
+        idx = BruteForceIndex.build(jnp.asarray(corpus), metric="cosine")
+        sparse_ids = [5, 999, 2500]
+        allow = Allowlist.from_ids(sparse_ids, idx.ids)
+        assert allow.n_allowed == 3
+        _, ids = idx.search(jnp.asarray(corpus[:2]), 3, allow=allow)
+        assert set(ids.ravel().tolist()) <= set(sparse_ids)
+
+
+class TestIvf:
+    def test_recall_and_determinism(self, corpus, queries, gt):
+        idx = IvfFlatIndex.build(jnp.asarray(corpus), metric="cosine", nlist=32)
+        _, ids = idx.search(jnp.asarray(queries), 10, nprobe=16)
+        r = recall10(ids, gt)
+        assert r > 0.75, r
+        idx2 = IvfFlatIndex.build(jnp.asarray(corpus), metric="cosine", nlist=32)
+        _, ids2 = idx2.search(jnp.asarray(queries), 10, nprobe=16)
+        np.testing.assert_array_equal(ids, ids2)
+
+    def test_nprobe_monotone(self, corpus, queries, gt):
+        idx = IvfFlatIndex.build(jnp.asarray(corpus), metric="cosine", nlist=32)
+        recalls = []
+        for nprobe in (1, 4, 16, 32):
+            _, ids = idx.search(jnp.asarray(queries), 10, nprobe=nprobe)
+            recalls.append(recall10(ids, gt))
+        assert recalls == sorted(recalls)
+        assert recalls[-1] > 0.85       # nprobe = nlist ~= bruteforce
+
+
+class TestHnsw:
+    def test_fp32_build_4bit_search_recall(self, corpus, queries, gt):
+        idx = HnswIndex.build(jnp.asarray(corpus), metric="cosine", m=16,
+                              ef_construction=96)
+        _, ids = idx.search(jnp.asarray(queries), 10, ef=128)
+        assert recall10(ids, gt) > 0.8
+
+    def test_graph_determinism(self, corpus):
+        a = HnswIndex.build(jnp.asarray(corpus[:800]), metric="cosine", m=8,
+                            ef_construction=40)
+        b = HnswIndex.build(jnp.asarray(corpus[:800]), metric="cosine", m=8,
+                            ef_construction=40)
+        np.testing.assert_array_equal(a.neighbors0, b.neighbors0)
+        np.testing.assert_array_equal(a.neighbors_hi, b.neighbors_hi)
+        assert a.entry_point == b.entry_point
+
+    def test_auto_m_policy(self):
+        assert recommended_m(45_000) == 32
+        assert recommended_m(999_999) == 32
+        assert recommended_m(1_000_000) == 64
+        assert recommended_m(1_180_000) == 64
+
+    def test_l2_metric_aware_build(self):
+        """Paper contributions #2/#3 on raw-magnitude L2 data: fit() lifts the
+        quantization ceiling, and the metric-aware HNSW build reaches it."""
+        pix = pixel_corpus(3, 1200, 64)
+        q = queries_from_corpus(pix, 4, 15, noise=2.0)
+        std = GlobalStd.fit(pix)
+        gt_l2 = np.asarray(topk(score_f32(jnp.asarray(q), jnp.asarray(pix), "l2"), 10)[1])
+        bf_fit = BruteForceIndex.build(jnp.asarray(pix), metric="l2", std=std)
+        _, ids_bf = bf_fit.search(jnp.asarray(q), 10)
+        bf_nofit = BruteForceIndex.build(jnp.asarray(pix), metric="l2")
+        _, ids_nf = bf_nofit.search(jnp.asarray(q), 10)
+        ceiling = recall10(ids_bf, gt_l2)
+        # §4.3: fit() substantially beats the raw-distribution baseline.
+        assert ceiling > 1.3 * recall10(ids_nf, gt_l2)
+        idx = HnswIndex.build(jnp.asarray(pix), metric="l2", std=std, m=16,
+                              ef_construction=96)
+        _, ids = idx.search(jnp.asarray(q), 10, ef=128)
+        # The graph reaches the scalar-quantization ceiling (paper Table 3:
+        # HNSW ef=400 == BF recall).
+        assert recall10(ids, gt_l2) >= 0.9 * ceiling
+
+    def test_allowlist_traversal_routes_over_blocked(self, corpus, queries):
+        idx = HnswIndex.build(jnp.asarray(corpus[:1000]), metric="cosine", m=8,
+                              ef_construction=64)
+        allow = Allowlist.from_ids(range(0, 1000, 10), idx.ids)   # 10% selective
+        _, ids = idx.search(jnp.asarray(queries), 5, ef=128, allow=allow)
+        valid = ids != np.uint64(0xFFFFFFFFFFFFFFFF)
+        assert valid.mean() > 0.95
+        assert (ids[valid].astype(np.int64) % 10 == 0).all()
+
+
+class TestHybridAndBm25:
+    def test_bm25_exact_term_match_wins(self):
+        docs = ["alpha beta gamma", "delta epsilon", "alpha alpha zeta",
+                "unrelated words here"] * 10
+        idx = Bm25Index.build(docs)
+        scores, rows = idx.search("alpha", 3)
+        assert all("alpha" in docs[r] for r in rows)
+        assert scores[0] >= scores[1] >= scores[2]
+
+    def test_rrf_fusion_properties(self):
+        a = np.array([1, 2, 3, 4])
+        b = np.array([3, 1, 5, 6])
+        vals, ids = rrf_fuse([a, b], top_k=4)
+        assert ids[0] in (1, 3)                  # appears top in both lists
+        assert len(ids) == 4
+        v2, i2 = rrf_fuse([a, b], top_k=4)
+        np.testing.assert_array_equal(ids, i2)   # deterministic
+
+    def test_hybrid_keyword_sensitivity(self, corpus):
+        docs = [f"doc {i} " + ("special keyword" if i == 42 else "ordinary text")
+                for i in range(len(corpus))]
+        hy = HybridIndex.build(jnp.asarray(corpus), docs, metric="cosine")
+        _, ids = hy.search(jnp.asarray(corpus[7:8]), "special keyword", 10)
+        assert 42 in ids.tolist()
+
+
+class TestMvecFormat:
+    @pytest.mark.parametrize("kind,kw", [
+        ("bruteforce", {}), ("ivf", {"nlist": 8}),
+        ("hnsw", {"m": 8, "ef_construction": 32}),
+    ])
+    def test_roundtrip_all_backends(self, kind, kw, corpus, queries):
+        idx = MonaVec.build(corpus[:600], metric="cosine", index=kind, **kw)
+        s1, i1 = idx.search(queries, 5)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "x.mvec")
+            idx.save(p)
+            idx2 = MonaVec.load(p)
+            s2, i2 = idx2.search(queries, 5)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_allclose(s1, s2)
+
+    def test_header_fields(self, corpus):
+        from repro.core import mvec_format as fmt
+        idx = MonaVec.build(corpus[:100], metric="l2",
+                            std=GlobalStd.fit(corpus[:100]))
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "x.mvec")
+            idx.save(p)
+            raw = open(p, "rb").read()
+            assert raw[:4] == b"MVEC"
+            f = fmt.load(p)
+        assert f.enc.metric == "l2" and f.enc.bits == 4
+        assert f.enc.std is not None
+        assert f.enc.n == 100
+
+    def test_rejects_garbage(self, tmp_path):
+        from repro.core import mvec_format as fmt
+        p = tmp_path / "bad.mvec"
+        p.write_bytes(b"NOPE" + b"\x00" * 100)
+        with pytest.raises(ValueError):
+            fmt.load(str(p))

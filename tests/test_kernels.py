@@ -1,0 +1,102 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret=True (CPU executes the kernel body; on TPU the
+same BlockSpecs compile to Mosaic).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as qz, scoring
+from repro.kernels import hadamard, ops, ref
+
+RTOL = 2e-5
+
+
+def _relerr(a, b):
+    return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+
+
+class TestNibbleDot:
+    @pytest.mark.parametrize("n,d,b", [
+        (128, 128, 1),       # minimum tile
+        (256, 256, 8),
+        (512, 1024, 32),     # block-multiple shapes
+        (300, 512, 3),       # ragged n/b (padding path)
+        (1000, 2048, 5),     # multi-k-block accumulation
+        (45, 256, 130),      # n < block, b > block
+    ])
+    def test_matches_oracle(self, n, d, b, rng):
+        packed = jnp.asarray(rng.randint(0, 256, size=(n, d // 2), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(b, d).astype(np.float32))
+        out = ops.nibble_score_raw(packed, q, use_kernel=True, interpret=True)
+        assert _relerr(out, ref.nibble_dot_ref(packed, q)) < RTOL
+
+    def test_all_code_values_dequantize(self, rng):
+        """Every nibble value 0..15 hits the right centroid (the NEON affine
+        ramp bug of paper §4.6 is exactly this failure)."""
+        codes = np.tile(np.arange(16, dtype=np.uint8), 16)[None].repeat(128, 0)
+        packed = qz.pack_4bit(jnp.asarray(codes))
+        q = jnp.asarray(np.eye(1, 256, dtype=np.float32))   # selects dim 0
+        out = ops.nibble_score_raw(packed, q, use_kernel=True, interpret=True)
+        expected = ref.nibble_dot_ref(packed, q)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                                   rtol=1e-6)
+
+    def test_determinism_fixed_blocks(self, rng):
+        packed = jnp.asarray(rng.randint(0, 256, size=(512, 128), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(16, 256).astype(np.float32))
+        a = np.asarray(ops.nibble_score_raw(packed, q, interpret=True))
+        b = np.asarray(ops.nibble_score_raw(packed, q, interpret=True))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestCrumbDot:
+    @pytest.mark.parametrize("n,d,b", [(128, 256, 2), (256, 512, 16), (77, 1024, 9)])
+    def test_matches_oracle(self, n, d, b, rng):
+        packed = jnp.asarray(rng.randint(0, 256, size=(n, d // 4), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(b, d).astype(np.float32))
+        out = ops.crumb_score_raw(packed, q, use_kernel=True, interpret=True)
+        assert _relerr(out, ref.crumb_dot_ref(packed, q)) < RTOL
+
+
+class TestMixedScore:
+    def test_mixed_matches_oracle(self, rng):
+        corpus = rng.randn(300, 768).astype(np.float32)
+        enc = qz.encode_mixed(jnp.asarray(corpus), avg_bits=3.0, seed=4)
+        q = qz.encode_query(jnp.asarray(rng.randn(6, 768).astype(np.float32)), enc)
+        out = ops.score_packed(q, enc, use_kernel=True, interpret=True)
+        expected = scoring.score_packed_ref(q, enc)
+        assert _relerr(out, expected) < RTOL
+
+
+class TestHadamardKernel:
+    @pytest.mark.parametrize("n,d", [(64, 128), (257, 512), (512, 1024), (33, 4096)])
+    def test_matches_direct(self, n, d, rng):
+        x = jnp.asarray(rng.randn(n, d).astype(np.float32))
+        out = hadamard.fwht_pallas(x, interpret=True)
+        assert _relerr(out, ref.hadamard_ref(x)) < RTOL
+
+    def test_involution(self, rng):
+        """H(Hx)/d == x (Hadamard is its own inverse up to scale)."""
+        x = jnp.asarray(rng.randn(8, 256).astype(np.float32))
+        y = hadamard.fwht_pallas(hadamard.fwht_pallas(x, interpret=True),
+                                 interpret=True) / 256.0
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+class TestEndToEndKernelPath:
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    def test_kernel_vs_ref_scoring(self, metric, rng):
+        corpus = rng.randn(500, 384).astype(np.float32)
+        enc = qz.encode(jnp.asarray(corpus), metric=metric, seed=11)
+        q = qz.encode_query(jnp.asarray(rng.randn(7, 384).astype(np.float32)), enc)
+        out = ops.score_packed(q, enc, use_kernel=True, interpret=True)
+        expected = scoring.score_packed_ref(q, enc)
+        assert _relerr(out, expected) < RTOL
+        # identical top-k
+        _, ik = scoring.topk(out, 10)
+        _, ir = scoring.topk(expected, 10)
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))

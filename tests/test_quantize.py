@@ -1,0 +1,213 @@
+"""Unit + property tests for the MonaVec quantization core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lloydmax, quantize as qz, scoring
+from repro.core.rhdh import (fwht, hadamard_matrix, next_pow2, rhdh_apply,
+                             rhdh_inverse)
+from repro.core.standardize import GlobalStd, PerDimWhiten, prepare
+
+
+class TestLloydMax:
+    def test_frozen_tables_match_generator(self):
+        """The compiled-in constants are the Lloyd-Max fixed point (paper:
+        2000 iters, tol 1e-12; we regenerate at tol 1e-13)."""
+        for bits in (2, 4):
+            c, b = lloydmax.generate_tables(bits)
+            np.testing.assert_allclose(lloydmax.centroids(bits), c, atol=1e-7)
+            np.testing.assert_allclose(lloydmax.boundaries(bits), b, atol=1e-7)
+
+    def test_boundaries_are_midpoints(self):
+        for bits in (2, 4):
+            c = lloydmax.centroids(bits)
+            np.testing.assert_allclose(lloydmax.boundaries(bits),
+                                       (c[:-1] + c[1:]) / 2, atol=1e-6)
+
+    def test_lloydmax_beats_uniform_mse(self):
+        """Optimality on N(0,1): the reason for the +3.6% recall (Table 7)."""
+        g = np.random.RandomState(0).randn(200_000).astype(np.float32)
+        for bits in (2, 4):
+            lm = lloydmax.dequantize(lloydmax.quantize(jnp.asarray(g), bits), bits)
+            un = lloydmax.dequantize(
+                lloydmax.quantize(jnp.asarray(g), bits, table="uniform"),
+                bits, table="uniform")
+            mse_lm = float(jnp.mean((lm - g) ** 2))
+            mse_un = float(jnp.mean((un - g) ** 2))
+            assert mse_lm < mse_un
+            # and matches the closed-form expected distortion
+            assert abs(mse_lm - lloydmax.expected_distortion(bits)) < 5e-3
+
+    @given(st.lists(st.floats(-6, 6), min_size=1, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_quantize_nearest_centroid(self, vals):
+        """Property: chosen centroid is (tie-tolerantly) the nearest one."""
+        x = np.asarray(vals, np.float32)
+        codes = np.asarray(lloydmax.quantize(jnp.asarray(x), 4))
+        c = lloydmax.centroids(4)
+        chosen = np.abs(x - c[codes])
+        best = np.min(np.abs(x[:, None] - c[None, :]), axis=1)
+        # Exactly on a boundary both neighbours are optimal; allow f32 eps.
+        np.testing.assert_allclose(chosen, best, atol=1e-5)
+
+
+class TestRHDH:
+    @pytest.mark.parametrize("d", [8, 64, 256, 1024])
+    def test_fwht_matches_matrix(self, d, rng):
+        x = rng.randn(4, d).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(fwht(jnp.asarray(x))),
+                                   x @ hadamard_matrix(d).T, rtol=2e-4, atol=1e-3)
+
+    def test_orthogonality_preserves_geometry(self, rng):
+        x = rng.randn(64, 300).astype(np.float32)
+        r = np.asarray(rhdh_apply(jnp.asarray(x), seed=7))
+        np.testing.assert_allclose(np.linalg.norm(r, axis=1),
+                                   np.linalg.norm(x, axis=1), rtol=1e-4)
+        np.testing.assert_allclose(r @ r.T, x @ x.T, atol=5e-3 * 300)
+
+    def test_inverse_roundtrip(self, rng):
+        x = rng.randn(10, 200).astype(np.float32)
+        y = rhdh_apply(jnp.asarray(x), seed=3)
+        back = np.asarray(rhdh_inverse(y, seed=3, d_orig=200))
+        np.testing.assert_allclose(back, x, atol=1e-4)
+
+    def test_gaussianization_of_unit_vectors(self, rng):
+        """Unit vectors -> quantizer-space coords ~ N(0,1) (paper §3.1.2)."""
+        x = rng.randn(500, 768).astype(np.float32)
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+        z = np.asarray(rhdh_apply(jnp.asarray(x), seed=1, normalized=False))
+        assert abs(z.mean()) < 0.01
+        assert abs(z.std() - 1.0) < 0.02
+
+    def test_seed_determinism_and_sensitivity(self, rng):
+        x = jnp.asarray(rng.randn(4, 128).astype(np.float32))
+        a = np.asarray(rhdh_apply(x, seed=42))
+        b = np.asarray(rhdh_apply(x, seed=42))
+        c = np.asarray(rhdh_apply(x, seed=43))
+        np.testing.assert_array_equal(a, b)
+        assert np.abs(a - c).max() > 1e-3
+
+    @given(st.integers(1, 3000))
+    @settings(max_examples=30, deadline=None)
+    def test_next_pow2(self, d):
+        p = next_pow2(d)
+        assert p >= d and p & (p - 1) == 0 and (p == 1 or p // 2 < d)
+
+
+class TestPacking:
+    @given(st.integers(2, 128), st.integers(0, 2**32 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_pack4_roundtrip(self, half_d, seed):
+        g = np.random.RandomState(seed % 2**31)
+        codes = g.randint(0, 16, size=(3, half_d * 2)).astype(np.uint8)
+        packed = qz.pack_4bit(jnp.asarray(codes))
+        assert packed.shape[-1] == half_d
+        np.testing.assert_array_equal(np.asarray(qz.unpack_4bit(packed)), codes)
+
+    @given(st.integers(1, 64), st.integers(0, 2**32 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_pack2_roundtrip(self, quarter_d, seed):
+        g = np.random.RandomState(seed % 2**31)
+        codes = g.randint(0, 4, size=(2, quarter_d * 4)).astype(np.uint8)
+        packed = qz.pack_2bit(jnp.asarray(codes))
+        np.testing.assert_array_equal(np.asarray(qz.unpack_2bit(packed)), codes)
+
+    def test_compression_ratio(self, rng):
+        """d=1024 -> 512 B payload/vector: the paper's 8x over float32."""
+        x = jnp.asarray(rng.randn(16, 1024).astype(np.float32))
+        enc = qz.encode(x, metric="cosine")
+        assert enc.bytes_per_vector() == 512
+        encm = qz.encode_mixed(x, metric="cosine", avg_bits=3.0)
+        assert encm.bytes_per_vector() == 384       # 10.67x (Fig 3)
+
+
+class TestStandardize:
+    def test_global_std_preserves_l2_ordering(self, rng):
+        """Paper contribution #2: uniform scaling preserves ranking EXACTLY."""
+        corpus = (rng.rand(500, 64) * 100 + 5).astype(np.float32)
+        q = (rng.rand(8, 64) * 100 + 5).astype(np.float32)
+        std = GlobalStd.fit(corpus)
+        d_raw = -scoring.score_f32(jnp.asarray(q), jnp.asarray(corpus), "l2")
+        d_std = -scoring.score_f32(std.transform(jnp.asarray(q)),
+                                   std.transform(jnp.asarray(corpus)), "l2")
+        # The scale relation ||a-b||_std^2 = ||a-b||^2 * inv_std^2 (exact in
+        # real arithmetic; rtol covers f32 rounding, which is also the only
+        # thing that can perturb the ordering — at near-ties).
+        np.testing.assert_allclose(np.asarray(d_std),
+                                   np.asarray(d_raw) * std.inv_std ** 2, rtol=1e-3)
+        _, t_raw = scoring.topk(-d_raw, 10)
+        _, t_std = scoring.topk(-d_std, 10)
+        np.testing.assert_array_equal(np.asarray(t_raw), np.asarray(t_std))
+
+    def test_perdim_whitening_breaks_ordering(self, rng):
+        """The ablation the paper runs: Mahalanobis != Euclidean ranking."""
+        corpus = rng.rand(300, 32).astype(np.float32) * np.linspace(1, 50, 32)
+        q = rng.rand(4, 32).astype(np.float32) * np.linspace(1, 50, 32)
+        w = PerDimWhiten.fit(corpus)
+        d_raw = np.asarray(-scoring.score_f32(jnp.asarray(q), jnp.asarray(corpus), "l2"))
+        d_w = np.asarray(-scoring.score_f32(w.transform(jnp.asarray(q)),
+                                            w.transform(jnp.asarray(corpus)), "l2"))
+        assert (np.argsort(d_raw, axis=1)[:, 0] != np.argsort(d_w, axis=1)[:, 0]).any()
+
+    def test_prepare_metric_dispatch(self, rng):
+        x = jnp.asarray(rng.randn(8, 33).astype(np.float32) * 10)
+        cos = prepare(x, "cosine")
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(cos), axis=1), 1.0,
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(prepare(x, "dot")), np.asarray(x))
+
+
+class TestEncodeScore:
+    def test_determinism_bitwise(self, rng):
+        """Same inputs -> same packed bytes (the paper's portable determinism)."""
+        x = jnp.asarray(rng.randn(64, 200).astype(np.float32))
+        a = qz.encode(x, metric="cosine", seed=5)
+        b = qz.encode(x, metric="cosine", seed=5)
+        np.testing.assert_array_equal(np.asarray(a.packed), np.asarray(b.packed))
+        np.testing.assert_array_equal(np.asarray(a.qnorms), np.asarray(b.qnorms))
+
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    def test_scores_approximate_exact(self, metric, rng):
+        """Queries near corpus points: 4-bit must recover the true NN.
+        (iid-Gaussian random queries are near-tie order statistics — any
+        quantizer fails there; the paper's corpora are clustered.)"""
+        corpus = rng.randn(400, 256).astype(np.float32)
+        q = corpus[:8] + 0.05 * rng.randn(8, 256).astype(np.float32)
+        std = GlobalStd.fit(corpus) if metric == "l2" else None
+        enc = qz.encode(jnp.asarray(corpus), metric=metric, seed=2, std=std)
+        qr = qz.encode_query(jnp.asarray(q), enc)
+        s = scoring.score_packed_ref(qr, enc)
+        gt = scoring.score_f32(jnp.asarray(q), jnp.asarray(corpus), metric)
+        _, i1 = scoring.topk(s, 1)
+        _, i2 = scoring.topk(gt, 1)
+        agree = (np.asarray(i1)[:, 0] == np.asarray(i2)[:, 0]).mean()
+        assert agree >= 0.85, f"{metric}: top-1 agreement {agree}"
+
+    def test_gaussian_recall_matches_paper_band(self, rng):
+        """Table 7 reproduction: 4-bit Lloyd-Max recall@10 ~0.88 on Gaussian."""
+        corpus = rng.randn(2000, 768).astype(np.float32)
+        q = rng.randn(50, 768).astype(np.float32)
+        enc = qz.encode(jnp.asarray(corpus), metric="cosine", seed=1)
+        qr = qz.encode_query(jnp.asarray(q), enc)
+        _, pred = scoring.topk(scoring.score_packed_ref(qr, enc), 10)
+        _, gt = scoring.topk(scoring.score_f32(jnp.asarray(q), jnp.asarray(corpus), "cosine"), 10)
+        rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                       for a, b in zip(np.asarray(pred), np.asarray(gt))])
+        assert rec > 0.82, rec
+
+    def test_mixed_precision_layout(self, rng):
+        x = jnp.asarray(rng.randn(32, 512).astype(np.float32))
+        enc = qz.encode_mixed(x, avg_bits=3.0, seed=9)
+        assert enc.n4_dims == qz.allocate_bits(512, 3.0) == 256
+        deq = qz.decode_mixed(enc)
+        assert deq.shape == (32, 512)
+
+    @given(st.floats(2.0, 4.0))
+    @settings(max_examples=20, deadline=None)
+    def test_allocate_bits_budget(self, avg):
+        n4 = qz.allocate_bits(1024, avg)
+        achieved = (4 * n4 + 2 * (1024 - n4)) / 1024
+        assert abs(achieved - avg) < 0.02 and n4 % 4 == 0

@@ -1,0 +1,114 @@
+"""End-to-end behaviour of the paper's system (replaces the scaffold stub)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import Allowlist, GlobalStd, MonaVec, TenantRegistry
+from repro.core.scoring import score_f32, topk
+from repro.data import synthetic as syn
+
+
+class TestPaperPipelineEndToEnd:
+    """AG News surrogate: clustered 1024-dim embeddings, the paper's primary
+    setting (§4.2) at reduced scale."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        # 400 clusters / 4000 docs ~ BGE-M3-like neighbour separation (the
+        # paper's corpora are real semantic embeddings, not iid noise).
+        corpus = syn.embedding_corpus(7, 4000, 1024, n_clusters=400, noise=0.1)
+        queries = syn.queries_from_corpus(corpus, 8, 30, noise=0.05)
+        gt = np.asarray(topk(score_f32(jnp.asarray(queries), jnp.asarray(corpus),
+                                       "cosine"), 10)[1])
+        return corpus, queries, gt
+
+    def test_bruteforce_beats_090_recall(self, setup):
+        corpus, queries, gt = setup
+        idx = MonaVec.build(corpus, metric="cosine")
+        _, ids = idx.search(queries, 10)
+        rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                       for a, b in zip(ids.astype(np.int64), gt)])
+        assert rec > 0.9, rec       # paper: 0.960 on AG News
+
+    def test_memory_footprint_8x(self, setup):
+        corpus, _, _ = setup
+        idx = MonaVec.build(corpus, metric="cosine")
+        packed_bytes = idx.backend.enc.packed.size
+        assert packed_bytes == corpus.nbytes // 8    # 4-bit vs f32
+
+    def test_full_stack_tenancy_rag(self, setup):
+        corpus, queries, _ = setup
+        reg = TenantRegistry()
+        reg.put("team-a", "kb", MonaVec.build(corpus[:1000], metric="cosine"))
+        reg.put("team-b", "kb", MonaVec.build(corpus[1000:2000], metric="cosine"))
+        idx_a = reg.get("team-a", "kb")
+        idx_b = reg.get("team-b", "kb")
+        _, ids_a = idx_a.search(queries[:2], 5)
+        _, ids_b = idx_b.search(queries[:2], 5)
+        assert not np.array_equal(ids_a, ids_b)      # namespaces isolated
+
+    def test_quantized_vs_exact_agreement_by_margin(self, setup):
+        """Score error is bounded by quantization noise: where the true margin
+        is large, 4-bit agrees with exact top-1."""
+        corpus, queries, _ = setup
+        idx = MonaVec.build(corpus, metric="cosine")
+        s, ids = idx.search(queries, 2)
+        gt_scores = score_f32(jnp.asarray(queries), jnp.asarray(corpus), "cosine")
+        gv, gi = topk(gt_scores, 2)
+        margin = np.asarray(gv[:, 0] - gv[:, 1])
+        big_margin = margin > 0.05
+        agree = ids[:, 0].astype(np.int64) == np.asarray(gi[:, 0])
+        assert agree[big_margin].all()
+
+
+class TestDryRunCellConstruction:
+    """Every assigned (arch x shape) cell must BUILD (struct-level) on a mesh
+    with the production axis names; full compiles run via launch.dryrun."""
+
+    def test_all_cells_build(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        from repro.dist.steps import build_cell
+        built = 0
+        for arch, shape in C.cells():
+            if arch.family == "retrieval":
+                continue
+            cell = build_cell(arch, shape, mesh)
+            assert cell.model_flops > 0
+            assert cell.args
+            built += 1
+        assert built == 36          # 40 assigned minus 4 documented skips
+
+    def test_skips_documented(self):
+        skipped = [(a.arch_id, s.name) for a, s in C.cells(include_skipped=True)
+                   if s.name in a.skips]
+        assert len(skipped) == 4
+        assert all(s == "long_500k" for _, s in skipped)
+        # gemma2 (local+global hybrid) must NOT be skipped
+        assert ("gemma2-2b", "long_500k") not in skipped
+
+
+class TestDeterminismSystemLevel:
+    def test_same_build_same_bytes(self):
+        corpus = syn.embedding_corpus(3, 500, 256)
+        a = MonaVec.build(corpus, metric="cosine", seed=99)
+        b = MonaVec.build(corpus, metric="cosine", seed=99)
+        np.testing.assert_array_equal(np.asarray(a.backend.enc.packed),
+                                      np.asarray(b.backend.enc.packed))
+
+    def test_seed_changes_rotation_not_recall(self):
+        corpus = syn.embedding_corpus(3, 1500, 256)
+        queries = syn.queries_from_corpus(corpus, 4, 20)
+        gt = np.asarray(topk(score_f32(jnp.asarray(queries), jnp.asarray(corpus),
+                                       "cosine"), 10)[1])
+        recalls = []
+        for seed in (1, 2, 3):
+            idx = MonaVec.build(corpus, metric="cosine", seed=seed)
+            _, ids = idx.search(queries, 10)
+            recalls.append(np.mean([len(set(x.tolist()) & set(y.tolist())) / 10
+                                    for x, y in zip(ids.astype(np.int64), gt)]))
+        assert np.std(recalls) < 0.05    # data-oblivious: any seed works
