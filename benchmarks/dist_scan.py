@@ -1,0 +1,74 @@
+"""Sharded vs single-device scan throughput (the repro.dist perf baseline).
+
+Run standalone to control the device count (it must be set before jax
+imports, so the hook in benchmarks.run measures whatever the process has —
+1 device unless the caller exported XLA_FLAGS):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python -m benchmarks.dist_scan [--n 65536] [--dim 512]
+
+Emits the standard ``name,us_per_call,derived`` rows: single-device pjit
+scan, shard_map scan, and the merge-correctness check (ids must match).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as qz
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+from .common import emit, time_fn
+
+
+def bench_dist_scan(n: int = 16_384, dim: int = 256, batch_q: int = 32,
+                    k: int = 10) -> None:
+    from repro.dist.retrieval import make_scan_topk_shardmap, scan_topk_pjit
+
+    corpus = embedding_corpus(0, n, dim)
+    queries = queries_from_corpus(corpus, 1, batch_q)
+    enc = qz.encode(jnp.asarray(corpus), metric="cosine")
+    q_rot = qz.encode_query(jnp.asarray(queries), enc)
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+
+    with mesh:
+        us_pjit = time_fn(lambda: scan_topk_pjit(
+            q_rot, enc.packed, enc.qnorms, metric="cosine", k=k))
+        fn = make_scan_topk_shardmap(mesh, metric="cosine", k=k)
+        us_sm = time_fn(lambda: fn(q_rot, enc.packed, enc.qnorms))
+        _, i1 = scan_topk_pjit(q_rot, enc.packed, enc.qnorms,
+                               metric="cosine", k=k)
+        _, i2 = fn(q_rot, enc.packed, enc.qnorms)
+    identical = bool(np.array_equal(np.asarray(i1), np.asarray(i2)))
+
+    qps_pjit = batch_q / (us_pjit / 1e6)
+    qps_sm = batch_q / (us_sm / 1e6)
+    emit(f"dist_scan_pjit_{n}x{dim}", us_pjit, f"{qps_pjit:.0f} QPS")
+    emit(f"dist_scan_shardmap_{n}x{dim}_dev{n_dev}", us_sm,
+         f"{qps_sm:.0f} QPS; ids_identical={identical}")
+
+
+def emit_benchmark() -> None:
+    """Hook for benchmarks.run (small shapes; device count as inherited)."""
+    bench_dist_scan()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=65_536)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--batch-q", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_dist_scan(args.n, args.dim, args.batch_q, args.k)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ def main() -> None:
                     help="substring filter on benchmark names")
     args = ap.parse_args()
 
+    from . import dist_scan
     from . import paper_tables as pt
     from . import roofline
 
@@ -25,6 +26,7 @@ def main() -> None:
         ("fig3_mixed_precision", pt.fig3_mixed_precision),
         ("table6_cross_kernel_reproducibility", pt.table6_cross_kernel_reproducibility),
         ("bench_quantized_kv_decode", pt.bench_quantized_kv_decode),
+        ("dist_scan", dist_scan.emit_benchmark),
         ("roofline", roofline.emit_benchmark),
     ]
     print("name,us_per_call,derived")

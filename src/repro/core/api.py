@@ -75,6 +75,15 @@ class MonaVec:
             raise ValueError(f"unknown index {index!r}")
         return MonaVec(backend=be)
 
+    # -- distribution ------------------------------------------------------
+
+    def shard(self, mesh=None):
+        """Shard this index's corpus over a device mesh (default: all local
+        devices) and return a ShardedMonaVec with the same search() contract
+        and identical results (repro.dist; BruteForce backend only)."""
+        from repro.dist.sharded_index import ShardedMonaVec
+        return ShardedMonaVec.shard(self, mesh)
+
     # -- search --------------------------------------------------------------
 
     def search(

@@ -1,0 +1,8 @@
+# Multi-device subsystem: sharded retrieval, dry-run cell construction,
+# and parameter partition rules.  Importing this package never touches jax
+# device state (same contract as launch.mesh).
+from .partition import (corpus_sharding, pad_rows, partition_bounds,
+                        shard_sizes)  # noqa: F401
+from .retrieval import (make_scan_topk_f32_shardmap, make_scan_topk_shardmap,
+                        scan_topk_f32, scan_topk_pjit)  # noqa: F401
+from .sharded_index import ShardedMonaVec  # noqa: F401

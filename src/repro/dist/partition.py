@@ -1,0 +1,78 @@
+"""Deterministic corpus partitioning over the mesh 'data' axis.
+
+The contract (DESIGN.md §3): a corpus of n rows is split into contiguous
+equal-size shards in row order — shard s owns global rows
+[s * ceil(n/S), (s+1) * ceil(n/S)) — after padding n up to a multiple of the
+shard count.  Contiguity is what makes the cross-shard merge tie-consistent
+with the single-device scan: global ids increase with (shard, local row), so
+the stable per-shard top-k followed by a stable merge top-k reproduces
+jax.lax.top_k's lower-index-wins ordering exactly.
+
+Padding rows never enter a top-k: the scan masks any global id >= n to -inf
+BEFORE the local top-k (a score sentinel, not a data sentinel — padded packed
+bytes decode to the lowest centroid, which is a perfectly valid score, so
+masking by id is the only airtight guard).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def data_axis_size(mesh) -> int:
+    """Number of corpus shards = product of data-parallel axis sizes."""
+    from repro.launch.mesh import data_axes
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_sizes(n: int, n_shards: int) -> Tuple[int, int]:
+    """(rows per shard, padded total) for an n-row corpus on n_shards."""
+    per = round_up(n, n_shards) // n_shards
+    return per, per * n_shards
+
+
+def partition_bounds(n: int, n_shards: int, shard: int) -> Tuple[int, int]:
+    """[lo, hi) of global rows owned by `shard` (hi clamped to n)."""
+    per, _ = shard_sizes(n, n_shards)
+    return shard * per, min((shard + 1) * per, n)
+
+
+def pad_rows(x: jnp.ndarray, n_pad: int, fill=0) -> jnp.ndarray:
+    """Pad axis 0 to n_pad rows with a constant (see module docstring for why
+    the fill value is irrelevant to correctness)."""
+    n = x.shape[0]
+    if n == n_pad:
+        return x
+    widths = [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def corpus_sharding(mesh, ndim: int = 2) -> NamedSharding:
+    """NamedSharding that splits corpus rows over the data axes."""
+    from repro.launch.mesh import data_axes
+    axes = data_axes(mesh)
+    spec = (axes,) + (None,) * (ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def place_sharded(mesh, packed: jnp.ndarray, qnorms: jnp.ndarray):
+    """Pad a (packed, qnorms) corpus to the shard grid and place each shard on
+    its device.  Returns (packed', qnorms', n_orig)."""
+    n = int(packed.shape[0])
+    n_shards = data_axis_size(mesh)
+    _, n_pad = shard_sizes(n, n_shards)
+    packed_p = jax.device_put(pad_rows(packed, n_pad), corpus_sharding(mesh, 2))
+    qnorms_p = jax.device_put(pad_rows(qnorms, n_pad, fill=1.0),
+                              corpus_sharding(mesh, 1))
+    return packed_p, qnorms_p, n

@@ -1,0 +1,198 @@
+"""Sharded top-k retrieval: the MonaVec scan over a device mesh.
+
+Decomposition (the standard MIPS-over-partitions scheme; DESIGN.md §3):
+
+  1. the corpus (packed codes + qnorms) is split into contiguous row shards
+     along the mesh data axes (``partition.py``);
+  2. every shard scores its rows against the replicated rotated queries with
+     the SAME kernels the single-device scan uses (``repro.kernels``),
+     adjusts by metric, masks padding rows to -inf, and takes a LOCAL
+     stable top-k;
+  3. local winners are offset to global ids, all-gathered in shard order,
+     and re-top-k'd — also stable.
+
+Because shards are contiguous and both top-k stages are stable
+(``jax.lax.top_k``: lower index wins ties), the merged (scores, ids) are
+identical to the single-device scan on any mesh shape — bit-identical ids,
+and scores equal to the last ulp (each row's dot product is computed by the
+same kernel on the same bytes; sharding only removes rows from a block, it
+never re-associates a row's reduction).
+
+``scan_topk_pjit`` / ``scan_topk_f32`` are the jit'd single-logical-array
+references (GSPMD partitions the matmul if the inputs are sharded);
+``make_scan_topk_shardmap`` / ``make_scan_topk_f32_shardmap`` build the
+explicitly-collective shard_map versions whose communication is exactly one
+all-gather of [b, S*k] candidates instead of the full [b, n] score matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.scoring import adjust_scores, score_f32, topk
+from repro.kernels.ops import score_raw
+from repro.launch.mesh import data_axes
+
+from .partition import data_axis_size, pad_rows, shard_sizes
+
+
+# ---------------------------------------------------------------------------
+# Single-logical-array references (jit / pjit).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "bits", "n4_dims"))
+def scan_topk_pjit(
+    q_rot: jnp.ndarray,      # [b, d'] rotated f32 queries (encode_query output)
+    packed: jnp.ndarray,     # [n, bytes] packed corpus codes
+    qnorms: jnp.ndarray,     # [n] f32 dequantized-vector norms
+    *,
+    metric: str = "cosine",
+    k: int = 10,
+    bits: int = 4,
+    n4_dims: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference quantized scan: (scores [b,k], global indices [b,k]).
+
+    Runs as one jit program over the full logical arrays; under `with mesh:`
+    and sharded inputs GSPMD partitions it, which is the implicit-parallelism
+    baseline the shard_map factories are validated against.
+    """
+    raw = score_raw(packed, q_rot, bits=bits, n4_dims=n4_dims)
+    return topk(adjust_scores(raw, qnorms, metric), k)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k"))
+def scan_topk_f32(
+    queries: jnp.ndarray,    # [b, d] raw queries
+    corpus: jnp.ndarray,     # [n, d] f32 corpus
+    *,
+    metric: str = "dot",
+    k: int = 10,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact f32 scan reference (the accuracy ceiling): (scores, indices)."""
+    return topk(score_f32(queries, corpus, metric), k)
+
+
+# ---------------------------------------------------------------------------
+# shard_map factories: explicit local-scan + cross-shard merge.
+# ---------------------------------------------------------------------------
+
+def _mesh_data_info(mesh):
+    """(axes tuple, total shard count) for the corpus partition."""
+    return data_axes(mesh), data_axis_size(mesh)
+
+
+def _shard_index(axes, mesh) -> jnp.ndarray:
+    """Row-major linear shard index over the data axes (matches the
+    concatenation order of all_gather over the same axis tuple)."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _merge_topk(vals: jnp.ndarray, gids: jnp.ndarray, axes, k: int):
+    """All-gather per-shard candidates (shard order) and re-top-k.
+
+    Shard order == global-id order (contiguous partition), and lax.top_k is
+    stable, so ties resolve exactly as in the single-device scan.
+    """
+    vg = jax.lax.all_gather(vals, axes, axis=1, tiled=True)   # [b, S*k_local]
+    gg = jax.lax.all_gather(gids, axes, axis=1, tiled=True)
+    vv, mi = jax.lax.top_k(vg, k)
+    return vv, jnp.take_along_axis(gg, mi, axis=1)
+
+
+def make_scan_topk_shardmap(
+    mesh,
+    *,
+    metric: str = "cosine",
+    k: int = 10,
+    bits: int = 4,
+    n4_dims: int = 0,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    n_valid: Optional[int] = None,
+):
+    """Build fn(q_rot, packed, qnorms) -> (scores [b,k], global ids [b,k])
+    scanning corpus shards along the mesh data axes.
+
+    The returned fn accepts the full logical corpus (replicated or already
+    sharded); shard_map's in_specs reshard it row-contiguously, padding first
+    so every shard is equal-size.  Pass n_valid when the corpus is ALREADY
+    padded (ShardedMonaVec) so the padding mask still knows the true row
+    count.  Results are identical to scan_topk_pjit.
+    """
+    axes, n_shards = _mesh_data_info(mesh)
+
+    @jax.jit
+    def call(q_rot, packed, qnorms):
+        n = packed.shape[0] if n_valid is None else n_valid
+        per, n_pad = shard_sizes(n, n_shards)
+        k_local = min(k, per)
+        packed_p = pad_rows(packed, n_pad)
+        qnorms_p = pad_rows(qnorms, n_pad, fill=1.0)
+
+        def local_scan(q, pk, qn):
+            # pk [per, bytes], qn [per] — this shard's contiguous row block.
+            gid0 = _shard_index(axes, mesh) * per
+            raw = score_raw(pk, q, bits=bits, n4_dims=n4_dims,
+                            use_kernel=use_kernel, interpret=interpret)
+            s = adjust_scores(raw, qn, metric)
+            gids = gid0 + jnp.arange(per, dtype=jnp.int32)
+            s = jnp.where(gids[None, :] < n, s, -jnp.inf)   # padding sentinel
+            v, li = jax.lax.top_k(s, k_local)               # local stable top-k
+            return _merge_topk(v, jnp.take(gids, li), axes, k)
+
+        return shard_map(
+            local_scan, mesh=mesh,
+            in_specs=(P(), P(axes, None), P(axes)),
+            out_specs=(P(), P()),
+            check_rep=False,
+        )(q_rot, packed_p, qnorms_p)
+
+    return call
+
+
+def make_scan_topk_f32_shardmap(
+    mesh,
+    *,
+    metric: str = "dot",
+    k: int = 10,
+):
+    """f32 variant of make_scan_topk_shardmap: fn(queries, corpus).
+
+    Every score_f32 metric is row-local on the corpus side (per-row norms /
+    squared norms), so sharding rows never changes a score's value.
+    """
+    axes, n_shards = _mesh_data_info(mesh)
+
+    @jax.jit
+    def call(queries, corpus):
+        n = corpus.shape[0]
+        per, n_pad = shard_sizes(n, n_shards)
+        k_local = min(k, per)
+        corpus_p = pad_rows(corpus, n_pad)
+
+        def local_scan(q, c):
+            gid0 = _shard_index(axes, mesh) * per
+            s = score_f32(q, c, metric)
+            gids = gid0 + jnp.arange(per, dtype=jnp.int32)
+            s = jnp.where(gids[None, :] < n, s, -jnp.inf)
+            v, li = jax.lax.top_k(s, k_local)
+            return _merge_topk(v, jnp.take(gids, li), axes, k)
+
+        return shard_map(
+            local_scan, mesh=mesh,
+            in_specs=(P(), P(axes, None)),
+            out_specs=(P(), P()),
+            check_rep=False,
+        )(queries, corpus_p)
+
+    return call

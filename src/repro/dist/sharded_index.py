@@ -1,0 +1,88 @@
+"""ShardedMonaVec: the MonaVec facade over a device mesh.
+
+Wraps an Encoded corpus (from a built MonaVec or a loaded .mvec file), pads
+it to the shard grid, places each contiguous row block on its device, and
+serves the same ``search(queries, k)`` contract through the shard_map scan —
+results are identical to the single-device index (DESIGN.md §3).
+
+    idx = MonaVec.build(vectors, metric="cosine")
+    sharded = idx.shard()                 # all local devices
+    scores, ids = sharded.search(queries, k=10)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as qz
+from repro.core.bruteforce import BruteForceIndex
+from repro.launch.mesh import make_local_mesh
+
+from .partition import place_sharded
+from .retrieval import make_scan_topk_shardmap
+
+
+@dataclasses.dataclass
+class ShardedMonaVec:
+    enc: qz.Encoded          # metadata + SHARDED padded packed/qnorms
+    ids: np.ndarray          # [n] external ids (unpadded)
+    mesh: object
+    n: int                   # true (unpadded) corpus rows
+    _fns: Dict[int, object] = dataclasses.field(default_factory=dict)
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def shard(index, mesh=None) -> "ShardedMonaVec":
+        """Shard a MonaVec / BruteForceIndex / Encoded over `mesh` (default:
+        all local devices on the data axis).
+
+        Only the BruteForce backend shards: it is the paper's deterministic
+        core and the only scan whose partition merge is exact by construction
+        (IVF/HNSW traversals are pointer-chasing, not row scans).
+        """
+        from repro.core.api import MonaVec
+        if isinstance(index, MonaVec):
+            index = index.backend
+        if isinstance(index, BruteForceIndex):
+            enc, ids = index.enc, index.ids
+        elif isinstance(index, qz.Encoded):
+            enc, ids = index, np.arange(index.n, dtype=np.uint64)
+        else:
+            raise TypeError(
+                f"cannot shard a {type(index).__name__}: only the BruteForce "
+                "scan has an exact cross-shard merge")
+        if mesh is None:
+            mesh = make_local_mesh()
+        packed, qnorms, n = place_sharded(mesh, enc.packed, enc.qnorms)
+        enc_sharded = dataclasses.replace(enc, packed=packed, qnorms=qnorms)
+        return ShardedMonaVec(enc=enc_sharded, ids=np.asarray(ids), mesh=mesh,
+                              n=n)
+
+    @staticmethod
+    def load(path: str, mesh=None) -> "ShardedMonaVec":
+        from repro.core.api import MonaVec
+        return ShardedMonaVec.shard(MonaVec.load(path), mesh)
+
+    # -- search ------------------------------------------------------------
+
+    def _fn(self, k: int):
+        if k not in self._fns:
+            self._fns[k] = make_scan_topk_shardmap(
+                self.mesh, metric=self.enc.metric, k=k, bits=self.enc.bits,
+                n4_dims=self.enc.n4_dims, n_valid=self.n)
+        return self._fns[k]
+
+    def search(self, queries: jnp.ndarray, k: int = 10,
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores [b,k], external ids [b,k]) — same contract, same results
+        as the single-device BruteForce search."""
+        k = min(k, self.n)
+        q_rot = qz.encode_query(jnp.atleast_2d(jnp.asarray(queries)), self.enc)
+        with self.mesh:
+            vals, gidx = self._fn(k)(q_rot, self.enc.packed, self.enc.qnorms)
+        return np.asarray(vals), self.ids[np.asarray(gidx)]

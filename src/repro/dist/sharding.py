@@ -1,0 +1,91 @@
+"""Parameter partition rules for the dry-run cells (referenced by moe.py).
+
+One rule table per model family, matched against the pytree path string of
+each leaf.  Rules name only the TRAILING dims of a leaf: layer-stacked block
+params carry an extra leading [L] axis (transformer init vmaps per block), so
+specs are right-aligned and left-padded with None.
+
+LM layout (megatron-style tensor parallelism over the 'model' axis):
+  embed [V, D]             V/model   (tied head -> vocab-sharded logits)
+  lm_head w [D, V]         V/model
+  attn q/k/v w [D, H*dh]   out/model     o w [H*dh, D]  in/model
+  mla up-projections       out/model     mla w_o        in/model
+  swiglu gate/up [D, F]    F/model       down [F, D]    F/model
+  moe w_* [E, D, F]        E/model   (expert parallelism)
+  norms / scalars / routers / biases-of-replicated-outs   replicated
+
+RecSys: embedding tables [V, D] are row-sharded (V/model) — the tables are
+~all the params; the MLPs are replicated.  GNN: everything replicated (the
+graphs, not the weights, are what's big; edges shard over 'data' at runtime).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (path regex, trailing-dims spec) — first match wins.
+LM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"\['mtp'\]", ()),                              # MTP head: replicated
+    (r"\['embed'\]$", ("model", None)),
+    (r"\['lm_head'\]\['w'\]", (None, "model")),
+    (r"\['lm_head'\]\['b'\]", ("model",)),
+    (r"\['mla'\]\['w_(uq|uk|uv)'\]\['w'\]", (None, "model")),
+    (r"\['mla'\]\['w_o'\]\['w'\]", ("model", None)),
+    (r"\['attn'\]\['(q|k|v)'\]\['w'\]", (None, "model")),
+    (r"\['attn'\]\['(q|k|v)'\]\['b'\]", ("model",)),
+    (r"\['attn'\]\['o'\]\['w'\]", ("model", None)),
+    (r"\['ffn'\]\['(gate|up)'\]\['w'\]", (None, "model")),
+    (r"\['ffn'\]\['down'\]\['w'\]", ("model", None)),
+    (r"\['ffn'\]\['w_(gate|up|down)'\]", ("model", None, None)),
+    (r"\['ffn'\]\['shared'\]\['(gate|up)'\]\['w'\]", (None, "model")),
+    (r"\['ffn'\]\['shared'\]\['down'\]\['w'\]", ("model", None)),
+)
+
+RECSYS_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"\['(tables|v|w)'\]\[\d+\]$", ("model", None)),        # DLRM / FM tables
+    (r"\['(item_emb|cat_emb|user_emb)'\]$", ("model", None)),  # DIEN / two-tower
+)
+
+GNN_RULES: Tuple[Tuple[str, Tuple], ...] = ()
+
+
+def spec_for_path(path_str: str, ndim: int,
+                  rules: Sequence[Tuple[str, Tuple]]) -> P:
+    """Match a leaf path against the rule table; right-align the spec."""
+    for pat, trailing in rules:
+        if re.search(pat, path_str):
+            if len(trailing) > ndim:       # e.g. bias of a matched dense
+                trailing = trailing[-ndim:] if ndim else ()
+            return P(*((None,) * (ndim - len(trailing)) + tuple(trailing)))
+    return P()
+
+
+def tree_shardings(tree, mesh, rules: Sequence[Tuple[str, Tuple]],
+                   drop_model: bool = False):
+    """Map a pytree of arrays/ShapeDtypeStructs to NamedShardings.
+
+    drop_model=True degrades every rule to fully replicated (1-device meshes
+    or memory twins where only data parallelism is wanted).
+    """
+    def one(path, leaf):
+        if drop_model:
+            return NamedSharding(mesh, P())
+        spec = spec_for_path(jax.tree_util.keystr(path), len(leaf.shape), rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_sharding(mesh, ndim: int, axes) -> NamedSharding:
+    """Shard dim 0 (the batch) over the data axes, rest replicated."""
+    return NamedSharding(mesh, P(tuple(axes), *((None,) * (ndim - 1))))
+
+
+def with_shardings(struct_tree, sharding_tree):
+    """Attach shardings to a ShapeDtypeStruct tree (jit.lower aot inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, sharding_tree)

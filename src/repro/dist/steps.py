@@ -1,0 +1,583 @@
+"""Dry-run cell construction: one jit-able step per (arch x shape x variant).
+
+A Cell bundles everything ``launch.dryrun`` needs to lower + compile a
+production step on a mesh WITHOUT allocating parameters: the step fn, its
+argument ShapeDtypeStructs (with NamedShardings attached per
+``dist.sharding``), donation, and an analytic MODEL_FLOPS term for the
+roofline tables.
+
+Variants (LM family):
+  baseline   python-unrolled layer stack — XLA cost_analysis counts a scanned
+             while-loop body once regardless of trip count, so only the
+             unrolled form reports true FLOPs.  Carries a scan-form memory
+             twin (fn_mem): XLA:CPU's scheduler keeps far more live in the
+             unrolled form than a real job would.
+  scan       the production (lax.scan) form itself — compact HLO, the
+             memory/collective artifact for heavy archs.
+  probeN     unrolled at reduced depth N — per-layer costs extrapolate
+             linearly to full depth (benchmarks.roofline._extrapolate).
+
+This module is also the home of the per-arch init/loss tables the training
+launcher and smoke tests share (_RS_INIT / _RS_LOSS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import data_axes
+from repro.models import gnn as gnn_m
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.train.optimizer import AdamWConfig, init_opt_state, make_train_step
+
+from . import sharding as shd
+from .partition import data_axis_size
+
+# Per-arch recsys init/loss tables (shared with launch.train + smoke tests).
+_RS_INIT = {
+    "dlrm-rm2": rs.dlrm_init,
+    "dien": rs.dien_init,
+    "fm": rs.fm_init,
+    "two-tower-retrieval": rs.two_tower_init,
+}
+_RS_LOSS = {
+    "dlrm-rm2": rs.dlrm_loss,
+    "dien": rs.dien_loss,
+    "fm": rs.fm_loss,
+    "two-tower-retrieval": rs.two_tower_loss,
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one dry-run cell (see launch.dryrun)."""
+    step_name: str
+    model_flops: float
+    fn: Callable
+    args: Tuple[Any, ...]
+    out_shardings: Any = None
+    donate: Tuple[int, ...] = ()
+    # Optional memory twin (production scan form of an unrolled cell).
+    fn_mem: Optional[Callable] = None
+    args_mem: Optional[Tuple[Any, ...]] = None
+    out_shardings_mem: Any = None
+    donate_mem: Tuple[int, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers.
+# ---------------------------------------------------------------------------
+
+_KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _struct(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
+                                sharding=sharding)
+
+
+def _eval_params(init_fn):
+    return jax.eval_shape(init_fn, _KEY)
+
+
+def _maybe_batch(mesh, axes, ndim: int, dim0: int):
+    """Batch sharding over the data axes iff dim0 divides evenly."""
+    n = data_axis_size(mesh)
+    if n > 1 and dim0 % n == 0:
+        return shd.batch_sharding(mesh, ndim, axes)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+def _count_params(struct_tree, exclude: str = "") -> int:
+    """Total leaf elements, minus paths matching `exclude` (regex)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(struct_tree)[0]:
+        if exclude and re.search(exclude, jax.tree_util.keystr(path)):
+            continue
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def _train_cell(step_name, loss_fn, params_struct, param_shardings, mesh,
+                axes, batch_structs, flops, *, rules, moment_dtype="float32"):
+    """Assemble a train-step Cell: fn(params, opt, *batch) with donation."""
+    ocfg = AdamWConfig(moment_dtype=moment_dtype)
+    opt_struct = jax.eval_shape(lambda p: init_opt_state(p, ocfg),
+                                params_struct)
+    # The rule regexes are sub-path matches, so they apply unchanged under
+    # the opt state's ['m'] / ['v'] prefixes.
+    opt_shardings = shd.tree_shardings(opt_struct, mesh, rules)
+    step = make_train_step(loss_fn, ocfg)
+
+    def fn(params, opt, *batch):
+        return step(params, opt, batch)
+
+    args = (shd.with_shardings(params_struct, param_shardings),
+            shd.with_shardings(opt_struct, opt_shardings)) + tuple(batch_structs)
+    return Cell(step_name=step_name, model_flops=flops, fn=fn, args=args,
+                donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# LM cells.
+# ---------------------------------------------------------------------------
+
+def _parse_variant(variant: str, n_layers: int) -> Tuple[bool, int]:
+    """variant -> (unroll, depth)."""
+    if variant == "scan":
+        return False, n_layers
+    m = re.fullmatch(r"probe(\d+)", variant)
+    if m:
+        return True, int(m.group(1))
+    if variant != "baseline":      # a typo'd variant must not silently run
+        raise ValueError(f"unknown LM variant {variant!r} "
+                         "(expected baseline | scan | probeN)")
+    return True, n_layers
+
+
+def _lm_cfg(arch, mesh, *, unroll: bool, depth: int, kind: str):
+    cfg = arch.make_config()
+    axes = data_axes(mesh)
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, dp_axes=axes, ep_axis="model",
+            first_dense_layers=min(moe.first_dense_layers, max(depth - 1, 0)))
+    return dataclasses.replace(
+        cfg, n_layers=depth, unroll=unroll, moe=moe,
+        dp_axes=axes, vocab_shard="model",
+        loss_chunk=2048 if kind == "train" else 0,
+    )
+
+
+def _lm_flops(cfg, batch: int, seq: int, *, mode: str) -> float:
+    """Analytic global-batch FLOPs: 2*active_params*tokens matmul term plus
+    the attention score/value term (window-aware), x3 for backward."""
+    n_act = cfg.active_param_count()
+    d_attn = cfg.n_heads * cfg.head_dim
+    if mode == "decode":
+        matmul = 2.0 * n_act * batch
+        attn = sum(4.0 * batch * min(seq, w if w > 0 else seq) * d_attn
+                   for w in cfg.layer_windows())
+        return matmul + attn
+    matmul = 2.0 * n_act * batch * seq
+    attn = sum(4.0 * batch * seq * min(seq, w if w > 0 else seq) * d_attn
+               for w in cfg.layer_windows())
+    fwd = matmul + attn
+    return 3.0 * fwd if mode == "train" else fwd
+
+
+def _decode_cache_structs(cfg, mesh, axes, batch: int, max_len: int):
+    cache = jax.eval_shape(
+        lambda: tf.init_decode_cache(cfg, batch, max_len))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n_data = data_axis_size(mesh)
+    shard_batch = batch % n_data == 0 and n_data > 1
+
+    def sh(leaf):
+        # [L, B, S, KV, dh] (GQA) or [L, B, S, C] (MLA latent).
+        spec = [None] * len(leaf.shape)
+        if shard_batch:
+            spec[1] = axes
+        else:
+            spec[2] = axes             # long-context: sequence-sharded cache
+        if (len(leaf.shape) == 5
+                and leaf.shape[3] % mesh.shape["model"] == 0):
+            spec[3] = "model"          # KV heads over the model axis
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(lambda l: _struct(l.shape, l.dtype, sh(l)), cache), \
+        shard_batch
+
+
+def _build_lm(arch, shape, mesh, variant: str) -> Cell:
+    axes = data_axes(mesh)
+    kind = shape.kind
+    dims = shape.dims
+    seq, batch = dims["seq_len"], dims["global_batch"]
+    unroll, depth = _parse_variant(variant, arch.make_config().n_layers)
+    cfg = _lm_cfg(arch, mesh, unroll=unroll, depth=depth, kind=kind)
+    params_struct = _eval_params(lambda k: tf.init_params(cfg, k))
+    p_shard = shd.tree_shardings(params_struct, mesh, shd.LM_RULES)
+    flops = _lm_flops(cfg, batch, seq,
+                      mode="train" if kind == "train" else
+                      ("decode" if kind == "decode" else "prefill"))
+
+    if kind == "train":
+        tok = _struct((batch, seq), jnp.int32,
+                      _maybe_batch(mesh, axes, 2, batch))
+        cell = _train_cell(
+            "lm_train_step", lambda p, b: tf.lm_loss(p, cfg, b[0]),
+            params_struct, p_shard, mesh, axes, (tok,), flops,
+            rules=shd.LM_RULES,
+            moment_dtype="bfloat16" if cfg.moe else "float32")
+        cell.step_name = f"lm_train[{variant}]"
+        if unroll and variant == "baseline":
+            _attach_scan_twin(cell, arch, shape, mesh)
+        return cell
+
+    if kind == "prefill":
+        tok = _struct((batch, seq), jnp.int32,
+                      _maybe_batch(mesh, axes, 2, batch))
+
+        def fn(params, tokens):
+            return tf.prefill(params, cfg, tokens, last_only=True)
+
+        cell = Cell(step_name=f"lm_prefill[{variant}]", model_flops=flops,
+                    fn=fn, args=(shd.with_shardings(params_struct, p_shard),
+                                 tok))
+        if unroll and variant == "baseline":
+            _attach_scan_twin(cell, arch, shape, mesh)
+        return cell
+
+    # decode: one token against a [*, batch, seq] cache.
+    cache_structs, shard_batch = _decode_cache_structs(cfg, mesh, axes,
+                                                       batch, seq)
+    if not shard_batch:
+        # Sequence-sharded cache (gemma2 long_500k): attend over the sharded
+        # key axis; wsc constraints inside attention keep the tile sharded.
+        # dp_axes must be dropped — a mesh axis can map to one dim only, and
+        # at global_batch=1 there is nothing to data-parallelize anyway.
+        cfg = dataclasses.replace(cfg, attn_seq_shard=axes[-1],
+                                  attn_seq_axis="kv", dp_axes=None)
+    tok = _struct((batch, 1), jnp.int32,
+                  _maybe_batch(mesh, axes, 2, batch))
+    cur = _struct((), jnp.int32)
+
+    def fn(params, cache, tokens, cur_len):
+        return tf.decode_step(params, cfg, cache, tokens, cur_len)
+
+    cell = Cell(step_name=f"lm_decode[{variant}]", model_flops=flops, fn=fn,
+                args=(shd.with_shardings(params_struct, p_shard),
+                      cache_structs, tok, cur),
+                donate=(1,))
+    if unroll and variant == "baseline":
+        _attach_scan_twin(cell, arch, shape, mesh)
+    return cell
+
+
+def _attach_scan_twin(cell: Cell, arch, shape, mesh) -> None:
+    """Give an unrolled cell its production (scan) memory twin."""
+    twin = _build_lm(arch, shape, mesh, "scan")
+    cell.fn_mem = twin.fn
+    cell.args_mem = twin.args
+    cell.out_shardings_mem = twin.out_shardings
+    cell.donate_mem = twin.donate
+
+
+# ---------------------------------------------------------------------------
+# GNN cells.
+# ---------------------------------------------------------------------------
+
+def _gnn_flops(cfg, n_nodes: int, n_edges: int, train: bool) -> float:
+    per_node = 0.0
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_feat if i == 0 else cfg.d_hidden
+        per_node += 2.0 * (d_in * cfg.d_hidden + cfg.d_hidden * cfg.d_hidden)
+    fwd = n_nodes * per_node + 2.0 * n_edges * cfg.d_hidden  # + scatter adds
+    return 3.0 * fwd if train else fwd
+
+
+def _build_gnn(arch, shape, mesh, variant: str) -> Cell:
+    axes = data_axes(mesh)
+    dims = shape.dims
+    base = arch.make_config()
+
+    if shape.kind == "minibatch":
+        cfg = dataclasses.replace(base, d_feat=dims["d_feat"],
+                                  n_classes=dims["n_classes"],
+                                  n_layers=2)   # depth = len(fanout)
+        b = dims["batch_nodes"]
+        f0, f1 = dims["fanout0"], dims["fanout1"]
+        # Worst-case nested frontiers (sampler guarantees <= these).
+        n1 = b + b * f0
+        e_outer, e_inner = n1 * f1, b * f0
+        n2 = n1 + e_outer
+        params_struct = _eval_params(lambda k: gnn_m.init_params(cfg, k))
+        p_shard = shd.tree_shardings(params_struct, mesh, shd.GNN_RULES)
+
+        def loss_fn(p, batch):
+            feats, sa, da, sb, db, labels = batch
+            logits = gnn_m.forward_sampled(p, cfg, feats,
+                                           [(sa, da, n1), (sb, db, b)])
+            return gnn_m.nll_loss(logits, labels)
+
+        batch_structs = (
+            _struct((n2, cfg.d_feat), jnp.float32),
+            _struct((e_outer,), jnp.int32, _maybe_batch(mesh, axes, 1, e_outer)),
+            _struct((e_outer,), jnp.int32, _maybe_batch(mesh, axes, 1, e_outer)),
+            _struct((e_inner,), jnp.int32, _maybe_batch(mesh, axes, 1, e_inner)),
+            _struct((e_inner,), jnp.int32, _maybe_batch(mesh, axes, 1, e_inner)),
+            _struct((b,), jnp.int32),
+        )
+        flops = _gnn_flops(cfg, n2, e_outer + e_inner, True)
+        return _train_cell("gnn_minibatch_train", loss_fn, params_struct,
+                           p_shard, mesh, axes, batch_structs, flops,
+                           rules=shd.GNN_RULES)
+
+    if shape.kind == "graphs":
+        cfg = dataclasses.replace(base, d_feat=dims["d_feat"],
+                                  n_classes=dims["n_classes"],
+                                  readout="graph")
+        g = dims["batch"]
+        n, e = dims["n_nodes"] * g, dims["n_edges"] * g
+        params_struct = _eval_params(lambda k: gnn_m.init_params(cfg, k))
+        p_shard = shd.tree_shardings(params_struct, mesh, shd.GNN_RULES)
+        gid = np.repeat(np.arange(g), dims["n_nodes"])
+
+        def loss_fn(p, batch):
+            x, src, dst, labels = batch
+            logits = gnn_m.forward_full(p, cfg, x, src, dst,
+                                        graph_ids=jnp.asarray(gid), n_graphs=g)
+            return gnn_m.nll_loss(logits, labels)
+
+        batch_structs = (
+            _struct((n, cfg.d_feat), jnp.float32,
+                    _maybe_batch(mesh, axes, 2, n)),
+            _struct((e,), jnp.int32, _maybe_batch(mesh, axes, 1, e)),
+            _struct((e,), jnp.int32, _maybe_batch(mesh, axes, 1, e)),
+            _struct((g,), jnp.int32),
+        )
+        return _train_cell("gnn_graphs_train", loss_fn, params_struct,
+                           p_shard, mesh, axes, batch_structs,
+                           _gnn_flops(cfg, n, e, True), rules=shd.GNN_RULES)
+
+    # full_graph (cora-like / ogbn-products-like).
+    cfg = dataclasses.replace(base, d_feat=dims["d_feat"],
+                              n_classes=dims["n_classes"])
+    n, e = dims["n_nodes"], dims["n_edges"]
+    params_struct = _eval_params(lambda k: gnn_m.init_params(cfg, k))
+    p_shard = shd.tree_shardings(params_struct, mesh, shd.GNN_RULES)
+
+    def loss_fn(p, batch):
+        x, src, dst, labels = batch
+        return gnn_m.nll_loss(gnn_m.forward_full(p, cfg, x, src, dst), labels)
+
+    batch_structs = (
+        _struct((n, cfg.d_feat), jnp.float32, _maybe_batch(mesh, axes, 2, n)),
+        _struct((e,), jnp.int32, _maybe_batch(mesh, axes, 1, e)),
+        _struct((e,), jnp.int32, _maybe_batch(mesh, axes, 1, e)),
+        _struct((n,), jnp.int32),
+    )
+    return _train_cell("gnn_full_graph_train", loss_fn, params_struct,
+                       p_shard, mesh, axes, batch_structs,
+                       _gnn_flops(cfg, n, e, True), rules=shd.GNN_RULES)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells.
+# ---------------------------------------------------------------------------
+
+# Embedding-table paths = exactly what RECSYS_RULES shards (one source of
+# truth); DLRM/FM tables are indexed lists, so a dense layer's terminal
+# ['w'] never matches.
+_RS_TABLES = "|".join(pat for pat, _ in shd.RECSYS_RULES)
+
+
+def _rs_batch_structs(arch_id: str, cfg, batch: int, mesh, axes,
+                      serve: bool = False):
+    bsh1 = _maybe_batch(mesh, axes, 1, batch)
+    bsh2 = _maybe_batch(mesh, axes, 2, batch)
+    if arch_id == "dlrm-rm2":
+        d = {"dense": _struct((batch, cfg.n_dense), jnp.float32, bsh2),
+             "sparse": _struct((batch, cfg.n_sparse), jnp.int32, bsh2)}
+    elif arch_id == "dien":
+        d = {"hist_items": _struct((batch, cfg.seq_len), jnp.int32, bsh2),
+             "hist_cats": _struct((batch, cfg.seq_len), jnp.int32, bsh2),
+             "target_item": _struct((batch,), jnp.int32, bsh1),
+             "target_cat": _struct((batch,), jnp.int32, bsh1)}
+    elif arch_id == "fm":
+        d = {"sparse": _struct((batch, cfg.n_sparse), jnp.int32, bsh2)}
+    else:  # two-tower-retrieval
+        d = {"user_hist": _struct((batch, cfg.n_user_feats), jnp.int32, bsh2),
+             "item_id": _struct((batch,), jnp.int32, bsh1),
+             "item_freq": _struct((batch,), jnp.float32, bsh1)}
+    if not serve and arch_id != "two-tower-retrieval":
+        d["label"] = _struct((batch,), jnp.int32, bsh1)
+    return d
+
+
+def _rs_forward(arch_id: str, params, cfg, batch):
+    if arch_id == "dlrm-rm2":
+        return rs.dlrm_forward(params, cfg, batch["dense"], batch["sparse"])
+    if arch_id == "dien":
+        return rs.dien_forward(params, cfg, batch)
+    if arch_id == "fm":
+        return rs.fm_forward(params, cfg, batch["sparse"])
+    u = rs.user_embedding(params, cfg, batch["user_hist"])
+    v = rs.item_embedding(params, cfg, batch["item_id"])
+    return jnp.sum(u * v, axis=-1)
+
+
+def _rs_flops(arch_id: str, params_struct, cfg, batch: int,
+              train: bool) -> float:
+    dense_params = _count_params(params_struct, exclude=_RS_TABLES)
+    fwd = 2.0 * dense_params * batch
+    if arch_id == "dien":  # recurrences run seq_len steps over [B, H]
+        fwd *= cfg.seq_len / 4.0
+    return 3.0 * fwd if train else fwd
+
+
+def _build_recsys(arch, shape, mesh, variant: str) -> Cell:
+    axes = data_axes(mesh)
+    arch_id = arch.arch_id
+    cfg = arch.make_config()
+    init, loss = _RS_INIT[arch_id], _RS_LOSS[arch_id]
+    params_struct = _eval_params(lambda k: init(cfg, k))
+    p_shard = shd.tree_shardings(params_struct, mesh, shd.RECSYS_RULES)
+
+    if shape.kind == "recsys_train":
+        batch = shape.dims["batch"]
+        structs = _rs_batch_structs(arch_id, cfg, batch, mesh, axes)
+
+        def loss_fn(p, b):
+            return loss(p, cfg, b[0])
+
+        return _train_cell(f"{arch_id}_train", loss_fn, params_struct,
+                           p_shard, mesh, axes, (structs,),
+                           _rs_flops(arch_id, params_struct, cfg, batch, True),
+                           rules=shd.RECSYS_RULES)
+
+    if shape.kind == "recsys_serve":
+        batch = shape.dims["batch"]
+        structs = _rs_batch_structs(arch_id, cfg, batch, mesh, axes,
+                                    serve=True)
+
+        def fn(params, b):
+            return _rs_forward(arch_id, params, cfg, b)
+
+        return Cell(step_name=f"{arch_id}_serve",
+                    model_flops=_rs_flops(arch_id, params_struct, cfg, batch,
+                                          False),
+                    fn=fn,
+                    args=(shd.with_shardings(params_struct, p_shard), structs))
+
+    # retrieval_cand: 1 user vs n_candidates items.
+    n_cand = shape.dims["n_candidates"]
+    return _build_rs_retrieval(arch_id, cfg, params_struct, p_shard, mesh,
+                               axes, n_cand)
+
+
+def _build_rs_retrieval(arch_id, cfg, params_struct, p_shard, mesh, axes,
+                        n_cand: int) -> Cell:
+    csh1 = _maybe_batch(mesh, axes, 1, n_cand)
+    csh2 = _maybe_batch(mesh, axes, 2, n_cand)
+
+    if arch_id == "two-tower-retrieval":
+        # The paper's own setting: the user vector scans a PACKED 4-bit item
+        # corpus through the dist.retrieval kernels (see configs/recsys notes).
+        from repro.core.rhdh import next_pow2, rhdh_apply
+        from repro.core.standardize import COSINE, prepare
+        from repro.dist.retrieval import scan_topk_pjit
+        d_pad = next_pow2(cfg.embed_dim)
+        structs = (
+            shd.with_shardings(params_struct, p_shard),
+            _struct((1, cfg.n_user_feats), jnp.int32),
+            _struct((n_cand, d_pad // 2), jnp.uint8, csh2),
+            _struct((n_cand,), jnp.float32, csh1),
+        )
+
+        def fn(params, user_hist, packed, qnorms):
+            u = rs.user_embedding(params, cfg, user_hist)
+            q_rot = rhdh_apply(prepare(u, COSINE), 0x6D6F6E61,
+                               normalized=False)
+            return scan_topk_pjit(q_rot, packed, qnorms, metric=COSINE, k=10)
+
+        flops = 2.0 * n_cand * d_pad + 2.0 * _count_params(
+            params_struct, exclude=_RS_TABLES)
+        return Cell(step_name="two_tower_packed_scan", model_flops=flops,
+                    fn=fn, args=structs)
+
+    if arch_id == "dien":
+        # One user history broadcast against every candidate (AUGRU
+        # re-evolved per candidate — the DIEN scoring semantics).
+        structs = (
+            shd.with_shardings(params_struct, p_shard),
+            _struct((1, cfg.seq_len), jnp.int32),
+            _struct((1, cfg.seq_len), jnp.int32),
+            _struct((n_cand,), jnp.int32, csh1),
+            _struct((n_cand,), jnp.int32, csh1),
+        )
+
+        def fn(params, hist_items, hist_cats, target_item, target_cat):
+            batch = {
+                "hist_items": jnp.broadcast_to(hist_items,
+                                               (n_cand, cfg.seq_len)),
+                "hist_cats": jnp.broadcast_to(hist_cats,
+                                              (n_cand, cfg.seq_len)),
+                "target_item": target_item, "target_cat": target_cat,
+            }
+            return rs.dien_forward(params, cfg, batch)
+
+        return Cell(step_name="dien_candidate_scan",
+                    model_flops=_rs_flops("dien", params_struct, cfg, n_cand,
+                                          False),
+                    fn=fn, args=structs)
+
+    # dlrm / fm: pointwise scoring of the candidate batch.
+    structs_d = _rs_batch_structs(arch_id, cfg, n_cand, mesh, axes,
+                                  serve=True)
+
+    def fn(params, b):
+        return _rs_forward(arch_id, params, cfg, b)
+
+    return Cell(step_name=f"{arch_id}_candidate_scan",
+                model_flops=_rs_flops(arch_id, params_struct, cfg, n_cand,
+                                      False),
+                fn=fn,
+                args=(shd.with_shardings(params_struct, p_shard), structs_d))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval cells (monavec-scan — the paper's workload as an arch).
+# ---------------------------------------------------------------------------
+
+def _build_retrieval(arch, shape, mesh, variant: str) -> Cell:
+    from repro.core.rhdh import next_pow2
+    from repro.dist.retrieval import make_scan_topk_shardmap
+    from .partition import corpus_sharding, shard_sizes
+
+    cfg = arch.make_config()
+    n, bq = shape.dims["n_corpus"], shape.dims["batch_q"]
+    d_pad = next_pow2(cfg.dim)
+    _, n_pad = shard_sizes(n, data_axis_size(mesh))
+
+    fn = make_scan_topk_shardmap(mesh, metric=cfg.metric, k=cfg.k,
+                                 bits=cfg.bits, n_valid=n)
+    args = (
+        _struct((bq, d_pad), jnp.float32),
+        _struct((n_pad, d_pad // 2), jnp.uint8, corpus_sharding(mesh, 2)),
+        _struct((n_pad,), jnp.float32, corpus_sharding(mesh, 1)),
+    )
+    # Same MAC count as the f32 scan (dequantization is elementwise).
+    flops = 2.0 * bq * float(n) * d_pad
+    return Cell(step_name="monavec_scan_shardmap", model_flops=flops, fn=fn,
+                args=args)
+
+
+# ---------------------------------------------------------------------------
+# Entry point.
+# ---------------------------------------------------------------------------
+
+def build_cell(arch, shape, mesh, variant: str = "baseline") -> Cell:
+    """Construct the dry-run Cell for one (arch, shape) on a mesh.
+
+    Struct-level only: parameters and batches are ShapeDtypeStructs with
+    NamedShardings attached — nothing is allocated until dryrun compiles.
+    """
+    if arch.family == "lm":
+        return _build_lm(arch, shape, mesh, variant)
+    if arch.family == "gnn":
+        return _build_gnn(arch, shape, mesh, variant)
+    if arch.family == "recsys":
+        return _build_recsys(arch, shape, mesh, variant)
+    if arch.family == "retrieval":
+        return _build_retrieval(arch, shape, mesh, variant)
+    raise ValueError(f"unknown family {arch.family!r}")

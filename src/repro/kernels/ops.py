@@ -105,6 +105,37 @@ def crumb_score_raw(
     return out[:b, :n]
 
 
+def score_raw(
+    packed: jnp.ndarray,
+    q_rot: jnp.ndarray,
+    *,
+    bits: int,
+    n4_dims: int = 0,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Raw (un-adjusted) scores [b, n] for any bit mode, from raw arrays.
+
+    The single bit-mode dispatch point — score_packed and the sharded scan
+    (repro.dist.retrieval) both go through here, so the packed layout is
+    interpreted identically on every path.
+    """
+    if bits == 4:
+        return nibble_score_raw(packed, q_rot, use_kernel=use_kernel,
+                                interpret=interpret)
+    if bits == 2:
+        return crumb_score_raw(packed, q_rot, use_kernel=use_kernel,
+                               interpret=interpret)
+    if bits == 3:  # mixed [4-bit | 2-bit]
+        b4 = n4_dims // 2
+        raw4 = nibble_score_raw(packed[:, :b4], q_rot[:, :n4_dims],
+                                use_kernel=use_kernel, interpret=interpret)
+        raw2 = crumb_score_raw(packed[:, b4:], q_rot[:, n4_dims:],
+                               use_kernel=use_kernel, interpret=interpret)
+        return raw4 + raw2
+    raise ValueError(f"unsupported bits={bits}")
+
+
 def score_packed(
     q_rot: jnp.ndarray,
     enc: qz.Encoded,
@@ -113,21 +144,6 @@ def score_packed(
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Metric-adjusted scores [b, n] for an Encoded corpus (any bit mode)."""
-    if enc.bits == 4:
-        raw = nibble_score_raw(enc.packed, q_rot, use_kernel=use_kernel, interpret=interpret)
-    elif enc.bits == 2:
-        raw = crumb_score_raw(enc.packed, q_rot, use_kernel=use_kernel, interpret=interpret)
-    elif enc.bits == 3:  # mixed [4-bit | 2-bit]
-        b4 = enc.n4_dims // 2
-        raw4 = nibble_score_raw(
-            enc.packed[:, :b4], q_rot[:, : enc.n4_dims],
-            use_kernel=use_kernel, interpret=interpret,
-        )
-        raw2 = crumb_score_raw(
-            enc.packed[:, b4:], q_rot[:, enc.n4_dims:],
-            use_kernel=use_kernel, interpret=interpret,
-        )
-        raw = raw4 + raw2
-    else:  # pragma: no cover
-        raise ValueError(f"unsupported bits={enc.bits}")
+    raw = score_raw(enc.packed, q_rot, bits=enc.bits, n4_dims=enc.n4_dims,
+                    use_kernel=use_kernel, interpret=interpret)
     return adjust_scores(raw, enc.qnorms, enc.metric)

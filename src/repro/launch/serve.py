@@ -6,6 +6,11 @@ pure function: token -> namespace -> collection -> top-k.  This CLI builds
 
     PYTHONPATH=src python -m repro.launch.serve --n 50000 [--index hnsw]
     PYTHONPATH=src python -m repro.launch.serve --load corpus.mvec
+    PYTHONPATH=src python -m repro.launch.serve --n 200000 --shard
+
+--shard serves the BruteForce scan through repro.dist: the corpus is split
+over every local device and each batch runs the shard_map scan + cross-shard
+merge (identical results to the single-device path, by construction).
 """
 
 from __future__ import annotations
@@ -31,7 +36,14 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--token", default=None, help="tenant token (standalone mode)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the corpus over all local devices (bruteforce)")
     args = ap.parse_args()
+
+    if args.shard and not args.load and args.index != "bruteforce":
+        # Fail before the (possibly minutes-long) index build, not after.
+        raise SystemExit("--shard requires --index bruteforce "
+                         "(or a bruteforce .mvec via --load)")
 
     if args.load:
         index = MonaVec.load(args.load)
@@ -50,11 +62,22 @@ def main() -> None:
             index.save(args.save)
             print(f"[serve] saved {args.save}")
 
+    if args.shard:
+        import jax
+        try:
+            index = index.shard()
+        except TypeError as e:
+            raise SystemExit(f"--shard: {e}")
+        print(f"[serve] sharded {index.n} rows over {jax.device_count()} "
+              f"local device(s) (shard_map scan + cross-shard merge)")
+        dim = index.enc.dim
+    else:
+        dim = index.backend.enc.dim
+
     reg = TenantRegistry()
     ns = reg.put(args.token, "default", index)
     print(f"[serve] namespace={ns!r}")
 
-    dim = index.backend.enc.dim
     total, t0 = 0, time.time()
     for b in range(args.batches):
         if corpus is not None:

@@ -1,0 +1,145 @@
+"""Cross-shard merge contract of repro.dist.retrieval (DESIGN.md §3).
+
+In-process tests run on the (1,1) local mesh; the multi-shard cases spawn a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count so jax sees
+a real multi-device mesh (device count is fixed at first jax import, so it
+cannot be changed inside this process).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as qz
+from repro.data import synthetic as syn
+from repro.dist.partition import pad_rows, partition_bounds, shard_sizes
+from repro.dist.retrieval import (make_scan_topk_f32_shardmap,
+                                  make_scan_topk_shardmap, scan_topk_f32,
+                                  scan_topk_pjit)
+
+
+def local_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestPartition:
+    def test_shard_sizes_and_bounds(self):
+        per, n_pad = shard_sizes(1021, 4)
+        assert per == 256 and n_pad == 1024
+        assert partition_bounds(1021, 4, 0) == (0, 256)
+        assert partition_bounds(1021, 4, 3) == (768, 1021)   # hi clamped
+
+    def test_pad_rows_noop_and_fill(self):
+        x = jnp.ones((3, 2))
+        assert pad_rows(x, 3) is x
+        y = pad_rows(x, 5, fill=7.0)
+        assert y.shape == (5, 2) and float(y[4, 0]) == 7.0
+
+
+class TestSingleShardMerge:
+    """(1,1) mesh: the merge path with exactly one shard."""
+
+    @pytest.mark.parametrize("n", [512, 509])     # divisible / non-divisible
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    def test_quantized_matches_pjit(self, n, metric):
+        corpus = syn.embedding_corpus(11, n, 128)
+        enc = qz.encode(jnp.asarray(corpus), metric=metric, seed=5)
+        q = qz.encode_query(jnp.asarray(corpus[:3] + 0.02), enc)
+        mesh = local_mesh()
+        with mesh:
+            v1, i1 = scan_topk_pjit(q, enc.packed, enc.qnorms,
+                                    metric=metric, k=10)
+            fn = make_scan_topk_shardmap(mesh, metric=metric, k=10)
+            v2, i2 = fn(q, enc.packed, enc.qnorms)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+    def test_mixed_precision_corpus(self):
+        corpus = syn.embedding_corpus(12, 300, 128)
+        enc = qz.encode_mixed(jnp.asarray(corpus), metric="cosine", seed=5,
+                              avg_bits=3.0)
+        q = qz.encode_query(jnp.asarray(corpus[:3]), enc)
+        mesh = local_mesh()
+        with mesh:
+            v1, i1 = scan_topk_pjit(q, enc.packed, enc.qnorms,
+                                    metric="cosine", k=7, bits=enc.bits,
+                                    n4_dims=enc.n4_dims)
+            fn = make_scan_topk_shardmap(mesh, metric="cosine", k=7,
+                                         bits=enc.bits, n4_dims=enc.n4_dims)
+            v2, i2 = fn(q, enc.packed, enc.qnorms)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+    def test_f32_matches(self, rng):
+        cand = rng.randn(333, 64).astype(np.float32)
+        q = rng.randn(2, 64).astype(np.float32)
+        mesh = local_mesh()
+        with mesh:
+            v1, i1 = scan_topk_f32(jnp.asarray(q), jnp.asarray(cand), k=9)
+            v2, i2 = make_scan_topk_f32_shardmap(mesh, k=9)(
+                jnp.asarray(q), jnp.asarray(cand))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+_MULTI_SHARD_SCRIPT = textwrap.dedent("""
+    import jax, numpy as np, jax.numpy as jnp
+    assert jax.device_count() == {devices}, jax.device_count()
+    from repro.core import quantize as qz
+    from repro.core.api import MonaVec
+    from repro.data import synthetic as syn
+    from repro.dist.retrieval import (make_scan_topk_shardmap, scan_topk_pjit,
+                                      make_scan_topk_f32_shardmap,
+                                      scan_topk_f32)
+    from repro.dist.sharded_index import ShardedMonaVec
+
+    mesh = jax.make_mesh(({devices}, 1), ("data", "model"))
+    for n in (1024, 1021):           # divisible and n % shards != 0
+        corpus = syn.embedding_corpus(0, n, 128)
+        enc = qz.encode(jnp.asarray(corpus), metric="cosine", seed=3)
+        q = qz.encode_query(jnp.asarray(corpus[:4] + 0.05), enc)
+        with mesh:
+            v1, i1 = scan_topk_pjit(q, enc.packed, enc.qnorms,
+                                    metric="cosine", k=10)
+            fn = make_scan_topk_shardmap(mesh, metric="cosine", k=10)
+            v2, i2 = fn(q, enc.packed, enc.qnorms)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+        assert int(np.asarray(i2).max()) < n    # padding never surfaces
+
+        idx = MonaVec.build(corpus, metric="cosine")
+        sv, sids = idx.search(corpus[:3], 7)
+        dv, dids = ShardedMonaVec.shard(idx, mesh).search(corpus[:3], 7)
+        np.testing.assert_array_equal(sids, dids)
+        np.testing.assert_allclose(sv, dv, rtol=1e-6)
+
+    rng = np.random.RandomState(0)
+    cand = rng.randn(515, 64).astype(np.float32)   # 515 % 4 != 0
+    user = rng.randn(3, 64).astype(np.float32)
+    with mesh:
+        a = scan_topk_f32(jnp.asarray(user), jnp.asarray(cand), k=5)
+        b = make_scan_topk_f32_shardmap(mesh, k=5)(jnp.asarray(user),
+                                                   jnp.asarray(cand))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    print("MULTI_SHARD_OK")
+""")
+
+
+class TestMultiShardMerge:
+    def test_four_shard_mesh_identical(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4").strip()
+        env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        res = subprocess.run(
+            [sys.executable, "-c", _MULTI_SHARD_SCRIPT.format(devices=4)],
+            env=env, capture_output=True, text=True, timeout=600)
+        assert res.returncode == 0, res.stderr[-3000:]
+        assert "MULTI_SHARD_OK" in res.stdout

@@ -13,7 +13,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import quantize as qz
 from repro.core.scoring import score_f32, topk
 from repro.data import synthetic as syn
-from repro.dist.retrieval import (make_scan_topk_shardmap, scan_topk_f32,
+from repro.dist.retrieval import (make_scan_topk_f32_shardmap,
+                                  make_scan_topk_shardmap, scan_topk_f32,
                                   scan_topk_pjit)
 from repro.train.checkpoint import CheckpointManager
 from repro.train.loop import SimulatedFailure, train
@@ -45,9 +46,6 @@ class TestDistributedRetrieval:
         mesh = local_mesh()
         with mesh:
             v1, i1 = scan_topk_f32(jnp.asarray(user), jnp.asarray(cand), k=5)
-            fn = make_scan_topk_f32_shardmap = None
-        from repro.dist.retrieval import make_scan_topk_f32_shardmap
-        with mesh:
             fn = make_scan_topk_f32_shardmap(mesh, k=5)
             v2, i2 = fn(jnp.asarray(user), jnp.asarray(cand))
         np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
