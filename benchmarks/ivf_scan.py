@@ -1,0 +1,132 @@
+"""IVF candidate-scan: gathered packed scan vs the dequant-einsum baseline.
+
+The pre-refactor ``IvfFlatIndex.search`` dequantized every candidate into a
+``[b, max_cand, d']`` f32 tensor (8x the packed bytes) and ran an einsum over
+it; the gathered scan (``ops.score_gathered``, DESIGN.md §5) scores the same
+candidates straight from packed nibbles.  This benchmark keeps the old path
+alive as a baseline so the speedup stays on the perf record, and adds HNSW
+QPS (whose beam now rides the same primitive).
+
+    PYTHONPATH=src python -m benchmarks.ivf_scan            # paper-scale run
+        [--n 45000] [--dim 1024] [--nlist 64] [--nprobe 8]
+
+Emits the standard ``name,us_per_call,derived`` rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HnswIndex, IvfFlatIndex
+from repro.core import quantize as qz
+from repro.core.allowlist import NEG
+from repro.core.scoring import adjust_scores, topk
+from repro.core.standardize import L2
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+from .common import emit, time_fn
+
+
+def dequant_einsum_search(idx: IvfFlatIndex, queries, k: int, nprobe: int):
+    """The pre-refactor IVF scan, verbatim: per-query host assembly loop,
+    full f32 dequant of the gathered candidates, einsum, post-gather top-k."""
+    queries = jnp.atleast_2d(queries)
+    q_rot = qz.encode_query(queries, idx.enc)
+    metric = idx.enc.metric
+    if metric == L2:
+        cs = (
+            q_rot @ idx.centroids.T
+            - 0.5 * jnp.sum(idx.centroids * idx.centroids, axis=1)[None, :]
+        )
+    else:
+        cs = q_rot @ idx.centroids.T
+    _, probe = topk(cs, min(nprobe, idx.nlist))
+    probe = np.asarray(probe)
+
+    counts = idx.offsets[1:] - idx.offsets[:-1]
+    max_cand = int(np.sort(counts)[::-1][: min(nprobe, idx.nlist)].sum())
+    max_cand = max(max_cand, k)
+    b = queries.shape[0]
+    cand = np.full((b, max_cand), -1, dtype=np.int64)
+    for i in range(b):
+        rows = np.concatenate(
+            [idx.order[idx.offsets[c]: idx.offsets[c + 1]] for c in probe[i]]
+        )
+        cand[i, : len(rows)] = rows
+    cand_j = jnp.asarray(np.maximum(cand, 0))
+    valid = jnp.asarray(cand >= 0)
+
+    packed_c = jnp.take(idx.enc.packed, cand_j, axis=0)      # [b, mc, bytes]
+    qn_c = jnp.take(idx.enc.qnorms, cand_j, axis=0)
+    deq = qz.decode(
+        dataclasses.replace(idx.enc, packed=packed_c.reshape(-1, packed_c.shape[-1]))
+    ).reshape(b, max_cand, -1)                               # [b, mc, d'] f32
+    raw = jnp.einsum("bd,bmd->bm", q_rot, deq)
+    scores = jnp.where(valid, adjust_scores(raw, qn_c, metric), NEG)
+    vals, pos = topk(scores, min(k, max_cand))
+    rows = np.take_along_axis(cand, np.asarray(pos), axis=1)
+    return np.asarray(vals), idx.ids[np.maximum(rows, 0)]
+
+
+def bench_ivf_scan(n: int = 12_000, dim: int = 512, nlist: int = 32,
+                   nprobe: int = 8, batch_q: int = 16, k: int = 10) -> None:
+    corpus = embedding_corpus(0, n, dim)
+    queries = jnp.asarray(queries_from_corpus(corpus, 1, batch_q))
+    idx = IvfFlatIndex.build(jnp.asarray(corpus), metric="cosine", nlist=nlist)
+
+    us_old = time_fn(lambda: dequant_einsum_search(idx, queries, k, nprobe))
+    us_new = time_fn(lambda: idx.search(queries, k, nprobe=nprobe))
+    _, ids_old = dequant_einsum_search(idx, queries, k, nprobe)
+    _, ids_new = idx.search(queries, k, nprobe=nprobe)
+    overlap = float(np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(ids_old.astype(np.int64), ids_new.astype(np.int64))
+    ]))
+
+    tag = f"{n}x{dim}_nlist{nlist}_np{nprobe}"
+    emit(f"ivf_scan_dequant_einsum_{tag}", us_old,
+         f"{batch_q / (us_old / 1e6):.0f} QPS")
+    emit(f"ivf_scan_gathered_{tag}", us_new,
+         f"{batch_q / (us_new / 1e6):.0f} QPS; speedup={us_old / us_new:.2f}x; "
+         f"top{k}_overlap={overlap:.2f}")
+
+
+def bench_hnsw_qps(n: int = 4_000, dim: int = 256, batch_q: int = 16,
+                   k: int = 10, ef: int = 64) -> None:
+    corpus = embedding_corpus(3, n, dim)
+    queries = jnp.asarray(queries_from_corpus(corpus, 4, batch_q))
+    idx = HnswIndex.build(jnp.asarray(corpus), metric="cosine", m=16,
+                          ef_construction=64)
+    us = time_fn(lambda: idx.search(queries, k, ef=ef))
+    emit(f"hnsw_gathered_beam_{n}x{dim}_ef{ef}", us,
+         f"{batch_q / (us / 1e6):.0f} QPS")
+
+
+def emit_benchmark() -> None:
+    """Hook for benchmarks.run (small shapes to keep the sweep fast)."""
+    bench_ivf_scan()
+    bench_hnsw_qps()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=45_000)
+    ap.add_argument("--dim", type=int, default=1024)
+    ap.add_argument("--nlist", type=int, default=64)
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--batch-q", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--hnsw-n", type=int, default=8_000)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_ivf_scan(args.n, args.dim, args.nlist, args.nprobe, args.batch_q,
+                   args.k)
+    bench_hnsw_qps(args.hnsw_n)
+
+
+if __name__ == "__main__":
+    main()

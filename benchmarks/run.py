@@ -15,6 +15,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import dist_scan
+    from . import ivf_scan
     from . import paper_tables as pt
     from . import roofline
 
@@ -27,6 +28,7 @@ def main() -> None:
         ("table6_cross_kernel_reproducibility", pt.table6_cross_kernel_reproducibility),
         ("bench_quantized_kv_decode", pt.bench_quantized_kv_decode),
         ("dist_scan", dist_scan.emit_benchmark),
+        ("ivf_scan", ivf_scan.emit_benchmark),
         ("roofline", roofline.emit_benchmark),
     ]
     print("name,us_per_call,derived")

@@ -92,9 +92,20 @@ class MonaVec:
         k: int = 10,
         *,
         allow: Optional[Allowlist] = None,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
         **kwargs,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        return self.backend.search(jnp.asarray(queries), k, allow=allow, **kwargs)
+        """Top-k over the active backend.  Every backend honors the same
+        kernel-dispatch contract: ``use_kernel=None`` picks the Pallas kernel
+        on TPU and the pure-jnp path elsewhere; ``use_kernel=True`` with
+        ``interpret=True`` runs the kernel body in interpret mode (validation,
+        bit-identical to the jnp path); backend-specific knobs (``nprobe``,
+        ``ef``) ride in ``**kwargs``."""
+        return self.backend.search(
+            jnp.asarray(queries), k, allow=allow, use_kernel=use_kernel,
+            interpret=interpret, **kwargs,
+        )
 
     # -- persistence -----------------------------------------------------------
 

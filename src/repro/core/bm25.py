@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,9 +74,26 @@ class Bm25Index:
             scores[rows] += self.idf(term) * tf * (self.k1 + 1) / denom
         return scores
 
-    def search(self, query: str, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    def search(
+        self,
+        query: str,
+        k: int,
+        *,
+        allow_mask: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k rows by BM25 score; deterministic sort by (-score, row).
+
+        ``allow_mask`` is the §3.5 pre-filter: disallowed rows are excluded
+        BEFORE the top-k, so a selective allowlist still yields exactly
+        min(k, n_allowed) rows — never a post-hoc-trimmed shortlist.
+        """
         scores = self.score(query)
-        k = min(k, self.n_docs)
-        # Deterministic: sort by (-score, row).
-        order = np.lexsort((np.arange(self.n_docs), -scores))[:k]
-        return scores[order], order
+        rows = (
+            np.arange(self.n_docs)
+            if allow_mask is None
+            else np.nonzero(allow_mask)[0]
+        )
+        k = min(k, len(rows))
+        sub = scores[rows]
+        order = np.lexsort((rows, -sub))[:k]
+        return sub[order], rows[order]

@@ -51,11 +51,13 @@ class BruteForceIndex:
         *,
         allow: Optional[Allowlist] = None,
         use_kernel: Optional[bool] = None,   # None = backend dispatch
+        interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (scores [b,k], external_ids [b,k]).  Deterministic:
         stable top-k (lower row index wins ties)."""
         q_rot = qz.encode_query(jnp.atleast_2d(queries), self.enc)
-        scores = ops.score_packed(q_rot, self.enc, use_kernel=use_kernel)
+        scores = ops.score_packed(q_rot, self.enc, use_kernel=use_kernel,
+                                  interpret=interpret)
         scores = apply_optional(scores, allow)
         vals, idx = topk(scores, min(k, self.enc.n))
         return np.asarray(vals), self.ids[np.asarray(idx)]

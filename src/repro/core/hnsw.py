@@ -12,9 +12,10 @@ Paper-faithful properties reproduced here:
     ``<q,v> - ||v||^2 / 2`` (monotone in -||q-v||^2); plain dot product gives
     the wrong topology (0.31 -> 0.62 Recall@10 in the paper).
   * **Auto-M** (contribution #4): M=32 below 1e6 vectors, 64 at or above.
-  * **4-bit search**: query-time scoring uses the packed Lloyd-Max codes via
-    the same dequant path as BruteForce; only ranking noise, no structural
-    damage.
+  * **4-bit search**: query-time scoring reads the packed Lloyd-Max codes via
+    the gathered candidate scan (``ops.score_gathered``, DESIGN.md §5) — the
+    same primitive as the IVF probe scan, so every backend interprets packed
+    bytes identically; only ranking noise, no structural damage.
 
 The query-time beam search is a fixed-shape ``lax.while_loop`` (jit/TPU
 friendly): a single (score, id, expanded) frontier of width ef, a visited
@@ -33,10 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import lloydmax, quantize as qz
+from . import quantize as qz
 from .allowlist import NEG, Allowlist
 from .rhdh import rhdh_apply
-from .scoring import adjust_scores
 from .standardize import COSINE, L2, prepare
 
 
@@ -202,9 +202,22 @@ class HnswIndex:
         *,
         ef: int = 64,
         allow: Optional[Allowlist] = None,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Beam-search the graph, scoring packed codes via the gathered scan.
+
+        ``ef`` is the level-0 beam width; because only beam members can enter
+        the result set, the beam auto-widens to ``max(ef, k)`` so asking for
+        ``k`` results with a narrow default beam never silently truncates to
+        ``ef`` rows (a caller-set ``ef`` above ``k`` is kept as given).
+        ``use_kernel``/``interpret`` dispatch exactly like ``score_packed``.
+        """
         queries = jnp.atleast_2d(queries)
         q_rot = qz.encode_query(queries, self.enc)
+        from ..kernels import ops
+        use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
+        ef = max(ef, k)
         allow_mask = (
             jnp.ones((self.enc.n,), bool) if allow is None else jnp.asarray(allow.mask)
         )
@@ -217,9 +230,13 @@ class HnswIndex:
             allow_mask,
             entry=self.entry_point,
             ef=ef,
-            k=min(k, ef),
+            k=k,
             metric=self.enc.metric,
+            bits=self.enc.bits,
+            n4_dims=self.enc.n4_dims,
             max_level=self.max_level,
+            use_kernel=use_kernel,
+            interpret=interpret,
         )
         rows = np.asarray(rows)
         out_ids = self.ids[np.maximum(rows, 0)].copy()
@@ -231,96 +248,134 @@ class HnswIndex:
 # Jitted beam search.
 # ---------------------------------------------------------------------------
 
-def _score_rows(q_rot, packed, qnorms, rows, metric):
-    """4-bit score of selected rows against one rotated query (fixed order)."""
-    pr = jnp.take(packed, jnp.maximum(rows, 0), axis=0)        # [r, bytes]
-    codes = qz.unpack_4bit(pr)
-    deq = lloydmax.dequantize(codes, 4)
-    raw = deq @ q_rot
-    return adjust_scores(raw, jnp.take(qnorms, jnp.maximum(rows, 0)), metric)
-
-
 @functools.partial(
-    jax.jit, static_argnames=("entry", "ef", "k", "metric", "max_level")
+    jax.jit,
+    static_argnames=("entry", "ef", "k", "metric", "bits", "n4_dims",
+                     "max_level", "use_kernel", "interpret"),
 )
 def _hnsw_search_jit(
-    q_rot, packed, qnorms, nbr0, nbr_hi, allow_mask, *, entry, ef, k, metric, max_level
+    q_rot, packed, qnorms, nbr0, nbr_hi, allow_mask, *, entry, ef, k, metric,
+    bits, n4_dims, max_level, use_kernel, interpret,
 ):
+    """Lock-step batched beam search over the whole query batch.
+
+    Every scoring step is ONE batched ``ops.score_gathered`` call over the
+    ``[b, rows]`` candidate matrix (the same gathered-scan primitive and tile
+    decomposition as the IVF probe scan — DESIGN.md §5), instead of a vmapped
+    per-query scan.  Queries whose loop has converged are frozen via masked
+    state updates, reproducing per-query while-loop semantics exactly.
+    """
+    from ..kernels import ops
+
     n = packed.shape[0]
+    b = q_rot.shape[0]
+    barange = jnp.arange(b)
 
-    def one_query(q):
-        # --- Greedy descent over upper layers (ef=1). ---
-        ep = jnp.int32(entry)
-        for level in range(max_level, 0, -1):
-            table = nbr_hi[level - 1]
+    def score_rows(rows):
+        """Adjusted scores [b, r] of clamped rows for ALL queries (converged
+        ones included — freezing happens in the callers' state updates);
+        callers mask invalid slots."""
+        return ops.score_gathered(
+            packed, q_rot, jnp.maximum(rows, 0),
+            valid=jnp.ones(rows.shape, bool),
+            bits=bits, n4_dims=n4_dims, qnorms=qnorms, metric=metric,
+            use_kernel=use_kernel, interpret=interpret,
+        )
 
-            def cond(state):
-                _, _, improved = state
-                return improved
-
-            def body(state):
-                cur, cur_s, _ = state
-                nbrs = table[cur]                                  # [M]
-                valid = nbrs >= 0
-                ss = jnp.where(valid, _score_rows(q, packed, qnorms, nbrs, metric), NEG)
-                j = jnp.argmax(ss)
-                better = ss[j] > cur_s
-                return (
-                    jnp.where(better, nbrs[j], cur),
-                    jnp.where(better, ss[j], cur_s),
-                    better,
-                )
-
-            s0 = _score_rows(q, packed, qnorms, ep[None], metric)[0]
-            ep, _, _ = jax.lax.while_loop(cond, body, (ep, s0, jnp.bool_(True)))
-
-        # --- Level-0 beam of width ef. ---
-        # Pre-filter semantics over a graph: the beam routes over ALL nodes
-        # (restricting traversal would disconnect the graph for selective
-        # allowlists), but only allowed nodes enter the RESULT set — i.e. the
-        # allowlist is applied before ranking, never as a post-filter.
-        m0 = nbr0.shape[1]
-        s_entry = _score_rows(q, packed, qnorms, ep[None], metric)[0]
-        scores = jnp.full((ef,), NEG, jnp.float32).at[0].set(s_entry)
-        ids_ = jnp.full((ef,), -1, jnp.int32).at[0].set(ep)
-        expanded = jnp.zeros((ef,), bool)
-        visited = jnp.zeros((n,), bool).at[ep].set(True)
-        r_scores = jnp.where(allow_mask[ep], scores, NEG)[:ef]     # results
-        r_ids = jnp.where(allow_mask[ep], ids_, -1)[:ef]
+    # --- Greedy descent over upper layers (ef=1). ---
+    ep = jnp.full((b,), entry, jnp.int32)
+    for level in range(max_level, 0, -1):
+        table = nbr_hi[level - 1]
 
         def cond(state):
-            scores, ids_, expanded, visited, r_scores, r_ids = state
-            frontier = (~expanded) & (ids_ >= 0)
-            return jnp.any(frontier)
+            _, _, improved = state
+            return jnp.any(improved)
 
         def body(state):
-            scores, ids_, expanded, visited, r_scores, r_ids = state
-            frontier = (~expanded) & (ids_ >= 0)
-            sel = jnp.argmax(jnp.where(frontier, scores, NEG))
-            expanded = expanded.at[sel].set(True)
-            nbrs = nbr0[ids_[sel]]                                 # [2M]
-            nv = jnp.maximum(nbrs, 0)
-            fresh = (nbrs >= 0) & (~visited[nv])
-            visited = visited.at[nv].max(fresh)
-            ns_all = _score_rows(q, packed, qnorms, nbrs, metric)
-            ns = jnp.where(fresh, ns_all, NEG)
-            # Beam merge: existing beam first, then new candidates (stable).
-            all_s = jnp.concatenate([scores, ns])
-            all_i = jnp.concatenate([ids_, nbrs])
-            all_e = jnp.concatenate([expanded, jnp.zeros((m0,), bool)])
-            top_s, pos = jax.lax.top_k(all_s, ef)
-            # Result merge: allowed fresh candidates only.
-            ns_res = jnp.where(fresh & allow_mask[nv], ns_all, NEG)
-            rs = jnp.concatenate([r_scores, ns_res])
-            ri = jnp.concatenate([r_ids, nbrs])
-            r_top, r_pos = jax.lax.top_k(rs, ef)
-            return top_s, all_i[pos], all_e[pos], visited, r_top, ri[r_pos]
+            cur, cur_s, improved = state
+            nbrs = table[cur]                                  # [b, M]
+            ss = jnp.where(nbrs >= 0, score_rows(nbrs), NEG)
+            j = jnp.argmax(ss, axis=1)                         # [b]
+            best_s = ss[barange, j]
+            # A query stops improving once its best neighbor doesn't beat the
+            # current score; frozen queries never restart (& improved).
+            better = (best_s > cur_s) & improved
+            return (
+                jnp.where(better, nbrs[barange, j], cur),
+                jnp.where(better, best_s, cur_s),
+                better,
+            )
 
-        scores, ids_, expanded, visited, r_scores, r_ids = jax.lax.while_loop(
-            cond, body, (scores, ids_, expanded, visited, r_scores, r_ids)
+        s0 = score_rows(ep[:, None])[:, 0]
+        ep, _, _ = jax.lax.while_loop(
+            cond, body, (ep, s0, jnp.ones((b,), bool))
         )
-        r_ids = jnp.where(r_scores > NEG, r_ids, -1)
-        top_s, pos = jax.lax.top_k(r_scores, k)
-        return top_s, r_ids[pos]
 
-    return jax.vmap(one_query)(q_rot)
+    # --- Level-0 beam of width ef. ---
+    # Pre-filter semantics over a graph: the beam routes over ALL nodes
+    # (restricting traversal would disconnect the graph for selective
+    # allowlists), but only allowed nodes enter the RESULT set — i.e. the
+    # allowlist is applied before ranking, never as a post-filter.
+    m0 = nbr0.shape[1]
+    s_entry = score_rows(ep[:, None])[:, 0]              # [b]
+    scores = jnp.full((b, ef), NEG, jnp.float32).at[:, 0].set(s_entry)
+    ids_ = jnp.full((b, ef), -1, jnp.int32).at[:, 0].set(ep)
+    expanded = jnp.zeros((b, ef), bool)
+    visited = jnp.zeros((b, n), bool).at[barange, ep].set(True)
+    allow_ep = allow_mask[ep][:, None]                          # [b, 1]
+    r_scores = jnp.where(allow_ep, scores, NEG)                 # results
+    r_ids = jnp.where(allow_ep, ids_, -1)
+
+    def cond(state):
+        scores, ids_, expanded, visited, r_scores, r_ids = state
+        frontier = (~expanded) & (ids_ >= 0)
+        return jnp.any(frontier)
+
+    def body(state):
+        scores, ids_, expanded, visited, r_scores, r_ids = state
+        frontier = (~expanded) & (ids_ >= 0)
+        active = jnp.any(frontier, axis=1)                      # [b]
+        sel = jnp.argmax(jnp.where(frontier, scores, NEG), axis=1)
+        expanded = expanded | (
+            jax.nn.one_hot(sel, ef, dtype=bool) & active[:, None]
+        )
+        nbrs = nbr0[jnp.maximum(ids_[barange, sel], 0)]         # [b, 2M]
+        nv = jnp.maximum(nbrs, 0)
+        fresh = (
+            (nbrs >= 0)
+            & (~jnp.take_along_axis(visited, nv, axis=1))
+            & active[:, None]
+        )
+        visited = visited.at[barange[:, None], nv].max(fresh)
+        ns_all = score_rows(nbrs)
+        ns = jnp.where(fresh, ns_all, NEG)
+        # Beam merge: existing beam first, then new candidates (stable).
+        all_s = jnp.concatenate([scores, ns], axis=1)
+        all_i = jnp.concatenate([ids_, nbrs], axis=1)
+        all_e = jnp.concatenate(
+            [expanded, jnp.zeros((b, m0), bool)], axis=1
+        )
+        top_s, pos = jax.lax.top_k(all_s, ef)
+        # Result merge: allowed fresh candidates only.
+        ns_res = jnp.where(fresh & jnp.take(allow_mask, nv), ns_all, NEG)
+        rs = jnp.concatenate([r_scores, ns_res], axis=1)
+        ri = jnp.concatenate([r_ids, nbrs], axis=1)
+        r_top, r_pos = jax.lax.top_k(rs, ef)
+        # Freeze converged queries: their state must not churn (the top_k
+        # re-sort above would otherwise reorder equal-score beams).
+        keep = active[:, None]
+        return (
+            jnp.where(keep, top_s, scores),
+            jnp.where(keep, jnp.take_along_axis(all_i, pos, axis=1), ids_),
+            jnp.where(keep, jnp.take_along_axis(all_e, pos, axis=1), expanded),
+            visited,
+            jnp.where(keep, r_top, r_scores),
+            jnp.where(keep, jnp.take_along_axis(ri, r_pos, axis=1), r_ids),
+        )
+
+    scores, ids_, expanded, visited, r_scores, r_ids = jax.lax.while_loop(
+        cond, body, (scores, ids_, expanded, visited, r_scores, r_ids)
+    )
+    r_ids = jnp.where(r_scores > NEG, r_ids, -1)
+    top_s, pos = jax.lax.top_k(r_scores, k)
+    return top_s, jnp.take_along_axis(r_ids, pos, axis=1)

@@ -52,9 +52,12 @@ class HybridIndex:
     ) -> Tuple[np.ndarray, np.ndarray]:
         fetch_k = fetch_k or max(2 * k, 20)
         _, dense_ids = self.dense.search(query_vec, fetch_k, allow=allow)
-        _, sparse_rows = self.sparse.search(query_text, fetch_k)
+        # Both channels pre-filter (§3.5): the BM25 top-k runs over allowed
+        # rows only, so selective allowlists still surface fetch_k sparse
+        # candidates instead of a post-filtered remnant.
+        _, sparse_rows = self.sparse.search(
+            query_text, fetch_k,
+            allow_mask=None if allow is None else allow.mask,
+        )
         sparse_ids = self.dense.ids[sparse_rows]
-        if allow is not None:
-            keep = allow.mask[sparse_rows]
-            sparse_ids = sparse_ids[keep]
         return rrf_fuse([dense_ids[0], sparse_ids], k=rrf_k, top_k=k)

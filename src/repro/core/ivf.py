@@ -10,6 +10,14 @@ Clustering runs in ROTATED f32 space: the rotation is orthogonal, so cluster
 geometry is identical to input space, and query/centroid scoring then shares
 the rotated query with the packed scan.  Deterministic: seeded farthest-point
 init, fixed iteration count, stable argmin tie-breaks.
+
+The probe scan (DESIGN.md §5) runs over PACKED bytes end to end: the CSR
+(order, offsets) arrays are staged on device once at build/load, per-query
+candidates assemble as a vectorized ragged-concat into a tight fixed-shape
+[b, max_cand] matrix (-1 tail), and scoring goes through
+``ops.score_gathered`` — compare-select dequant fused into the dot, never a
+``[b, max_cand, d']`` f32 materialization.  The allowlist masks scores
+before the top-k (§3.5 pre-filter).
 """
 
 from __future__ import annotations
@@ -82,6 +90,60 @@ def _seeded_init(x: np.ndarray, k: int, seed: int, metric: str) -> np.ndarray:
     return x[np.asarray(chosen)]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nprobe", "max_cand", "metric", "bits", "n4_dims",
+                     "use_kernel", "interpret"),
+)
+def _ivf_search_jit(
+    q_rot, centroids, order, offsets, packed, qnorms, allow_mask, *,
+    k, nprobe, max_cand, metric, bits, n4_dims, use_kernel, interpret,
+):
+    """Fixed-shape probe + gathered scan + pre-filtered top-k, one jit call.
+
+    Candidate assembly is a vectorized ragged-concat straight off the CSR
+    (order, offsets) arrays: output slot j of query b belongs to the probed
+    cell whose cumulative length first exceeds j (a searchsorted), at offset
+    ``j - cum[cell-1]`` within it.  This fills ``max_cand`` = the sum of the
+    nprobe largest cell sizes (the tight per-query bound, valid candidates
+    contiguous in probe order, -1 tail) with no per-query host loop and no
+    O(nlist * max_cell) padded table — a skewed clustering costs padding
+    proportional to the skew of the probed cells only.
+    """
+    if metric == L2:
+        cs = (
+            q_rot @ centroids.T
+            - 0.5 * jnp.sum(centroids * centroids, axis=1)[None, :]
+        )
+    else:
+        cs = q_rot @ centroids.T
+    _, probe = topk(cs, nprobe)                           # [b, nprobe]
+    lens = (offsets[1:] - offsets[:-1])[probe]            # [b, nprobe]
+    cum = jnp.cumsum(lens, axis=1)                        # [b, nprobe]
+    width = max(max_cand, k)   # tiny corpus: keep the [b, k] output contract
+    slot = jnp.arange(width, dtype=offsets.dtype)         # [width]
+    cell = jax.vmap(
+        lambda c: jnp.searchsorted(c, slot, side="right")
+    )(cum)                                                # [b, width]
+    cell_c = jnp.minimum(cell, nprobe - 1)
+    prev = jnp.where(cell_c > 0,
+                     jnp.take_along_axis(cum, jnp.maximum(cell_c - 1, 0), axis=1),
+                     0)
+    src = jnp.take_along_axis(offsets[probe], cell_c, axis=1) + (slot[None] - prev)
+    valid = slot[None] < cum[:, -1:]
+    cand = jnp.where(valid, order[jnp.minimum(src, order.shape[0] - 1)], -1)
+    scores = ops.score_gathered(
+        packed, q_rot, cand, bits=bits, n4_dims=n4_dims, qnorms=qnorms,
+        metric=metric, allow_mask=allow_mask, use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    vals, pos = topk(scores, min(k, cand.shape[1]))
+    rows = jnp.take_along_axis(cand, pos, axis=1)
+    # Same no-result contract as HNSW: any NEG slot (padding, or fewer than k
+    # allowed candidates) is marked -1, never a real row.
+    return vals, jnp.where(vals > NEG, rows, -1)
+
+
 @dataclasses.dataclass
 class IvfFlatIndex:
     enc: qz.Encoded
@@ -90,6 +152,14 @@ class IvfFlatIndex:
     order: np.ndarray               # [n] row permutation grouping clusters
     offsets: np.ndarray             # [nlist+1] CSR offsets into ``order``
     nlist: int
+    # CSR staged on device (int32) once per index — build AND load — so the
+    # jit'd candidate assembly never re-uploads or loops per search call.
+    order_j: jnp.ndarray = dataclasses.field(init=False, repr=False)
+    offsets_j: jnp.ndarray = dataclasses.field(init=False, repr=False)
+
+    def __post_init__(self):
+        self.order_j = jnp.asarray(self.order, jnp.int32)
+        self.offsets_j = jnp.asarray(self.offsets, jnp.int32)
 
     @staticmethod
     def build(
@@ -130,50 +200,33 @@ class IvfFlatIndex:
         *,
         nprobe: int = 8,
         allow: Optional[Allowlist] = None,
-        use_kernel: bool = True,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Probe the nprobe nearest cells, scan their lists with the packed
-        kernel.  Candidate sets are padded to a fixed size so the scoring is
-        a single fixed-shape jit call per batch."""
+        """Probe the nprobe nearest cells and scan their lists with the packed
+        gathered-candidate scan (``ops.score_gathered``): candidates stay
+        4/2-bit until the fused dequant-dot, the allowlist masks scores before
+        the top-k, and the whole probe->scan->top-k is one fixed-shape jit
+        call per (batch, nprobe, k).  ``use_kernel``/``interpret`` dispatch
+        exactly like ``score_packed`` (None = kernel on TPU, jnp elsewhere).
+        Slots with no admissible candidate come back with id
+        0xFFFFFFFFFFFFFFFF and a NEG score (the HNSW sentinel contract).
+        """
         queries = jnp.atleast_2d(queries)
         q_rot = qz.encode_query(queries, self.enc)
-        metric = self.enc.metric
-        if metric == L2:
-            cs = (
-                q_rot @ self.centroids.T
-                - 0.5 * jnp.sum(self.centroids * self.centroids, axis=1)[None, :]
-            )
-        else:
-            cs = q_rot @ self.centroids.T
-        _, probe = topk(cs, min(nprobe, self.nlist))          # [b, nprobe]
-        probe = np.asarray(probe)
-
-        counts = self.offsets[1:] - self.offsets[:-1]
-        max_cand = int(np.sort(counts)[::-1][: min(nprobe, self.nlist)].sum())
-        max_cand = max(max_cand, k)
-        b = queries.shape[0]
-        cand = np.full((b, max_cand), -1, dtype=np.int64)
-        for i in range(b):
-            rows = np.concatenate(
-                [self.order[self.offsets[c]: self.offsets[c + 1]] for c in probe[i]]
-            )
-            cand[i, : len(rows)] = rows
-        cand_j = jnp.asarray(np.maximum(cand, 0))
-        valid = jnp.asarray(cand >= 0)
-
-        # Gather candidate rows and score them (per-query candidate matrices).
-        packed_c = jnp.take(self.enc.packed, cand_j, axis=0)   # [b, mc, bytes]
-        qn_c = jnp.take(self.enc.qnorms, cand_j, axis=0)       # [b, mc]
-        deq = qz.decode(
-            dataclasses.replace(self.enc, packed=packed_c.reshape(-1, packed_c.shape[-1]))
-        ).reshape(b, max_cand, -1)
-        raw = jnp.einsum("bd,bmd->bm", q_rot, deq)
-        from .scoring import adjust_scores
-
-        scores = adjust_scores(raw, qn_c, metric)
-        if allow is not None:
-            scores = jnp.where(jnp.asarray(allow.mask)[cand_j], scores, NEG)
-        scores = jnp.where(valid, scores, NEG)
-        vals, pos = topk(scores, min(k, max_cand))
-        rows = np.take_along_axis(cand, np.asarray(pos), axis=1)
-        return np.asarray(vals), self.ids[np.maximum(rows, 0)]
+        use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
+        allow_mask = None if allow is None else jnp.asarray(allow.mask)
+        nprobe = min(nprobe, self.nlist)
+        counts = np.asarray(self.offsets[1:] - self.offsets[:-1])
+        max_cand = int(np.sort(counts)[::-1][:nprobe].sum())
+        vals, rows = _ivf_search_jit(
+            q_rot, self.centroids, self.order_j, self.offsets_j,
+            self.enc.packed, self.enc.qnorms, allow_mask,
+            k=k, nprobe=nprobe, max_cand=max_cand, metric=self.enc.metric,
+            bits=self.enc.bits, n4_dims=self.enc.n4_dims,
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        rows = np.asarray(rows)
+        out_ids = self.ids[np.maximum(rows, 0)].copy()
+        out_ids[rows < 0] = np.uint64(0xFFFFFFFFFFFFFFFF)  # sentinel: no result
+        return np.asarray(vals), out_ids

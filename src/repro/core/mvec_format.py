@@ -108,8 +108,14 @@ def load(path: str) -> MvecFile:
     ) = struct.unpack("<4sIIBBBBQQIIIBB10s", data[:HEADER_LEN])
     if magic != MAGIC:
         raise ValueError(f"not a .mvec file (magic={magic!r})")
-    if not (1 <= version <= 7):
-        raise ValueError(f"unsupported .mvec version {version}")
+    # Versions 1-5 predate this header layout entirely — parsing them against
+    # the v6 offsets would silently misread every field, so reject anything
+    # outside the two layouts we actually implement.
+    if version not in (6, 7):
+        raise ValueError(
+            f"unsupported .mvec version {version} (this reader supports "
+            f"versions 6 and 7)"
+        )
     buf = io.BytesIO(data[HEADER_LEN:])
     std = None
     if has_std:

@@ -38,7 +38,9 @@ from jax.experimental import pallas as pl
 
 from repro.core import lloydmax
 
-# The frozen 4-bit Lloyd-Max table, baked in as Python floats (immediates).
+# The frozen Lloyd-Max tables, baked in as Python floats (immediates).
+# Shared with the gathered candidate-scan kernel (gather_dot.py) so every
+# scan path dequantizes through the exact same values.
 _TABLE4: Tuple[float, ...] = tuple(float(v) for v in lloydmax.CENTROIDS_4BIT)
 _TABLE2: Tuple[float, ...] = tuple(float(v) for v in lloydmax.CENTROIDS_2BIT)
 
@@ -46,7 +48,10 @@ _TABLE2: Tuple[float, ...] = tuple(float(v) for v in lloydmax.CENTROIDS_2BIT)
 def _dequant_select(codes: jnp.ndarray, table: Tuple[float, ...]) -> jnp.ndarray:
     """Compare-select dequantization: no gather, pure VPU select tree.
 
-    Fixed summation order over the table -> deterministic.
+    Fixed summation order over the table -> deterministic.  Value-identical
+    to ``lloydmax.dequantize`` (a single table term is selected; adding the
+    zero terms is exact), which is what lets the full-scan and gathered-scan
+    kernels share it with the pure-jnp references.
     """
     vals = jnp.zeros(codes.shape, jnp.float32)
     for k, ck in enumerate(table):

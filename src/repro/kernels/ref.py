@@ -38,6 +38,33 @@ def mixed_dot_ref(
     return s4 + s2
 
 
+def gather_nibble_dot_ref(
+    packed: jnp.ndarray, q_rot: jnp.ndarray, cand: jnp.ndarray
+) -> jnp.ndarray:
+    """Gathered candidate scoring oracle: [n, d/2] packed, [b, d] queries,
+    [b, mc] row indices -> [b, mc] raw scores of row cand[b, i] vs query b."""
+    pr = jnp.take(packed, cand, axis=0)               # [b, mc, d/2]
+    deq = lloydmax.dequantize(unpack_4bit(pr), 4)     # [b, mc, d]
+    return jnp.einsum("bmd,bd->bm", deq, q_rot)
+
+
+def gather_crumb_dot_ref(
+    packed: jnp.ndarray, q_rot: jnp.ndarray, cand: jnp.ndarray
+) -> jnp.ndarray:
+    pr = jnp.take(packed, cand, axis=0)               # [b, mc, d/4]
+    deq = lloydmax.dequantize(unpack_2bit(pr), 2)
+    return jnp.einsum("bmd,bd->bm", deq, q_rot)
+
+
+def gather_mixed_dot_ref(
+    packed: jnp.ndarray, q_rot: jnp.ndarray, cand: jnp.ndarray, n4_dims: int
+) -> jnp.ndarray:
+    b4 = n4_dims // 2
+    s4 = gather_nibble_dot_ref(packed[:, :b4], q_rot[:, :n4_dims], cand)
+    s2 = gather_crumb_dot_ref(packed[:, b4:], q_rot[:, n4_dims:], cand)
+    return s4 + s2
+
+
 def hadamard_ref(x: jnp.ndarray) -> jnp.ndarray:
     """Direct H @ x on the last axis (unnormalized), O(d^2) oracle."""
     d = x.shape[-1]

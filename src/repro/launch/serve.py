@@ -38,12 +38,36 @@ def main() -> None:
     ap.add_argument("--token", default=None, help="tenant token (standalone mode)")
     ap.add_argument("--shard", action="store_true",
                     help="shard the corpus over all local devices (bruteforce)")
+    ap.add_argument("--use-kernel", default="auto", choices=["auto", "on", "off"],
+                    help="scoring dispatch: auto = Pallas kernel on TPU / "
+                         "pure-jnp elsewhere; on/off force it (all backends)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the Pallas kernel in interpret mode (validation)")
     args = ap.parse_args()
+    use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
+    interpret = True if args.interpret else None
+    if args.interpret and use_kernel is None:
+        use_kernel = True   # interpret mode validates the KERNEL body; off-TPU
+                            # dispatch would otherwise skip it silently
+    if args.interpret and use_kernel is False:
+        raise SystemExit("--interpret requires the kernel path "
+                         "(drop --use-kernel off)")
+    if args.use_kernel == "on" and not args.interpret:
+        import jax
+        if jax.default_backend() != "tpu":
+            # resolve_dispatch will fill interpret=True off-TPU: say so
+            # instead of reporting per-grid-cell emulation QPS as kernel QPS.
+            print("[serve] WARNING: no TPU backend — forced kernel runs in "
+                  "interpret mode (validation speed, not production)")
 
     if args.shard and not args.load and args.index != "bruteforce":
         # Fail before the (possibly minutes-long) index build, not after.
         raise SystemExit("--shard requires --index bruteforce "
                          "(or a bruteforce .mvec via --load)")
+    if args.shard and (use_kernel is not None or interpret is not None):
+        # The shard_map scan carries its own dispatch; don't pretend to
+        # force a path we would silently ignore.
+        raise SystemExit("--use-kernel/--interpret do not apply to --shard")
 
     if args.load:
         index = MonaVec.load(args.load)
@@ -86,7 +110,11 @@ def main() -> None:
             rng = np.random.RandomState(100 + b)
             q = rng.randn(args.batch_size, dim).astype(np.float32)
         idx = reg.get(args.token, "default")
-        scores, ids = idx.search(q, k=args.k)
+        if args.shard:   # sharded scan has its own shard_map dispatch
+            scores, ids = idx.search(q, k=args.k)
+        else:
+            scores, ids = idx.search(q, k=args.k, use_kernel=use_kernel,
+                                     interpret=interpret)
         total += len(q)
     dt = time.time() - t0
     print(f"[serve] {total} queries in {dt:.2f}s -> {total / dt:.0f} QPS "

@@ -1,0 +1,202 @@
+"""Gathered candidate-scan contract (DESIGN.md §5).
+
+Pins the three properties the IVF/HNSW refactor restored:
+  * ``use_kernel`` is honored — the jnp path and the interpret-mode kernel
+    path return bit-identical (scores, ids) for both backends;
+  * the search path never materializes a dequantized f32 copy of the
+    candidates (``quantize.decode`` is dead code during search);
+  * the gathered scan matches the old dequant-einsum scoring numerically.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Allowlist, HnswIndex, IvfFlatIndex
+from repro.core import quantize as qz
+from repro.core.allowlist import NEG
+from repro.core.scoring import adjust_scores, topk
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return embedding_corpus(7, 900, 128)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return queries_from_corpus(corpus, 8, 9)
+
+
+class TestUseKernelContract:
+    """search(use_kernel=False) ≡ search(use_kernel=True, interpret=True),
+    bit for bit — the contract the old IVF search silently dropped."""
+
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    @pytest.mark.parametrize("bits", [4, 2])
+    def test_ivf_bit_identical(self, metric, bits, corpus, queries):
+        idx = IvfFlatIndex.build(jnp.asarray(corpus), metric=metric,
+                                 bits=bits, nlist=16)
+        s_jnp, i_jnp = idx.search(jnp.asarray(queries), 10, nprobe=4,
+                                  use_kernel=False)
+        s_krn, i_krn = idx.search(jnp.asarray(queries), 10, nprobe=4,
+                                  use_kernel=True, interpret=True)
+        np.testing.assert_array_equal(s_jnp, s_krn)
+        np.testing.assert_array_equal(i_jnp, i_krn)
+
+    @pytest.mark.parametrize("metric", ["cosine", "l2"])
+    @pytest.mark.parametrize("bits", [4, 2])
+    def test_hnsw_bit_identical(self, metric, bits, corpus, queries):
+        idx = HnswIndex.build(jnp.asarray(corpus[:400]), metric=metric,
+                              bits=bits, m=8, ef_construction=40)
+        s_jnp, i_jnp = idx.search(jnp.asarray(queries), 5, ef=24,
+                                  use_kernel=False)
+        s_krn, i_krn = idx.search(jnp.asarray(queries), 5, ef=24,
+                                  use_kernel=True, interpret=True)
+        np.testing.assert_array_equal(s_jnp, s_krn)
+        np.testing.assert_array_equal(i_jnp, i_krn)
+
+
+class TestNoDequantMaterialization:
+    """The candidate scan reads packed bytes directly: a search must succeed
+    even when full-corpus dequantization is impossible."""
+
+    def _poison(self, monkeypatch):
+        def boom(*a, **k):  # pragma: no cover - called only on regression
+            raise AssertionError(
+                "quantize.decode called on the search path — the gathered "
+                "scan must score packed bytes directly"
+            )
+        monkeypatch.setattr(qz, "decode", boom)
+        monkeypatch.setattr(qz, "decode_mixed", boom)
+
+    def test_ivf_search_never_decodes(self, corpus, queries, monkeypatch):
+        # Distinctive shapes -> fresh jit traces while decode is poisoned.
+        idx = IvfFlatIndex.build(jnp.asarray(corpus[:713]), metric="cosine",
+                                 nlist=11)
+        self._poison(monkeypatch)
+        _, ids = idx.search(jnp.asarray(queries[:5]), 7, nprobe=3,
+                            use_kernel=False)
+        assert ids.shape == (5, 7)
+
+    def test_hnsw_search_never_decodes(self, corpus, queries, monkeypatch):
+        idx = HnswIndex.build(jnp.asarray(corpus[:311]), metric="cosine",
+                              m=8, ef_construction=40)
+        self._poison(monkeypatch)
+        _, ids = idx.search(jnp.asarray(queries[:5]), 3, ef=17,
+                            use_kernel=False)
+        assert ids.shape == (5, 3)
+
+
+class TestAgainstDequantEinsum:
+    """(scores, ids) match the pre-refactor dequant-einsum reference."""
+
+    def _reference(self, idx, queries, k, nprobe, allow=None):
+        """The old IvfFlatIndex.search scoring, as shipped before DESIGN §5."""
+        q_rot = qz.encode_query(jnp.atleast_2d(queries), idx.enc)
+        metric = idx.enc.metric
+        if metric == "l2":
+            cs = (q_rot @ idx.centroids.T
+                  - 0.5 * jnp.sum(idx.centroids ** 2, axis=1)[None, :])
+        else:
+            cs = q_rot @ idx.centroids.T
+        _, probe = topk(cs, nprobe)
+        probe = np.asarray(probe)
+        b = q_rot.shape[0]
+        max_cand = int(np.max(idx.offsets[1:] - idx.offsets[:-1])) * nprobe
+        cand = np.full((b, max_cand), -1, dtype=np.int64)
+        for i in range(b):
+            rows = np.concatenate(
+                [idx.order[idx.offsets[c]: idx.offsets[c + 1]]
+                 for c in probe[i]]
+            )
+            cand[i, : len(rows)] = rows
+        cand_j = jnp.asarray(np.maximum(cand, 0))
+        packed_c = jnp.take(idx.enc.packed, cand_j, axis=0)
+        deq = qz.decode(dataclasses.replace(
+            idx.enc, packed=packed_c.reshape(-1, packed_c.shape[-1])
+        )).reshape(b, max_cand, -1)
+        raw = jnp.einsum("bd,bmd->bm", q_rot, deq)
+        scores = adjust_scores(raw, jnp.take(idx.enc.qnorms, cand_j, axis=0),
+                               metric)
+        ok = jnp.asarray(cand >= 0)
+        if allow is not None:
+            ok = ok & jnp.asarray(allow.mask)[cand_j]
+        scores = jnp.where(ok, scores, NEG)
+        vals, pos = topk(scores, k)
+        rows = np.take_along_axis(cand, np.asarray(pos), axis=1)
+        return np.asarray(vals), idx.ids[np.maximum(rows, 0)]
+
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    def test_matches_reference(self, metric, corpus, queries):
+        idx = IvfFlatIndex.build(jnp.asarray(corpus), metric=metric, nlist=16)
+        vals, ids = idx.search(jnp.asarray(queries), 10, nprobe=4)
+        ref_vals, ref_ids = self._reference(idx, jnp.asarray(queries), 10, 4)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_allclose(vals, ref_vals, rtol=2e-5, atol=1e-5)
+
+    def test_no_result_sentinel(self, corpus, queries):
+        """Fewer admissible candidates than k: the tail carries the same
+        0xFFFF... sentinel as HNSW, never a real row id."""
+        idx = IvfFlatIndex.build(jnp.asarray(corpus), metric="cosine",
+                                 nlist=8)
+        allow = Allowlist.from_ids([3, 11], idx.ids)
+        vals, ids = idx.search(jnp.asarray(queries), 10, nprobe=8,
+                               allow=allow)
+        sentinel = np.uint64(0xFFFFFFFFFFFFFFFF)
+        valid = ids != sentinel
+        np.testing.assert_array_equal(valid.sum(axis=1),
+                                      np.full(len(queries), 2))
+        assert set(ids[valid].tolist()) <= {3, 11}
+        assert (np.asarray(vals)[~valid] == NEG).all()
+
+    def test_allowlist_pre_topk(self, corpus, queries):
+        """Selective allowlist: exactly k allowed rows, matching the
+        reference with the mask applied before its top-k."""
+        idx = IvfFlatIndex.build(jnp.asarray(corpus), metric="cosine",
+                                 nlist=8)
+        allow = Allowlist.from_ids(range(0, 900, 3), idx.ids)
+        vals, ids = idx.search(jnp.asarray(queries), 10, nprobe=8, allow=allow)
+        assert (ids.astype(np.int64) % 3 == 0).all()
+        ref_vals, ref_ids = self._reference(idx, jnp.asarray(queries), 10, 8,
+                                            allow=allow)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_allclose(vals, ref_vals, rtol=2e-5, atol=1e-5)
+
+
+class TestScoreGatheredOps:
+    """ops.score_gathered against the pure oracles, including mixed bits."""
+
+    def test_mixed_bits_matches_oracle(self, rng):
+        from repro.kernels import ref
+        corpus = rng.randn(300, 768).astype(np.float32)
+        enc = qz.encode_mixed(jnp.asarray(corpus), avg_bits=3.0, seed=4)
+        q = qz.encode_query(
+            jnp.asarray(rng.randn(5, 768).astype(np.float32)), enc)
+        cand = jnp.asarray(rng.randint(0, 300, size=(5, 40)))
+        out = ops.score_gathered_raw(enc.packed, q, cand, bits=3,
+                                     n4_dims=enc.n4_dims, use_kernel=False)
+        expected = ref.gather_mixed_dot_ref(enc.packed, q, cand, enc.n4_dims)
+        err = float(jnp.max(jnp.abs(out - expected))
+                    / (jnp.max(jnp.abs(expected)) + 1e-9))
+        assert err < 2e-5
+
+    def test_sentinel_and_allow_mask(self, rng):
+        corpus = rng.randn(64, 128).astype(np.float32)
+        enc = qz.encode(jnp.asarray(corpus), metric="dot", seed=2)
+        q = qz.encode_query(
+            jnp.asarray(rng.randn(2, 128).astype(np.float32)), enc)
+        cand = jnp.asarray([[0, 5, -1, 7], [3, -1, -1, 9]])
+        allow = jnp.zeros((64,), bool).at[jnp.asarray([0, 3, 9])].set(True)
+        out = ops.score_gathered(enc.packed, q, cand, bits=4,
+                                 qnorms=enc.qnorms, metric="dot",
+                                 allow_mask=allow, use_kernel=False)
+        got_neg = np.asarray(out) == NEG
+        # -1 sentinels and disallowed rows are NEG; allowed real rows are not.
+        expect_neg = np.array([[False, True, True, True],
+                               [False, True, True, False]])
+        np.testing.assert_array_equal(got_neg, expect_neg)

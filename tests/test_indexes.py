@@ -141,6 +141,19 @@ class TestHnsw:
         # HNSW ef=400 == BF recall).
         assert recall10(ids, gt_l2) >= 0.9 * ceiling
 
+    def test_k_exceeds_ef_auto_raises_beam(self, corpus, queries):
+        """k=100 with the default ef=64 must return 100 rows, not 64: the
+        beam auto-widens to max(ef, k) instead of silently truncating."""
+        idx = HnswIndex.build(jnp.asarray(corpus[:1500]), metric="cosine",
+                              m=8, ef_construction=64)
+        scores, ids = idx.search(jnp.asarray(queries), 100, ef=64)
+        assert ids.shape == (len(queries), 100)
+        valid = ids != np.uint64(0xFFFFFFFFFFFFFFFF)
+        assert valid.all()
+        # distinct results, sorted by score
+        assert all(len(set(row.tolist())) == 100 for row in ids)
+        assert (np.diff(scores, axis=1) <= 0).all()
+
     def test_allowlist_traversal_routes_over_blocked(self, corpus, queries):
         idx = HnswIndex.build(jnp.asarray(corpus[:1000]), metric="cosine", m=8,
                               ef_construction=64)
@@ -175,6 +188,33 @@ class TestHybridAndBm25:
         hy = HybridIndex.build(jnp.asarray(corpus), docs, metric="cosine")
         _, ids = hy.search(jnp.asarray(corpus[7:8]), "special keyword", 10)
         assert 42 in ids.tolist()
+
+    def test_bm25_allowlist_prefilters_before_topk(self):
+        """§3.5 on the sparse channel: a selective allowlist yields exactly
+        min(k, n_allowed) rows, all allowed — not a post-filtered remnant."""
+        docs = ["alpha beta"] * 50 + ["alpha gamma"] * 150
+        idx = Bm25Index.build(docs)
+        mask = np.zeros(200, bool)
+        mask[100:130] = True                  # 30 allowed rows, none "beta"
+        scores, rows = idx.search("alpha beta", 20, allow_mask=mask)
+        assert len(rows) == 20
+        assert mask[rows].all()
+        # only 5 allowed -> exactly 5 back, never padded with disallowed rows
+        mask5 = np.zeros(200, bool)
+        mask5[:5] = True
+        _, rows5 = idx.search("alpha", 20, allow_mask=mask5)
+        assert sorted(rows5.tolist()) == [0, 1, 2, 3, 4]
+
+    def test_hybrid_allowlist_exact_k(self, corpus):
+        """Both fusion channels pre-filter: hybrid search under a selective
+        allowlist returns exactly k results, every one allowed."""
+        docs = [f"doc number {i} common text" for i in range(len(corpus))]
+        hy = HybridIndex.build(jnp.asarray(corpus), docs, metric="cosine")
+        allow = Allowlist.from_ids(range(0, 3000, 7), hy.dense.ids)
+        _, ids = hy.search(jnp.asarray(corpus[5:6]), "common text", 10,
+                           allow=allow)
+        assert len(ids) == 10
+        assert (ids.astype(np.int64) % 7 == 0).all()
 
 
 class TestMvecFormat:
@@ -213,3 +253,18 @@ class TestMvecFormat:
         p.write_bytes(b"NOPE" + b"\x00" * 100)
         with pytest.raises(ValueError):
             fmt.load(str(p))
+
+    @pytest.mark.parametrize("version", [1, 3, 5, 8])
+    def test_rejects_unsupported_versions(self, version, corpus, tmp_path):
+        """Versions 1-5 predate the v6 header layout (parsing them against it
+        would misread every field) and future versions are unknown: all must
+        be rejected with an error naming the version found."""
+        import struct
+        from repro.core import mvec_format as fmt
+        p = str(tmp_path / "v.mvec")
+        MonaVec.build(corpus[:50], metric="cosine").save(p)
+        raw = bytearray(open(p, "rb").read())
+        raw[4:8] = struct.pack("<I", version)       # overwrite VERSION field
+        open(p, "wb").write(bytes(raw))
+        with pytest.raises(ValueError, match=f"version {version}"):
+            fmt.load(p)

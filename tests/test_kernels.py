@@ -72,6 +72,60 @@ class TestMixedScore:
         assert _relerr(out, expected) < RTOL
 
 
+class TestGatherDot:
+    """Gathered candidate-scan kernel vs oracle, and kernel-vs-mirror
+    bit-identity (the use_kernel contract's numeric foundation)."""
+
+    @pytest.mark.parametrize("n,d,b,mc", [
+        (200, 256, 1, 8),        # single query, tiny frontier (HNSW shape)
+        (500, 512, 9, 300),      # ragged everything (padding path)
+        (300, 1024, 16, 640),    # multi-k-block accumulation
+    ])
+    def test_nibble_matches_oracle(self, n, d, b, mc, rng):
+        packed = jnp.asarray(rng.randint(0, 256, size=(n, d // 2), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(b, d).astype(np.float32))
+        cand = jnp.asarray(rng.randint(0, n, size=(b, mc)))
+        out = ops.score_gathered_raw(packed, q, cand, bits=4,
+                                     use_kernel=True, interpret=True)
+        assert _relerr(out, ref.gather_nibble_dot_ref(packed, q, cand)) < RTOL
+
+    @pytest.mark.parametrize("n,d,b,mc", [(128, 512, 3, 70), (400, 1024, 8, 256)])
+    def test_crumb_matches_oracle(self, n, d, b, mc, rng):
+        packed = jnp.asarray(rng.randint(0, 256, size=(n, d // 4), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(b, d).astype(np.float32))
+        cand = jnp.asarray(rng.randint(0, n, size=(b, mc)))
+        out = ops.score_gathered_raw(packed, q, cand, bits=2,
+                                     use_kernel=True, interpret=True)
+        assert _relerr(out, ref.gather_crumb_dot_ref(packed, q, cand)) < RTOL
+
+    @pytest.mark.parametrize("bits", [4, 2])
+    def test_kernel_mirror_bit_identical(self, bits, rng):
+        """Interpret-mode kernel == pure-jnp mirror, bit for bit: both walk
+        the same (b, m, k) tile grid with the same tile function."""
+        n, d, b, mc = 350, 512, 11, 410
+        dk = d // (8 // bits)
+        packed = jnp.asarray(rng.randint(0, 256, size=(n, dk), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(b, d).astype(np.float32))
+        cand = jnp.asarray(rng.randint(0, n, size=(b, mc)))
+        krn = ops.score_gathered_raw(packed, q, cand, bits=bits,
+                                     use_kernel=True, interpret=True)
+        jnp_ = ops.score_gathered_raw(packed, q, cand, bits=bits,
+                                      use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(krn), np.asarray(jnp_))
+
+    def test_matches_full_scan_on_identity_gather(self, rng):
+        """Gathering ALL rows reproduces the flat scan's scores (same packed
+        byte interpretation on both paths — the score_raw invariant)."""
+        n, d, b = 160, 256, 4
+        packed = jnp.asarray(rng.randint(0, 256, size=(n, d // 2), dtype=np.uint8))
+        q = jnp.asarray(rng.randn(b, d).astype(np.float32))
+        cand = jnp.tile(jnp.arange(n)[None], (b, 1))
+        gathered = ops.score_gathered_raw(packed, q, cand, bits=4,
+                                          use_kernel=False)
+        flat = ops.score_raw(packed, q, bits=4, use_kernel=False)
+        assert _relerr(gathered, flat) < RTOL
+
+
 class TestHadamardKernel:
     @pytest.mark.parametrize("n,d", [(64, 128), (257, 512), (512, 1024), (33, 4096)])
     def test_matches_direct(self, n, d, rng):
