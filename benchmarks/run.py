@@ -1,5 +1,11 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: `PYTHONPATH=src python -m benchmarks.run [--only X]`."""
+"""Benchmark harness: `PYTHONPATH=src python -m benchmarks.run [--only X]`.
+
+``--smoke`` runs the CI drift gate: every benchmark that has a small-shape
+variant executes end to end (same code paths, tiny problem sizes) so a
+kernel or benchmark regression fails the build in minutes; benchmarks with
+no cheap variant are skipped and say so.
+"""
 
 from __future__ import annotations
 
@@ -12,30 +18,46 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-shape CI sweep (skips benchmarks without a "
+                         "smoke variant)")
     args = ap.parse_args()
 
     from . import dist_scan
     from . import ivf_scan
     from . import paper_tables as pt
     from . import roofline
+    from . import segments_bench
 
+    # (name, full run, smoke run or None).
     benches = [
-        ("table2_semantic_embeddings", pt.table2_semantic_embeddings),
-        ("table3_l2_standardization", pt.table3_l2_standardization),
-        ("table4_auto_m", pt.table4_auto_m),
-        ("table7_lloydmax_vs_uniform", pt.table7_lloydmax_vs_uniform),
-        ("fig3_mixed_precision", pt.fig3_mixed_precision),
-        ("table6_cross_kernel_reproducibility", pt.table6_cross_kernel_reproducibility),
-        ("bench_quantized_kv_decode", pt.bench_quantized_kv_decode),
-        ("dist_scan", dist_scan.emit_benchmark),
-        ("ivf_scan", ivf_scan.emit_benchmark),
-        ("roofline", roofline.emit_benchmark),
+        ("table2_semantic_embeddings", pt.table2_semantic_embeddings, None),
+        ("table3_l2_standardization", pt.table3_l2_standardization, None),
+        ("table4_auto_m", pt.table4_auto_m, pt.table4_auto_m),
+        ("table7_lloydmax_vs_uniform", pt.table7_lloydmax_vs_uniform, None),
+        ("fig3_mixed_precision", pt.fig3_mixed_precision, None),
+        ("table6_cross_kernel_reproducibility",
+         pt.table6_cross_kernel_reproducibility, None),
+        ("bench_quantized_kv_decode", pt.bench_quantized_kv_decode, None),
+        ("dist_scan", dist_scan.emit_benchmark,
+         lambda: dist_scan.bench_dist_scan(n=4_096, dim=128, batch_q=8)),
+        ("ivf_scan", ivf_scan.emit_benchmark,
+         lambda: (ivf_scan.bench_ivf_scan(n=2_048, dim=128, nlist=8),
+                  ivf_scan.bench_hnsw_qps(n=1_024, dim=128, batch_q=4))),
+        ("segments", segments_bench.emit_benchmark,
+         segments_bench.emit_benchmark_smoke),
+        ("roofline", roofline.emit_benchmark, None),
     ]
     print("name,us_per_call,derived")
     failed = 0
-    for name, fn in benches:
+    for name, fn, smoke_fn in benches:
         if args.only and args.only not in name:
             continue
+        if args.smoke:
+            if smoke_fn is None:
+                print(f"{name},nan,SKIPPED(no smoke variant)", flush=True)
+                continue
+            fn = smoke_fn
         try:
             fn()
         except Exception:  # noqa: BLE001

@@ -1,0 +1,87 @@
+"""Segmented-lifecycle cost model: mutation throughput + scan overhead.
+
+What the segment subsystem (DESIGN.md §6) buys and what it costs:
+
+  * ``add`` is O(batch) quantization — no index rebuild (the whole point);
+  * a mutated BruteForce search pays one extra packed scan per segment plus
+    the tombstone mask (measured as segmented-vs-static overhead);
+  * ``compact`` pays one decode→inverse-rotate→re-encode pass and returns
+    the index to static-scan speed.
+
+    PYTHONPATH=src python -m benchmarks.segments_bench [--n 16000] [--dim 512]
+
+Emits the standard ``name,us_per_call,derived`` rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import MonaVec
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+from .common import emit, time_fn
+
+
+def bench_segment_lifecycle(n: int = 16_000, dim: int = 512,
+                            add_frac: float = 0.10, batch_q: int = 16,
+                            k: int = 10) -> None:
+    corpus = embedding_corpus(41, n, dim)
+    q = queries_from_corpus(corpus, 42, batch_q)
+    idx = MonaVec.build(corpus, metric="cosine")
+
+    us = time_fn(lambda: idx.search(q, k, use_kernel=False))
+    emit("segments/static_scan", us, f"n={n} qps={batch_q / (us * 1e-6):.0f}")
+
+    add_n = max(1, int(n * add_frac))
+    delta = np.asarray(embedding_corpus(43, add_n, dim))
+    t0 = time.perf_counter()
+    idx.add(delta)
+    dt = time.perf_counter() - t0
+    emit("segments/add", dt * 1e6,
+         f"rows={add_n} rows_per_s={add_n / dt:.0f}")
+
+    idx.delete(idx.ids[::13])
+    us_mut = time_fn(lambda: idx.search(q, k, use_kernel=False))
+    emit("segments/segmented_scan", us_mut,
+         f"segments=2 live={idx.n_live} overhead={us_mut / us:.2f}x")
+
+    t0 = time.perf_counter()
+    reclaimed = idx.compact()
+    dt = time.perf_counter() - t0
+    emit("segments/compact", dt * 1e6,
+         f"reclaimed={reclaimed} rows_per_s={idx.n_live / dt:.0f}")
+
+    us_post = time_fn(lambda: idx.search(q, k, use_kernel=False))
+    emit("segments/post_compact_scan", us_post,
+         f"n={idx.n_live} vs_static={us_post / us:.2f}x")
+
+
+def emit_benchmark() -> None:
+    """Hook for benchmarks.run (small shapes to keep the sweep fast)."""
+    bench_segment_lifecycle(n=8_000, dim=256)
+
+
+def emit_benchmark_smoke() -> None:
+    """CI smoke hook (benchmarks.run --smoke): tiny shapes, same code paths."""
+    bench_segment_lifecycle(n=1_024, dim=64, batch_q=4)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16_000)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--add-frac", type=float, default=0.10)
+    ap.add_argument("--batch-q", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_segment_lifecycle(n=args.n, dim=args.dim, add_frac=args.add_frac,
+                            batch_q=args.batch_q, k=args.k)
+
+
+if __name__ == "__main__":
+    main()

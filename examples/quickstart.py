@@ -55,6 +55,16 @@ def main() -> None:
                          m=16, ef_construction=64)
     _, ids_h = hnsw.search(queries, k=5, ef=64)
     print("hnsw top-5 ids:\n", ids_h)
+
+    # --- Mutable lifecycle: the corpus grows and churns between sessions ----
+    delta = embedding_corpus(seed=3, n=2_000, dim=1024)
+    new_ids = index.add(delta)                 # new quantized segment, no rebuild
+    index.delete(new_ids[::2])                 # tombstones, codes untouched
+    _, ids_m = index.search(queries, k=5)      # scans base + segment, pre-top-k mask
+    index.save(path)                           # v8 multi-segment layout
+    assert np.array_equal(MonaVec.load(path).search(queries, k=5)[1], ids_m)
+    reclaimed = index.compact()                # deterministic rewrite, back to v6
+    print(f"lifecycle: +{len(new_ids)} rows, compact reclaimed {reclaimed}: OK")
     os.unlink(path)
 
 

@@ -1,8 +1,9 @@
 # MonaVec core: the paper's primary contribution in JAX.
 #
 # Data-oblivious quantization (RHDH + Lloyd-Max), asymmetric scoring, three
-# index backends, pre-filter allowlist, hybrid BM25+RRF, single-file .mvec
-# persistence, and identity-based multi-tenancy.
+# index backends, segmented mutable lifecycle (add/delete/compact), pre-filter
+# allowlist, hybrid BM25+RRF, single-file .mvec persistence (v6-v8), and
+# identity-based multi-tenancy.
 
 from .api import MonaVec
 from .allowlist import Allowlist
@@ -10,11 +11,13 @@ from .bruteforce import BruteForceIndex
 from .hnsw import HnswIndex, recommended_m
 from .hybrid import HybridIndex
 from .ivf import IvfFlatIndex
+from .segments import SENTINEL_ID, Segment, SegmentedState, derive_segment_seed
 from .standardize import COSINE, DOT, L2, GlobalStd
 from .tenancy import TenantRegistry
 
 __all__ = [
     "MonaVec", "Allowlist", "BruteForceIndex", "HnswIndex", "HybridIndex",
     "IvfFlatIndex", "TenantRegistry", "GlobalStd", "recommended_m",
+    "Segment", "SegmentedState", "SENTINEL_ID", "derive_segment_seed",
     "COSINE", "DOT", "L2",
 ]

@@ -7,17 +7,33 @@
 The default configuration (BruteForce over RHDH+Lloyd-Max 4-bit) is
 data-oblivious end to end; `fit()` adds the optional single-pass L2
 calibration; `index="ivf"` is the single opt-in *trained* component.
+
+Mutation facade (DESIGN.md §6) — the index is a sequence of immutable
+quantized segments plus per-segment deletion bitmaps, so a deployed corpus
+can grow and churn between sessions without a rebuild:
+
+    idx.add(new_vectors)            # quantizes a new segment (derived seed)
+    idx.delete([3, 17])             # tombstones rows, codes untouched
+    idx.compact()                   # deterministic rewrite into one segment
+
+`search()` scans every segment with tombstones masked BEFORE top-k (the §3.5
+pre-filter guarantee survives mutation); `save()` writes the v8 multi-segment
+`.mvec` layout once the index is mutated, and still writes v6/v7 for
+single-segment indexes.  Replaying the same op sequence reproduces the same
+file byte-for-byte on any platform (pinned by the golden + hypothesis
+suites).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from . import mvec_format as fmt
+from . import segments as seg
 from .allowlist import Allowlist
 from .bruteforce import BruteForceIndex
 from .hnsw import HnswIndex, recommended_m
@@ -32,6 +48,11 @@ _TYPE_CODE = {BruteForceIndex: fmt.INDEX_BRUTEFORCE, IvfFlatIndex: fmt.INDEX_IVF
 @dataclasses.dataclass
 class MonaVec:
     backend: Backend
+    mut: Optional[seg.SegmentedState] = None
+
+    def __post_init__(self):
+        if self.mut is None:
+            self.mut = seg.SegmentedState.fresh(self.backend.enc.n)
 
     # -- construction ------------------------------------------------------
 
@@ -75,12 +96,134 @@ class MonaVec:
             raise ValueError(f"unknown index {index!r}")
         return MonaVec(backend=be)
 
+    # -- corpus introspection ---------------------------------------------
+
+    @property
+    def ids(self) -> np.ndarray:
+        """External ids of EVERY row (tombstoned included), concatenated in
+        segment order — the id universe allowlists are built against."""
+        cols = [self.backend.ids] + [s.ids for s in self.mut.extras]
+        return np.concatenate(cols) if len(cols) > 1 else self.backend.ids
+
+    @property
+    def n_total(self) -> int:
+        return int(self.backend.enc.n + sum(s.n for s in self.mut.extras))
+
+    @property
+    def n_live(self) -> int:
+        dead = int(self.mut.base_tombs.sum()) + sum(
+            int(s.tombs.sum()) for s in self.mut.extras)
+        return self.n_total - dead
+
+    def _live_masks(self) -> list:
+        return [~self.mut.base_tombs] + [~s.tombs for s in self.mut.extras]
+
+    # -- mutation lifecycle (DESIGN.md §6) --------------------------------
+
+    def add(
+        self,
+        vectors: jnp.ndarray,
+        ids: Optional[Sequence[int]] = None,
+    ) -> np.ndarray:
+        """Append a new immutable segment quantized through the same
+        RHDH + Lloyd-Max pipeline under ``derive_segment_seed(root, ordinal)``.
+        Returns the assigned external ids.  Ids duplicating a LIVE row are
+        rejected (tombstoned ids may be reused)."""
+        vectors = jnp.atleast_2d(jnp.asarray(vectors))
+        n_new = int(vectors.shape[0])
+        if n_new == 0:
+            return np.zeros(0, dtype=np.uint64)
+        if vectors.shape[1] != self.backend.enc.dim:
+            raise ValueError(
+                f"add: expected dim {self.backend.enc.dim}, got {vectors.shape[1]}")
+        if ids is None:
+            new_ids = np.arange(n_new, dtype=np.uint64) + (
+                np.uint64(0) if self.n_total == 0
+                else self.ids.max() + np.uint64(1))
+        else:
+            new_ids = np.asarray(list(ids), dtype=np.uint64)
+            if new_ids.shape[0] != n_new:
+                raise ValueError("add: len(ids) != len(vectors)")
+        if np.unique(new_ids).shape[0] != n_new:
+            raise ValueError("add: duplicate ids within the batch")
+        live_ids = np.concatenate(
+            [i[m] for i, m in zip(
+                [self.backend.ids] + [s.ids for s in self.mut.extras],
+                self._live_masks())])
+        clash = np.intersect1d(new_ids, live_ids)
+        if clash.size:
+            raise ValueError(f"add: ids already live in the index: {clash[:8].tolist()}")
+        seed = seg.derive_segment_seed(self.backend.enc.seed, self.mut.next_ordinal)
+        enc = seg.encode_segment(vectors, self.backend.enc, seed)
+        self.mut.extras.append(
+            seg.Segment(enc=enc, ids=new_ids, tombs=np.zeros(n_new, dtype=bool)))
+        self.mut.next_ordinal += 1
+        return new_ids
+
+    def delete(self, ids: Sequence[int]) -> int:
+        """Tombstone every live row whose external id is in ``ids``.  Codes
+        are never rewritten; returns the number of rows newly tombstoned."""
+        targets = np.asarray(list(ids), dtype=np.uint64)
+        hit = np.isin(self.backend.ids, targets) & ~self.mut.base_tombs
+        self.mut.base_tombs |= hit
+        n = int(hit.sum())
+        for s in self.mut.extras:
+            hit = np.isin(s.ids, targets) & ~s.tombs
+            s.tombs |= hit
+            n += int(hit.sum())
+        return n
+
+    def compact(self) -> int:
+        """Deterministically rewrite the live rows into a single fresh base
+        segment (root seed) and rebuild the backend structure over them.
+
+        The live rows' codes are decoded to rotated space, carried back
+        through the inverse rotation of their segment seed, and re-encoded
+        under the root seed — a pure function of the current codes, so two
+        identical op sequences compact to byte-identical indexes.  Returns
+        the number of dead rows reclaimed.
+        """
+        reclaimed = self.n_total - self.n_live
+        if not self.mut.extras and reclaimed == 0:
+            return 0
+        if self.n_live == 0:
+            raise ValueError("compact: no live rows to rewrite")
+        encs = [self.backend.enc] + [s.enc for s in self.mut.extras]
+        all_ids = [self.backend.ids] + [s.ids for s in self.mut.extras]
+        vec_parts, id_parts = [], []
+        for enc, sids, live in zip(encs, all_ids, self._live_masks()):
+            if live.any():
+                vec_parts.append(seg.reconstruct_vectors(enc)[live])
+                id_parts.append(sids[live])
+        live_vecs = jnp.asarray(np.concatenate(vec_parts))
+        live_ids = np.concatenate(id_parts)
+        base = self.backend.enc
+        if isinstance(self.backend, BruteForceIndex):
+            enc = seg.encode_segment(live_vecs, base, base.seed)
+            self.backend = BruteForceIndex(enc=enc, ids=live_ids)
+        elif isinstance(self.backend, IvfFlatIndex):
+            self.backend = IvfFlatIndex.build(
+                live_vecs, ids=live_ids, metric=base.metric, seed=base.seed,
+                bits=base.bits, std=base.std,
+                nlist=min(self.backend.nlist, live_ids.shape[0]),
+            )
+        else:
+            self.backend = HnswIndex.build(
+                live_vecs, ids=live_ids, metric=base.metric, seed=base.seed,
+                bits=base.bits, std=base.std, m=self.backend.m,
+                ef_construction=self.backend.ef_construction or 100,
+            )
+        self.mut = seg.SegmentedState.fresh(self.backend.enc.n)
+        return reclaimed
+
     # -- distribution ------------------------------------------------------
 
     def shard(self, mesh=None):
         """Shard this index's corpus over a device mesh (default: all local
         devices) and return a ShardedMonaVec with the same search() contract
         and identical results (repro.dist; BruteForce backend only)."""
+        if not self.mut.is_static:
+            raise TypeError("shard() requires an unmutated index — compact() first")
         from repro.dist.sharded_index import ShardedMonaVec
         return ShardedMonaVec.shard(self, mesh)
 
@@ -101,16 +244,25 @@ class MonaVec:
         on TPU and the pure-jnp path elsewhere; ``use_kernel=True`` with
         ``interpret=True`` runs the kernel body in interpret mode (validation,
         bit-identical to the jnp path); backend-specific knobs (``nprobe``,
-        ``ef``) ride in ``**kwargs``."""
-        return self.backend.search(
-            jnp.asarray(queries), k, allow=allow, use_kernel=use_kernel,
-            interpret=interpret, **kwargs,
+        ``ef``) ride in ``**kwargs``.  On a mutated index the scan covers
+        every segment with tombstones masked pre-top-k (allowlists are built
+        from ``MonaVec.ids``)."""
+        queries = jnp.asarray(queries)
+        if self.mut.is_static:
+            return self.backend.search(
+                queries, k, allow=allow, use_kernel=use_kernel,
+                interpret=interpret, **kwargs,
+            )
+        return seg.search_segmented(
+            self.backend, self.mut, queries, k, allow=allow,
+            use_kernel=use_kernel, interpret=interpret, **kwargs,
         )
 
     # -- persistence -----------------------------------------------------------
 
     def save(self, path: str) -> None:
         be = self.backend
+        param2 = 0
         if isinstance(be, BruteForceIndex):
             blob, param = None, 0
         elif isinstance(be, IvfFlatIndex):
@@ -119,27 +271,40 @@ class MonaVec:
         else:
             blob = fmt.pack_hnsw_blob(be)
             param = be.m
+            param2 = be.ef_construction or 0
         fmt.save(path, fmt.MvecFile(
             enc=be.enc, ids=be.ids, index_type=_TYPE_CODE[type(be)],
-            index_param=param, index_data=blob,
+            index_param=param, index_data=blob, index_param2=param2,
+            extras=[fmt.ExtraSegment(enc=s.enc, ids=s.ids)
+                    for s in self.mut.extras],
+            tombs=[self.mut.base_tombs] + [s.tombs for s in self.mut.extras],
         ))
 
     @staticmethod
     def load(path: str) -> "MonaVec":
         f = fmt.load(path)
         if f.index_type == fmt.INDEX_BRUTEFORCE:
-            return MonaVec(BruteForceIndex(enc=f.enc, ids=f.ids))
-        if f.index_type == fmt.INDEX_IVF:
+            be: Backend = BruteForceIndex(enc=f.enc, ids=f.ids)
+        elif f.index_type == fmt.INDEX_IVF:
             cents, order, offsets = fmt.unpack_ivf_blob(f.index_data)
-            return MonaVec(IvfFlatIndex(
+            be = IvfFlatIndex(
                 enc=f.enc, ids=f.ids, centroids=jnp.asarray(cents),
                 order=order, offsets=offsets, nlist=f.index_param,
-            ))
-        if f.index_type == fmt.INDEX_HNSW:
+            )
+        elif f.index_type == fmt.INDEX_HNSW:
             nbr0, nbr_hi, node_level, entry, max_level = fmt.unpack_hnsw_blob(f.index_data)
-            return MonaVec(HnswIndex(
+            be = HnswIndex(
                 enc=f.enc, ids=f.ids, neighbors0=nbr0, neighbors_hi=nbr_hi,
                 node_level=node_level, entry_point=entry, max_level=max_level,
-                m=f.index_param,
-            ))
-        raise ValueError(f"unknown index type {f.index_type}")
+                m=f.index_param, ef_construction=f.index_param2 or None,
+            )
+        else:
+            raise ValueError(f"unknown index type {f.index_type}")
+        mut = seg.SegmentedState(
+            base_tombs=(f.tombs[0] if f.tombs is not None
+                        else np.zeros(f.enc.n, dtype=bool)),
+            extras=[seg.Segment(enc=e.enc, ids=e.ids, tombs=f.tombs[i + 1])
+                    for i, e in enumerate(f.extras)],
+            next_ordinal=len(f.extras) + 1,
+        )
+        return MonaVec(backend=be, mut=mut)

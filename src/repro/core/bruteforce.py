@@ -15,7 +15,7 @@ import numpy as np
 
 from ..kernels import ops
 from . import quantize as qz
-from .allowlist import Allowlist, apply_optional
+from .allowlist import NEG, Allowlist, apply_optional
 from .scoring import topk
 
 
@@ -44,6 +44,19 @@ class BruteForceIndex:
             ids = np.arange(n, dtype=np.uint64)
         return BruteForceIndex(enc=enc, ids=np.asarray(ids, dtype=np.uint64))
 
+    def scores(
+        self,
+        queries: jnp.ndarray,
+        *,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+    ) -> jnp.ndarray:
+        """Adjusted scores [b, n] of the full packed corpus — the per-segment
+        scan primitive the segmented search concatenates (DESIGN.md §6)."""
+        q_rot = qz.encode_query(jnp.atleast_2d(queries), self.enc)
+        return ops.score_packed(q_rot, self.enc, use_kernel=use_kernel,
+                                interpret=interpret)
+
     def search(
         self,
         queries: jnp.ndarray,
@@ -54,10 +67,15 @@ class BruteForceIndex:
         interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (scores [b,k], external_ids [b,k]).  Deterministic:
-        stable top-k (lower row index wins ties)."""
-        q_rot = qz.encode_query(jnp.atleast_2d(queries), self.enc)
-        scores = ops.score_packed(q_rot, self.enc, use_kernel=use_kernel,
-                                  interpret=interpret)
+        stable top-k (lower row index wins ties).  Slots with no admissible
+        row (a selective allowlist smaller than k) come back with
+        SENTINEL_ID and a NEG score — the same no-result contract as
+        IVF/HNSW and the segmented scan (§3.5: exactly min(k, allowed) real
+        results, never disallowed filler)."""
+        from .segments import rows_to_ids
+        scores = self.scores(queries, use_kernel=use_kernel, interpret=interpret)
         scores = apply_optional(scores, allow)
         vals, idx = topk(scores, min(k, self.enc.n))
-        return np.asarray(vals), self.ids[np.asarray(idx)]
+        vals = np.asarray(vals)
+        rows = np.where(vals > NEG, np.asarray(idx), -1)
+        return vals, rows_to_ids(rows, self.ids)

@@ -63,6 +63,11 @@ class HnswIndex:
     entry_point: int
     max_level: int
     m: int
+    # Build-time beam width, persisted in INDEX_PARAMS.param2 so that
+    # compact() rebuilds the graph with the same construction parameters the
+    # original build used.  None = unknown (file predating the field):
+    # compact falls back to the default.
+    ef_construction: Optional[int] = None
 
     # ------------------------------------------------------------------
     # Build.
@@ -189,6 +194,7 @@ class HnswIndex:
             enc=enc, ids=np.asarray(ids, dtype=np.uint64),
             neighbors0=nbr0, neighbors_hi=nbr_hi, node_level=levels.astype(np.int8),
             entry_point=entry_point, max_level=cur_max, m=m,
+            ef_construction=ef_construction,
         )
 
     # ------------------------------------------------------------------
@@ -238,10 +244,8 @@ class HnswIndex:
             use_kernel=use_kernel,
             interpret=interpret,
         )
-        rows = np.asarray(rows)
-        out_ids = self.ids[np.maximum(rows, 0)].copy()
-        out_ids[rows < 0] = np.uint64(0xFFFFFFFFFFFFFFFF)  # sentinel: no result
-        return np.asarray(vals), out_ids
+        from .segments import rows_to_ids
+        return np.asarray(vals), rows_to_ids(np.asarray(rows), self.ids)
 
 
 # ---------------------------------------------------------------------------

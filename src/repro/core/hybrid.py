@@ -52,6 +52,11 @@ class HybridIndex:
     ) -> Tuple[np.ndarray, np.ndarray]:
         fetch_k = fetch_k or max(2 * k, 20)
         _, dense_ids = self.dense.search(query_vec, fetch_k, allow=allow)
+        # A selective allowlist can return fewer than fetch_k real rows;
+        # SENTINEL_ID slots must not enter the fusion as if they were docs.
+        from .segments import SENTINEL_ID
+        dense_ids = dense_ids[0]
+        dense_ids = dense_ids[dense_ids != SENTINEL_ID]
         # Both channels pre-filter (§3.5): the BM25 top-k runs over allowed
         # rows only, so selective allowlists still surface fetch_k sparse
         # candidates instead of a post-filtered remnant.
@@ -60,4 +65,4 @@ class HybridIndex:
             allow_mask=None if allow is None else allow.mask,
         )
         sparse_ids = self.dense.ids[sparse_rows]
-        return rrf_fuse([dense_ids[0], sparse_ids], k=rrf_k, top_k=k)
+        return rrf_fuse([dense_ids, sparse_ids], k=rrf_k, top_k=k)

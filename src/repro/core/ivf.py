@@ -226,7 +226,5 @@ class IvfFlatIndex:
             bits=self.enc.bits, n4_dims=self.enc.n4_dims,
             use_kernel=use_kernel, interpret=interpret,
         )
-        rows = np.asarray(rows)
-        out_ids = self.ids[np.maximum(rows, 0)].copy()
-        out_ids[rows < 0] = np.uint64(0xFFFFFFFFFFFFFFFF)  # sentinel: no result
-        return np.asarray(vals), out_ids
+        from .segments import rows_to_ids
+        return np.asarray(vals), rows_to_ids(np.asarray(rows), self.ids)

@@ -1,4 +1,4 @@
-"""`.mvec` single-file index format, version 6 (paper §3.8).
+"""`.mvec` single-file index format, versions 6-8 (paper §3.8 + DESIGN.md §6).
 
 Fixed 56-byte header followed by variable-length blocks.  The embedded SEED
 makes load→search reproduce the same top-K on any platform; all payloads are
@@ -7,23 +7,45 @@ little-endian, integer code bytes are bit-identical across machines.
 Header layout (offsets in bytes, little-endian):
     0   MAGIC       4s   b"MVEC"
     4   VERSION     u32  6 (7 when a mixed-precision permutation block is
-                         persisted — our documented extension, DESIGN.md §2)
+                         persisted — our documented extension, DESIGN.md §2;
+                         8 when the index is MUTATED: extra segments and/or
+                         tombstones — DESIGN.md §6)
     8   DIM         u32  input dimension d
     12  METRIC      u8   0=Cosine 1=Dot 2=L2
     13  BIT_WIDTH   u8   2, 3 (mixed) or 4
     14  INDEX_TYPE  u8   0=BruteForce 1=IvfFlat 2=HNSW
     15  PAD         u8
-    16  COUNT       u64
-    24  SEED        u64  rotation seed (ChaCha20 in the paper; threefry here)
+    16  COUNT       u64  rows in the BASE segment (extras carry their own)
+    24  SEED        u64  root rotation seed (ChaCha20 in the paper; threefry
+                         here); extra segments persist their derived seeds
     32  N4_DIMS     u32  4-bit dims in mixed mode
-    36  INDEX_PARAMS 8B  (u32 nlist / M, u32 reserved)
+    36  INDEX_PARAMS 8B  (u32 nlist / M, u32 param2: HNSW persists
+                         ef_construction here so compact() can rebuild the
+                         graph with the build-time beam width; previously a
+                         reserved-zero field, so pre-existing readers and
+                         files are unaffected)
     44  HAS_STD     u8   1 if global standardization block follows
-    45  PAD         u8
+    45  HAS_PERM    u8   v8 only: 1 if a permutation block follows (v7
+                         signals the same through VERSION; always 0 in v6/v7)
     46  RESERVED    10B  (pads the header to exactly 56 bytes)
 
 Blocks (in order): STD_MEAN [f32 × dim], STD_INV_STD [f32 × dim] (if HAS_STD;
 scalar globals replicated per the paper's field spec), PERM [i32 × dim_pad]
-(v7 only), VECTORS [u8], IDS [u64], NORMS [f32], INDEX_DATA (backend blob).
+(v7, or v8 with HAS_PERM), VECTORS [u8], IDS [u64], NORMS [f32], INDEX_DATA
+(backend blob).  Version 8 appends the segment table and tombstone bitmaps:
+
+    SEG_COUNT  u32               number of EXTRA segments (>= 0)
+    per extra segment, in ordinal order:
+        SEG_SEED   u64           derived rotation seed
+        SEG_VECTORS [u8]         packed codes (base layout: same bytes/vector)
+        SEG_IDS     [u64]
+        SEG_NORMS   [f32]
+    per segment INCLUDING the base, in order:
+        TOMBS      [u8]          np.packbits deletion bitmap (bit set = dead)
+
+Every block is length-prefixed and every read is validated against the bytes
+actually present — a truncated or garbage-tailed file raises ``ValueError``
+naming the short block instead of letting ``np.frombuffer`` misparse it.
 """
 
 from __future__ import annotations
@@ -31,7 +53,7 @@ from __future__ import annotations
 import dataclasses
 import io
 import struct
-from typing import Optional
+from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -44,6 +66,7 @@ HEADER_LEN = 56
 _METRIC_CODE = {COSINE: 0, DOT: 1, L2: 2}
 _METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
 INDEX_BRUTEFORCE, INDEX_IVF, INDEX_HNSW = 0, 1, 2
+SUPPORTED_VERSIONS = (6, 7, 8)
 
 
 def _write_array(buf: io.BytesIO, arr: np.ndarray) -> None:
@@ -53,10 +76,61 @@ def _write_array(buf: io.BytesIO, arr: np.ndarray) -> None:
     buf.write(raw)
 
 
-def _read_array(buf: io.BytesIO, dtype: np.dtype, shape=None) -> np.ndarray:
-    (nbytes,) = struct.unpack("<Q", buf.read(8))
-    arr = np.frombuffer(buf.read(nbytes), dtype=np.dtype(dtype).newbyteorder("<"))
-    return arr.reshape(shape) if shape is not None else arr
+class _Reader:
+    """Validating block reader: every short read raises ValueError naming the
+    block, so truncated/garbage files fail loudly at the exact bad offset."""
+
+    def __init__(self, data: bytes, pos: int = 0):
+        self.data = data
+        self.pos = pos
+
+    def take(self, nbytes: int, name: str) -> bytes:
+        chunk = self.data[self.pos: self.pos + nbytes]
+        if len(chunk) != nbytes:
+            raise ValueError(
+                f".mvec truncated in block {name!r}: need {nbytes} bytes at "
+                f"offset {self.pos}, only {len(chunk)} available"
+            )
+        self.pos += nbytes
+        return chunk
+
+    def u32(self, name: str) -> int:
+        return struct.unpack("<I", self.take(4, name))[0]
+
+    def u64(self, name: str) -> int:
+        return struct.unpack("<Q", self.take(8, name))[0]
+
+    def array(self, dtype, name: str, count: Optional[int] = None) -> np.ndarray:
+        nbytes = self.u64(f"{name} length")
+        dt = np.dtype(dtype).newbyteorder("<")
+        if nbytes % dt.itemsize:
+            raise ValueError(
+                f".mvec corrupt block {name!r}: {nbytes} bytes is not a "
+                f"multiple of itemsize {dt.itemsize}"
+            )
+        arr = np.frombuffer(self.take(nbytes, name), dtype=dt)
+        if count is not None and arr.size != count:
+            raise ValueError(
+                f".mvec corrupt block {name!r}: expected {count} elements, "
+                f"found {arr.size}"
+            )
+        return arr
+
+    def expect_eof(self) -> None:
+        extra = len(self.data) - self.pos
+        if extra:
+            raise ValueError(
+                f".mvec garbage tail: {extra} unexpected bytes after the "
+                f"final block (offset {self.pos})"
+            )
+
+
+@dataclasses.dataclass
+class ExtraSegment:
+    """One add()-appended segment as persisted in the v8 segment table."""
+
+    enc: qz.Encoded
+    ids: np.ndarray
 
 
 @dataclasses.dataclass
@@ -66,19 +140,39 @@ class MvecFile:
     index_type: int
     index_param: int = 0          # nlist (IVF) or M (HNSW)
     index_data: Optional[bytes] = None
+    index_param2: int = 0         # HNSW ef_construction (0 = unknown)
+    extras: List[ExtraSegment] = dataclasses.field(default_factory=list)
+    tombs: Optional[List[np.ndarray]] = None   # [1+len(extras)] bool bitmaps
+
+
+def _bytes_per_vector(dim_pad: int, bits: int, n4_dims: int) -> int:
+    if bits == 4:
+        return dim_pad // 2
+    if bits == 2:
+        return dim_pad // 4
+    return n4_dims // 2 + (dim_pad - n4_dims) // 4   # mixed
 
 
 def save(path: str, f: MvecFile) -> None:
     enc = f.enc
-    version = 7 if enc.perm is not None else 6
+    mutated = bool(f.extras) or (
+        f.tombs is not None and any(t.any() for t in f.tombs)
+    )
+    if mutated:
+        version = 8
+    else:
+        version = 7 if enc.perm is not None else 6
     has_std = enc.std is not None
+    has_perm = enc.perm is not None
     header = struct.pack(
         "<4sIIBBBBQQIIIBB10s",
         MAGIC, version, enc.dim,
         _METRIC_CODE[enc.metric], enc.bits, f.index_type, 0,
         enc.n, enc.seed & 0xFFFFFFFFFFFFFFFF,
-        enc.n4_dims, f.index_param, 0,
-        1 if has_std else 0, 0, b"\x00" * 10,
+        enc.n4_dims, f.index_param, f.index_param2,
+        1 if has_std else 0,
+        1 if (version == 8 and has_perm) else 0,
+        b"\x00" * 10,
     )
     assert len(header) == HEADER_LEN, len(header)
     buf = io.BytesIO()
@@ -95,6 +189,18 @@ def save(path: str, f: MvecFile) -> None:
     blob = f.index_data or b""
     buf.write(struct.pack("<Q", len(blob)))
     buf.write(blob)
+    if version == 8:
+        buf.write(struct.pack("<I", len(f.extras)))
+        for seg in f.extras:
+            buf.write(struct.pack("<Q", seg.enc.seed & 0xFFFFFFFFFFFFFFFF))
+            _write_array(buf, np.asarray(seg.enc.packed, dtype=np.uint8))
+            _write_array(buf, np.asarray(seg.ids, dtype=np.uint64))
+            _write_array(buf, np.asarray(seg.enc.qnorms, dtype=np.float32))
+        tombs = f.tombs or [np.zeros(enc.n, dtype=bool)] + [
+            np.zeros(seg.ids.shape[0], dtype=bool) for seg in f.extras
+        ]
+        for t in tombs:
+            _write_array(buf, np.packbits(np.asarray(t, dtype=bool)))
     with open(path, "wb") as fh:
         fh.write(buf.getvalue())
 
@@ -102,59 +208,98 @@ def save(path: str, f: MvecFile) -> None:
 def load(path: str) -> MvecFile:
     with open(path, "rb") as fh:
         data = fh.read()
+    if len(data) < HEADER_LEN:
+        raise ValueError(
+            f".mvec truncated in block 'header': need {HEADER_LEN} bytes, "
+            f"only {len(data)} available"
+        )
     (
         magic, version, dim, metric_c, bits, index_type, _pad,
-        count, seed, n4_dims, index_param, _res, has_std, _pad2, _tail,
+        count, seed, n4_dims, index_param, param2, has_std, has_perm, _tail,
     ) = struct.unpack("<4sIIBBBBQQIIIBB10s", data[:HEADER_LEN])
     if magic != MAGIC:
         raise ValueError(f"not a .mvec file (magic={magic!r})")
     # Versions 1-5 predate this header layout entirely — parsing them against
     # the v6 offsets would silently misread every field, so reject anything
-    # outside the two layouts we actually implement.
-    if version not in (6, 7):
+    # outside the three layouts we actually implement.
+    if version not in SUPPORTED_VERSIONS:
         raise ValueError(
             f"unsupported .mvec version {version} (this reader supports "
-            f"versions 6 and 7)"
+            f"versions {', '.join(map(str, SUPPORTED_VERSIONS))})"
         )
-    buf = io.BytesIO(data[HEADER_LEN:])
+    rd = _Reader(data, HEADER_LEN)
     std = None
     if has_std:
-        mean = _read_array(buf, np.float32)
-        inv = _read_array(buf, np.float32)
+        mean = rd.array(np.float32, "std_mean", count=dim)
+        inv = rd.array(np.float32, "std_inv_std", count=dim)
         std = GlobalStd(mean=float(mean[0]), inv_std=float(inv[0]))
-    perm = None
-    if version >= 7:
-        perm = _read_array(buf, np.int32)
-    packed = _read_array(buf, np.uint8)
-    ids = _read_array(buf, np.uint64)
-    qnorms = _read_array(buf, np.float32)
-    (blob_len,) = struct.unpack("<Q", buf.read(8))
-    blob = buf.read(blob_len) if blob_len else None
-
     from .rhdh import next_pow2
 
     dim_pad = next_pow2(dim)
-    if bits == 4:
-        bytes_per = dim_pad // 2
-    elif bits == 2:
-        bytes_per = dim_pad // 4
-    else:  # mixed
-        bytes_per = n4_dims // 2 + (dim_pad - n4_dims) // 4
-    packed = packed.reshape(count, bytes_per)
-    enc = qz.Encoded(
-        packed=jnp.asarray(packed), qnorms=jnp.asarray(qnorms), seed=int(seed),
-        metric=_METRIC_NAME[metric_c], bits=int(bits), dim=int(dim),
-        dim_pad=dim_pad, n4_dims=int(n4_dims), std=std, perm=perm,
-    )
+    perm = None
+    if version == 7 or (version == 8 and has_perm):
+        perm = np.asarray(rd.array(np.int32, "perm", count=dim_pad))
+    bytes_per = _bytes_per_vector(dim_pad, bits, n4_dims)
+
+    def read_segment(prefix: str, n_rows: Optional[int], seg_seed: int):
+        packed = rd.array(np.uint8, f"{prefix}vectors")
+        if n_rows is None:
+            if packed.size % bytes_per:
+                raise ValueError(
+                    f".mvec corrupt block '{prefix}vectors': {packed.size} "
+                    f"bytes is not a multiple of {bytes_per} bytes/vector"
+                )
+            n_rows = packed.size // bytes_per
+        elif packed.size != n_rows * bytes_per:
+            raise ValueError(
+                f".mvec corrupt block '{prefix}vectors': expected "
+                f"{n_rows * bytes_per} bytes ({n_rows} rows x {bytes_per}), "
+                f"found {packed.size}"
+            )
+        ids = rd.array(np.uint64, f"{prefix}ids", count=n_rows)
+        qnorms = rd.array(np.float32, f"{prefix}norms", count=n_rows)
+        enc = qz.Encoded(
+            packed=jnp.asarray(packed.reshape(n_rows, bytes_per)),
+            qnorms=jnp.asarray(qnorms), seed=int(seg_seed),
+            metric=_METRIC_NAME[metric_c], bits=int(bits), dim=int(dim),
+            dim_pad=dim_pad, n4_dims=int(n4_dims), std=std, perm=perm,
+        )
+        return enc, np.asarray(ids)
+
+    enc, ids = read_segment("", int(count), int(seed))
+    blob_len = rd.u64("index_data length")
+    blob = rd.take(blob_len, "index_data") if blob_len else None
+
+    extras: List[ExtraSegment] = []
+    tombs: Optional[List[np.ndarray]] = None
+    if version == 8:
+        n_extra = rd.u32("segment table")
+        for i in range(n_extra):
+            seg_seed = rd.u64(f"segment[{i}] seed")
+            seg_enc, seg_ids = read_segment(f"segment[{i}] ", None, seg_seed)
+            extras.append(ExtraSegment(enc=seg_enc, ids=seg_ids))
+        tombs = []
+        for i, n_rows in enumerate([int(count)] + [e.ids.shape[0] for e in extras]):
+            packed_bits = rd.array(
+                np.uint8, f"tombstones[{i}]", count=(n_rows + 7) // 8)
+            tombs.append(np.unpackbits(packed_bits)[:n_rows].astype(bool))
+    rd.expect_eof()
+
     return MvecFile(
         enc=enc, ids=ids, index_type=int(index_type),
         index_param=int(index_param), index_data=blob,
+        index_param2=int(param2),
+        extras=extras, tombs=tombs,
     )
 
 
 # ---------------------------------------------------------------------------
 # Backend blobs (INDEX_DATA): length-prefixed numpy arrays.
 # ---------------------------------------------------------------------------
+
+def _blob_reader(blob: bytes) -> _Reader:
+    return _Reader(blob, 0)
+
 
 def pack_ivf_blob(centroids: np.ndarray, order: np.ndarray, offsets: np.ndarray) -> bytes:
     buf = io.BytesIO()
@@ -166,10 +311,19 @@ def pack_ivf_blob(centroids: np.ndarray, order: np.ndarray, offsets: np.ndarray)
 
 
 def unpack_ivf_blob(blob: bytes):
-    buf = io.BytesIO(blob)
-    cents = _read_array(buf, np.float32)
-    nlist, d = struct.unpack("<II", buf.read(8))
-    return cents.reshape(nlist, d), _read_array(buf, np.int64), _read_array(buf, np.int64)
+    rd = _blob_reader(blob)
+    cents = rd.array(np.float32, "ivf centroids")
+    nlist = rd.u32("ivf nlist")
+    d = rd.u32("ivf dim")
+    if cents.size != nlist * d:
+        raise ValueError(
+            f".mvec corrupt block 'ivf centroids': expected {nlist * d} "
+            f"elements, found {cents.size}"
+        )
+    order = rd.array(np.int64, "ivf order")
+    offsets = rd.array(np.int64, "ivf offsets")
+    rd.expect_eof()
+    return cents.reshape(nlist, d), order, offsets
 
 
 def pack_hnsw_blob(idx) -> bytes:
@@ -183,10 +337,11 @@ def pack_hnsw_blob(idx) -> bytes:
 
 
 def unpack_hnsw_blob(blob: bytes):
-    buf = io.BytesIO(blob)
-    n, m0, nhi, entry, max_level = struct.unpack("<IIIii", buf.read(20))
-    nbr0 = _read_array(buf, np.int32).reshape(n, m0)
-    nbr_hi = _read_array(buf, np.int32)
+    rd = _blob_reader(blob)
+    n, m0, nhi, entry, max_level = struct.unpack("<IIIii", rd.take(20, "hnsw header"))
+    nbr0 = rd.array(np.int32, "hnsw neighbors0", count=n * m0).reshape(n, m0)
+    nbr_hi = rd.array(np.int32, "hnsw neighbors_hi", count=nhi * n * (m0 // 2))
     nbr_hi = nbr_hi.reshape(nhi, n, m0 // 2) if nhi else np.zeros((0, n, m0 // 2), np.int32)
-    node_level = _read_array(buf, np.int8)
+    node_level = rd.array(np.int8, "hnsw node_level", count=n)
+    rd.expect_eof()
     return nbr0, nbr_hi, node_level, entry, max_level

@@ -163,16 +163,20 @@ def encode_mixed(
     avg_bits: float = 3.0,
     std: Optional[GlobalStd] = None,
     perm: Optional[np.ndarray] = None,
+    n4_dims: Optional[int] = None,
 ) -> Encoded:
     """Mixed 4/2-bit encoding.  If ``perm`` is None the 4-bit block holds the
     LEADING dims (the paper's current implementation, §3.2 'Implementation
     status'); passing a variance permutation enables the v7 persisted-perm mode.
+    ``n4_dims`` pins the 4/2 split directly (segment encodes must match the
+    base segment's packed layout byte-for-byte) instead of deriving it from
+    ``avg_bits``.
     """
     n, d = x.shape
     prepared = prepare(x.astype(jnp.float32), metric, std)
     rot = rhdh_apply(prepared, seed, normalized=False)
     d_pad = rot.shape[-1]
-    n4 = allocate_bits(d_pad, avg_bits)
+    n4 = allocate_bits(d_pad, avg_bits) if n4_dims is None else n4_dims
 
     if perm is not None:
         rot = rot[:, jnp.asarray(perm)]

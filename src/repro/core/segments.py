@@ -1,0 +1,280 @@
+"""Segmented mutable corpus lifecycle (DESIGN.md §6).
+
+Every backend in this repo builds an IMMUTABLE quantized artifact — the
+SQLite deployment profile the paper targets (on-device RAG, offline agents)
+needs corpora that grow and churn between sessions.  The resolution here is
+the classic LSM/FAISS shape: a ``MonaVec`` is a *sequence of immutable
+quantized segments* plus per-segment *deletion bitmaps*:
+
+  * segment 0 is the backend built by ``MonaVec.build`` (BruteForce, IVF or
+    HNSW), quantized under the root seed;
+  * ``add(vectors, ids)`` quantizes a NEW segment through the same
+    RHDH + Lloyd-Max pipeline, under a seed derived deterministically from
+    (root seed, segment ordinal) — ``derive_segment_seed`` — so replaying
+    the same op sequence reproduces the same packed bytes everywhere;
+  * ``delete(ids)`` never rewrites codes: it sets tombstone bits;
+  * ``compact()`` deterministically rewrites the live rows into a single
+    fresh segment-0 (codes → rotated space → inverse RHDH → re-encode under
+    the root seed; IVF/HNSW rebuild their structure over the reconstructed
+    vectors).
+
+``search`` scans every segment and merges PRE-top-k: tombstoned (and
+disallowed) rows are masked to the NEG sentinel before any ranking, so the
+§3.5 pre-filter guarantee ("exactly min(k, live∩allowed) real results")
+survives mutation.  BruteForce concatenates the per-segment packed-scan
+score matrices into one [b, n_total] matrix and runs a single stable top-k;
+IVF/HNSW search the main index (tombstones folded into the allowlist mask)
+and merge a brute-force side-scan of the extra segments through the same
+``scoring.topk`` machinery — main-index candidates occupy the lower columns,
+so stable top-k resolves score ties exactly like the concatenated-row-order
+oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import quantize as qz
+from .allowlist import NEG, Allowlist
+from .rhdh import rhdh_inverse
+from .scoring import topk
+from .standardize import L2
+
+#: "no result" external id (the IVF/HNSW sentinel contract, extended to every
+#: mutated-index search path).
+SENTINEL_ID = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+_MASK64 = 0xFFFFFFFFFFFFFFFF
+_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def derive_segment_seed(root_seed: int, ordinal: int) -> int:
+    """Deterministic per-segment RHDH seed.
+
+    Ordinal 0 (the base segment) keeps the root seed — a never-mutated index
+    is byte-identical to the pre-segment format.  Later ordinals go through
+    a splitmix64 finalizer so segment rotations are mutually independent but
+    a pure function of (root, ordinal): the same op sequence replays to the
+    same packed bytes on any platform.
+    """
+    if ordinal == 0:
+        return root_seed & _MASK64
+    z = (root_seed + _GOLDEN * ordinal) & _MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return z ^ (z >> 31)
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable quantized block + its (mutable) deletion bitmap."""
+
+    enc: qz.Encoded
+    ids: np.ndarray                  # [n] u64 external ids
+    tombs: np.ndarray                # [n] bool — True = deleted
+
+    @property
+    def n(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int(self.n - self.tombs.sum())
+
+
+@dataclasses.dataclass
+class SegmentedState:
+    """The mutation state riding on a MonaVec: base-segment tombstones plus
+    the extra segments appended by add()."""
+
+    base_tombs: np.ndarray                       # [base_n] bool
+    extras: List[Segment] = dataclasses.field(default_factory=list)
+    next_ordinal: int = 1                        # ordinal of the NEXT add()
+
+    @staticmethod
+    def fresh(base_n: int) -> "SegmentedState":
+        return SegmentedState(base_tombs=np.zeros(base_n, dtype=bool))
+
+    @property
+    def is_static(self) -> bool:
+        """True when the index is indistinguishable from a build-once one
+        (no extra segments, nothing tombstoned) — the fast path, and the
+        condition under which save() still writes v6/v7."""
+        return not self.extras and not self.base_tombs.any()
+
+
+# ---------------------------------------------------------------------------
+# Segment encoding: the add() quantization path.
+# ---------------------------------------------------------------------------
+
+def encode_segment(vectors: jnp.ndarray, base: qz.Encoded, seed: int) -> qz.Encoded:
+    """Quantize a new segment under the BASE segment's configuration (metric,
+    bit mode, std, v7 permutation) but its own derived seed."""
+    vectors = jnp.asarray(vectors)
+    if base.bits in (2, 4):
+        return qz.encode(vectors, metric=base.metric, seed=seed,
+                         bits=base.bits, std=base.std)
+    # Mixed mode: pin n4_dims to the base split (allocate_bits is avg-driven;
+    # the override keeps every segment's packed layout byte-compatible).
+    return qz.encode_mixed(vectors, metric=base.metric, seed=seed,
+                           std=base.std, perm=base.perm, n4_dims=base.n4_dims)
+
+
+def reconstruct_vectors(enc: qz.Encoded) -> np.ndarray:
+    """Codes → approximate input-space f32 rows (the compact() rewrite path).
+
+    Dequantize to rotated space, invert the unnormalized RHDH (Z = H D x, so
+    x = D H Z / d'), then undo the metric preparation: L2 standardization is
+    affine-invertible; cosine preparation loses magnitude, which cosine
+    scoring never used; dot preparation is the identity.  Pure function of
+    the codes — compaction is deterministic by construction.
+    """
+    deq = qz.decode(enc)                               # [n, d'] rotated f32
+    d_pad = deq.shape[-1]
+    x = rhdh_inverse(deq, enc.seed, enc.dim) * np.float32(1.0 / np.sqrt(d_pad))
+    x = np.asarray(x, dtype=np.float32)
+    if enc.metric == L2 and enc.std is not None:
+        x = x / np.float32(enc.std.inv_std) + np.float32(enc.std.mean)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Segmented search.
+# ---------------------------------------------------------------------------
+
+def rows_to_ids(rows: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Map row positions to external ids; negative rows → SENTINEL_ID
+    (the shared no-result contract of every candidate-set search path)."""
+    out = ids[np.maximum(rows, 0)].copy()
+    out[rows < 0] = SENTINEL_ID
+    return out
+
+
+def _split_allow_mask(
+    allow: Optional[Allowlist], base_n: int, extras: Sequence[Segment]
+) -> Tuple[Optional[np.ndarray], List[Optional[np.ndarray]]]:
+    """Slice a concatenated-row allowlist into per-segment masks.
+
+    Allowlists against a mutated index are built over ``MonaVec.ids`` — the
+    concatenation of every segment's id array (tombstoned rows included, so
+    positions are stable across delete()).
+    """
+    if allow is None:
+        return None, [None] * len(extras)
+    mask = np.asarray(allow.mask, dtype=bool)
+    total = base_n + sum(s.n for s in extras)
+    if mask.shape[0] != total:
+        raise ValueError(
+            f"allowlist mask covers {mask.shape[0]} rows but the segmented "
+            f"index has {total}; build it from MonaVec.ids"
+        )
+    out, off = [], base_n
+    for s in extras:
+        out.append(mask[off: off + s.n])
+        off += s.n
+    return mask[:base_n], out
+
+
+def _side_scan(
+    extras: Sequence[Segment],
+    queries: jnp.ndarray,
+    extra_masks: Sequence[Optional[np.ndarray]],
+    use_kernel: Optional[bool],
+    interpret: Optional[bool],
+) -> Tuple[jnp.ndarray, np.ndarray]:
+    """Brute-force packed scan of every extra segment.
+
+    Returns (scores [b, n_extra], ids [n_extra]) with tombstoned/disallowed
+    rows already masked to NEG — ready to merge pre-top-k.
+    """
+    score_cols, id_cols = [], []
+    for seg, am in zip(extras, extra_masks):
+        q_rot = qz.encode_query(queries, seg.enc)
+        s = ops.score_packed(q_rot, seg.enc, use_kernel=use_kernel,
+                             interpret=interpret)
+        live = ~seg.tombs if am is None else (~seg.tombs & am)
+        s = jnp.where(jnp.asarray(live)[None, :], s, NEG)
+        score_cols.append(s)
+        id_cols.append(seg.ids)
+    return jnp.concatenate(score_cols, axis=1), np.concatenate(id_cols)
+
+
+def search_segmented(
+    backend,
+    state: SegmentedState,
+    queries: jnp.ndarray,
+    k: int,
+    *,
+    allow: Optional[Allowlist] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    **kwargs,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k over base segment + extras, tombstones masked pre-top-k.
+
+    Slots with no admissible candidate (k exceeds the live∩allowed count)
+    come back with SENTINEL_ID and a NEG score — the IVF/HNSW no-result
+    contract, now uniform across every mutated search path.
+    """
+    from .bruteforce import BruteForceIndex
+
+    queries = jnp.atleast_2d(queries)
+    base_n = backend.enc.n
+    base_mask, extra_masks = _split_allow_mask(allow, base_n, state.extras)
+
+    if isinstance(backend, BruteForceIndex):
+        if kwargs:
+            # The static path rejects unknown knobs with a TypeError; a
+            # mutated index must not start silently swallowing them.
+            raise TypeError(
+                f"unexpected search kwargs for the BruteForce backend: "
+                f"{sorted(kwargs)}")
+        # One concatenated packed scan: per-segment score matrices (each the
+        # same kernel scan a static index runs) side by side, one stable
+        # top-k over [b, n_total].
+        s0 = backend.scores(queries, use_kernel=use_kernel,
+                            interpret=interpret)
+        live0 = ~state.base_tombs if base_mask is None else (
+            ~state.base_tombs & base_mask)
+        s0 = jnp.where(jnp.asarray(live0)[None, :], s0, NEG)
+        if state.extras:
+            s_ext, ids_ext = _side_scan(state.extras, queries, extra_masks,
+                                        use_kernel, interpret)
+            scores = jnp.concatenate([s0, s_ext], axis=1)
+            all_ids = np.concatenate([backend.ids, ids_ext])
+        else:
+            scores, all_ids = s0, backend.ids
+        k_eff = min(k, scores.shape[1])
+        vals, pos = topk(scores, k_eff)
+        rows = np.where(np.asarray(vals) > NEG, np.asarray(pos), -1)
+        return np.asarray(vals), rows_to_ids(rows, all_ids)
+
+    # IVF / HNSW: main-index search with tombstones folded into the §3.5
+    # pre-filter mask, then a brute-force side-scan of the extras, merged by
+    # one stable top-k (main candidates first: ties resolve to the base
+    # segment, matching concatenated row order).
+    live0 = ~state.base_tombs if base_mask is None else (
+        ~state.base_tombs & base_mask)
+    eff_allow = Allowlist(mask=live0, n_allowed=int(live0.sum()))
+    main_vals, main_ids = backend.search(
+        queries, k, allow=eff_allow, use_kernel=use_kernel,
+        interpret=interpret, **kwargs,
+    )
+    if not state.extras:
+        return main_vals, main_ids
+    s_ext, ids_ext = _side_scan(state.extras, queries, extra_masks,
+                                use_kernel, interpret)
+    b = main_vals.shape[0]
+    cand_scores = jnp.concatenate([jnp.asarray(main_vals), s_ext], axis=1)
+    cand_ids = np.concatenate(
+        [main_ids, np.broadcast_to(ids_ext, (b, ids_ext.shape[0]))], axis=1)
+    vals, pos = topk(cand_scores, min(k, cand_scores.shape[1]))
+    pos = np.asarray(pos)
+    out_ids = np.take_along_axis(cand_ids, pos, axis=1)
+    out_ids[np.asarray(vals) <= NEG] = SENTINEL_ID
+    return np.asarray(vals), out_ids

@@ -75,3 +75,21 @@ class TenantRegistry:
         if ns is None:
             raise PermissionError("401: token rejected")
         return sorted(self._spaces.get(ns, {}).keys())
+
+    # -- per-namespace mutation (DESIGN.md §6) -----------------------------
+    #
+    # The segmented lifecycle surfaces through the same token -> namespace
+    # -> collection resolution as search: a tenant can only grow/churn its
+    # own collections, and every path 401s exactly like get().
+
+    def add(self, token: Optional[str], name: str, vectors, ids=None):
+        """Append rows to a tenant's collection; returns the assigned ids."""
+        return self.get(token, name).add(vectors, ids=ids)
+
+    def delete(self, token: Optional[str], name: str, ids) -> int:
+        """Tombstone rows in a tenant's collection; returns rows deleted."""
+        return self.get(token, name).delete(ids)
+
+    def compact(self, token: Optional[str], name: str) -> int:
+        """Compact a tenant's collection; returns rows reclaimed."""
+        return self.get(token, name).compact()

@@ -7,10 +7,18 @@ pure function: token -> namespace -> collection -> top-k.  This CLI builds
     PYTHONPATH=src python -m repro.launch.serve --n 50000 [--index hnsw]
     PYTHONPATH=src python -m repro.launch.serve --load corpus.mvec
     PYTHONPATH=src python -m repro.launch.serve --n 200000 --shard
+    PYTHONPATH=src python -m repro.launch.serve --n 20000 --mutate --compact
 
 --shard serves the BruteForce scan through repro.dist: the corpus is split
 over every local device and each batch runs the shard_map scan + cross-shard
 merge (identical results to the single-device path, by construction).
+
+--mutate exercises the segmented lifecycle endpoints (DESIGN.md §6) through
+the tenant registry — the offline analogue of the paper's POST /add,
+DELETE /ids, POST /compact routes: after the initial query phase it add()s
+a delta batch, delete()s a stride of ids, re-serves (scans now cover base +
+extra segments with tombstones masked pre-top-k), and with --compact
+rewrites the live rows into one segment and serves a final phase.
 """
 
 from __future__ import annotations
@@ -36,6 +44,16 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--token", default=None, help="tenant token (standalone mode)")
+    ap.add_argument("--mutate", action="store_true",
+                    help="run the add/delete/compact lifecycle phases after "
+                         "the initial query phase (DESIGN.md §6)")
+    ap.add_argument("--add-n", type=int, default=None,
+                    help="rows to add() in the mutation phase "
+                         "(default: 10%% of the corpus)")
+    ap.add_argument("--delete-every", type=int, default=17,
+                    help="delete() every Nth id in the mutation phase")
+    ap.add_argument("--compact", action="store_true",
+                    help="compact() after the mutation phase and re-serve")
     ap.add_argument("--shard", action="store_true",
                     help="shard the corpus over all local devices (bruteforce)")
     ap.add_argument("--use-kernel", default="auto", choices=["auto", "on", "off"],
@@ -68,6 +86,10 @@ def main() -> None:
         # The shard_map scan carries its own dispatch; don't pretend to
         # force a path we would silently ignore.
         raise SystemExit("--use-kernel/--interpret do not apply to --shard")
+    if args.shard and args.mutate:
+        # ShardedMonaVec is a static row partition; mutate on the unsharded
+        # index, compact, then shard the result.
+        raise SystemExit("--mutate does not apply to --shard (compact first)")
 
     if args.load:
         index = MonaVec.load(args.load)
@@ -102,23 +124,54 @@ def main() -> None:
     ns = reg.put(args.token, "default", index)
     print(f"[serve] namespace={ns!r}")
 
-    total, t0 = 0, time.time()
-    for b in range(args.batches):
-        if corpus is not None:
-            q = queries_from_corpus(corpus, 100 + b, args.batch_size)
-        else:
-            rng = np.random.RandomState(100 + b)
-            q = rng.randn(args.batch_size, dim).astype(np.float32)
-        idx = reg.get(args.token, "default")
-        if args.shard:   # sharded scan has its own shard_map dispatch
-            scores, ids = idx.search(q, k=args.k)
-        else:
-            scores, ids = idx.search(q, k=args.k, use_kernel=use_kernel,
-                                     interpret=interpret)
-        total += len(q)
-    dt = time.time() - t0
-    print(f"[serve] {total} queries in {dt:.2f}s -> {total / dt:.0f} QPS "
-          f"(deterministic: rerun reproduces identical ids)")
+    def run_phase(label: str) -> None:
+        total, t0 = 0, time.time()
+        for b in range(args.batches):
+            if corpus is not None:
+                q = queries_from_corpus(corpus, 100 + b, args.batch_size)
+            else:
+                rng = np.random.RandomState(100 + b)
+                q = rng.randn(args.batch_size, dim).astype(np.float32)
+            idx = reg.get(args.token, "default")
+            if args.shard:   # sharded scan has its own shard_map dispatch
+                scores, ids = idx.search(q, k=args.k)
+            else:
+                scores, ids = idx.search(q, k=args.k, use_kernel=use_kernel,
+                                         interpret=interpret)
+            total += len(q)
+        dt = time.time() - t0
+        print(f"[serve] {label}: {total} queries in {dt:.2f}s -> "
+              f"{total / dt:.0f} QPS "
+              f"(deterministic: rerun reproduces identical ids)")
+
+    run_phase("static")
+
+    if args.mutate:
+        # The paper's service-layer mutation routes, as registry calls.
+        live = reg.get(args.token, "default")
+        add_n = args.add_n if args.add_n is not None else max(1, live.n_total // 10)
+        rng = np.random.RandomState(7)
+        delta = rng.randn(add_n, dim).astype(np.float32)
+        t0 = time.time()
+        new_ids = reg.add(args.token, "default", delta)
+        print(f"[serve] add: {len(new_ids)} rows quantized into segment "
+              f"ordinal {live.mut.next_ordinal - 1} in {time.time() - t0:.2f}s")
+        victims = live.ids[::args.delete_every]
+        n_del = reg.delete(args.token, "default", victims)
+        print(f"[serve] delete: {n_del} rows tombstoned "
+              f"(live {live.n_live}/{live.n_total})")
+        run_phase("mutated")
+        if args.compact:
+            t0 = time.time()
+            reclaimed = reg.compact(args.token, "default")
+            print(f"[serve] compact: reclaimed {reclaimed} rows into one "
+                  f"segment in {time.time() - t0:.2f}s")
+            run_phase("compacted")
+        if args.save:
+            live.save(args.save)
+            print(f"[serve] saved mutated index to {args.save} "
+                  f"(v8 multi-segment layout)" if not live.mut.is_static
+                  else f"[serve] saved {args.save}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,163 @@
+"""Shared harness for the segmented-lifecycle tests (deterministic +
+hypothesis property suites both drive it, so the oracle logic is exercised
+even where hypothesis is unavailable).
+
+The oracle is the ISSUE's "brute-force oracle over the surviving rows'
+per-segment codes": every segment's adjusted score matrix computed by the
+same ``ops.score_packed`` primitive the BruteForce path uses, tombstoned
+rows masked to NEG, one stable top-k over the concatenation.  For the
+BruteForce backend the search path IS this computation, so equality is
+exact (scores and ids, bit for bit).  IVF (nprobe=nlist) and HNSW (ef ≥ n)
+visit every live row but score candidates through the gathered-scan tiling,
+which can differ from the full scan in the last ulp — those backends are
+compared as per-row id SETS, with scores allclose.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MonaVec, SENTINEL_ID
+from repro.core import quantize as qz
+from repro.core.allowlist import NEG
+from repro.core.scoring import topk
+from repro.kernels import ops
+
+
+def build_index(kind: str, x: np.ndarray, *, metric: str = "cosine",
+                bits: int = 4, seed: int = 0x6D6F6E61, **kw) -> MonaVec:
+    if kind == "ivf":
+        kw.setdefault("nlist", max(2, len(x) // 8))
+        kw.setdefault("train_iters", 5)
+    elif kind == "hnsw":
+        kw.setdefault("m", 4)
+        kw.setdefault("ef_construction", 32)
+    return MonaVec.build(x, metric=metric, index=kind, bits=bits, seed=seed, **kw)
+
+
+def apply_ops(idx: MonaVec, ops_list: List[Tuple]) -> None:
+    """Replay an op sequence: ("add", vecs) | ("delete", ids) | ("compact",).
+
+    Ops that would empty the index or collide with live ids are skipped —
+    the generators below may produce them, and a skip is itself
+    deterministic, so replays stay identical.
+    """
+    for op in ops_list:
+        if op[0] == "add":
+            try:
+                idx.add(op[1])
+            except ValueError:
+                pass
+        elif op[0] == "delete":
+            idx.delete(op[1])
+        elif op[0] == "compact":
+            try:
+                idx.compact()
+            except ValueError:     # zero live rows: skip, keep replaying
+                pass
+        else:
+            raise AssertionError(f"unknown op {op[0]!r}")
+
+
+def oracle_search(
+    idx: MonaVec,
+    queries: np.ndarray,
+    k: int,
+    *,
+    use_kernel: Optional[bool] = False,
+    interpret: Optional[bool] = None,
+    allow_mask: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-segment brute-force scan of the CURRENT codes, stable top-k."""
+    encs = [idx.backend.enc] + [s.enc for s in idx.mut.extras]
+    all_ids = np.concatenate([idx.backend.ids] + [s.ids for s in idx.mut.extras])
+    live = np.concatenate([~idx.mut.base_tombs] + [~s.tombs for s in idx.mut.extras])
+    if allow_mask is not None:
+        live = live & allow_mask
+    cols = []
+    for enc in encs:
+        q_rot = qz.encode_query(jnp.asarray(queries), enc)
+        cols.append(ops.score_packed(q_rot, enc, use_kernel=use_kernel,
+                                     interpret=interpret))
+    scores = np.array(jnp.concatenate(cols, axis=1))
+    scores[:, ~live] = NEG
+    vals, pos = topk(jnp.asarray(scores), min(k, scores.shape[1]))
+    vals, pos = np.asarray(vals), np.asarray(pos)
+    out = all_ids[pos].copy()
+    out[vals <= NEG] = SENTINEL_ID
+    return vals, out
+
+
+def assert_matches_oracle(
+    idx: MonaVec, queries: np.ndarray, k: int, kind: str, *,
+    use_kernel: Optional[bool] = False, interpret: Optional[bool] = None,
+) -> None:
+    if kind == "ivf":
+        skw = {"nprobe": idx.backend.nlist}        # probe every cell
+    elif kind == "hnsw":
+        skw = {"ef": max(idx.n_total, k)}          # full beam
+    else:
+        skw = {}
+    got_s, got_i = idx.search(queries, k, use_kernel=use_kernel,
+                              interpret=interpret, **skw)
+    want_s, want_i = oracle_search(idx, queries, k, use_kernel=use_kernel,
+                                   interpret=interpret)
+    if kind == "bruteforce":
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_s, want_s)
+        return
+    # Gathered-scan scores can differ from the full scan in the last ulp, so
+    # compare the result SETS row by row (sentinels included) + score values.
+    for gr, wr in zip(got_i.tolist(), want_i.tolist()):
+        assert set(gr) == set(wr), (got_i, want_i)
+    np.testing.assert_allclose(got_s, want_s, rtol=2e-5, atol=2e-6)
+
+
+def assert_topk_admissible(
+    idx: MonaVec, queries: np.ndarray, k: int, kind: str, *,
+    use_kernel: Optional[bool] = False, interpret: Optional[bool] = None,
+    tol: float = 1e-4,
+) -> None:
+    """Tie-robust oracle check for random (hypothesis-generated) corpora.
+
+    Duplicate rows produce exact score ties, and equally-scored rows are
+    interchangeable at the k boundary (the HNSW beam's visit order breaks
+    ties differently from concatenated row order).  So instead of exact id
+    equality, assert: exactly min(k, n_live) distinct real results, every
+    one admissible (oracle score ≥ the oracle's k-th live score − tol), and
+    the returned score profile matching the oracle's top-k profile.
+    """
+    if kind == "ivf":
+        skw = {"nprobe": idx.backend.nlist}
+    elif kind == "hnsw":
+        skw = {"ef": max(idx.n_total, k)}
+    else:
+        skw = {}
+    got_s, got_i = idx.search(queries, k, use_kernel=use_kernel,
+                              interpret=interpret, **skw)
+    want_s, want_i = oracle_search(idx, queries, idx.n_total,
+                                   use_kernel=use_kernel, interpret=interpret)
+    r = min(k, idx.n_live)
+    for row in range(got_i.shape[0]):
+        real = got_i[row][got_i[row] != SENTINEL_ID]
+        assert real.shape[0] == r, (got_i[row], r)
+        assert len(set(real.tolist())) == r
+        if r == 0:
+            continue
+        kth = want_s[row][r - 1]
+        admissible = set(want_i[row][want_s[row] >= kth - tol].tolist())
+        assert set(real.tolist()) <= admissible, (real, admissible)
+        np.testing.assert_allclose(np.sort(got_s[row][:r]),
+                                   np.sort(want_s[row][:r]),
+                                   rtol=2e-5, atol=tol)
+
+
+def save_digest(idx: MonaVec, tmpdir: str, name: str = "x.mvec") -> str:
+    p = os.path.join(tmpdir, name)
+    idx.save(p)
+    return hashlib.sha256(open(p, "rb").read()).hexdigest()

@@ -254,11 +254,12 @@ class TestMvecFormat:
         with pytest.raises(ValueError):
             fmt.load(str(p))
 
-    @pytest.mark.parametrize("version", [1, 3, 5, 8])
+    @pytest.mark.parametrize("version", [1, 3, 5, 9])
     def test_rejects_unsupported_versions(self, version, corpus, tmp_path):
         """Versions 1-5 predate the v6 header layout (parsing them against it
         would misread every field) and future versions are unknown: all must
-        be rejected with an error naming the version found."""
+        be rejected with an error naming the version found.  (8 is the
+        segmented layout since DESIGN.md §6 — no longer rejected.)"""
         import struct
         from repro.core import mvec_format as fmt
         p = str(tmp_path / "v.mvec")

@@ -1,0 +1,122 @@
+"""Hypothesis property suite for the segmented lifecycle (DESIGN.md §6).
+
+Random interleavings of add/delete/compact across metric × bits × backend:
+  * search() must match the per-segment brute-force oracle over the
+    surviving rows' codes (exact for BruteForce — the scan IS the oracle
+    computation; tie-robust admissible-set equality for IVF/HNSW, which
+    score candidates through the gathered-scan tiling);
+  * two identical op sequences must serialize byte-identically.
+
+Op sequences are generated as abstract tokens (op kind + integer seeds) and
+materialized through RandomState, so hypothesis shrinking stays cheap and
+every example is replayable.
+"""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                                         "(pip install -r requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from tests.lifecycle_harness import (apply_ops, assert_matches_oracle,  # noqa: E402
+                                     assert_topk_admissible, build_index,
+                                     save_digest)
+
+DIM = 8
+
+_add = st.tuples(st.just("add"), st.integers(0, 2**16),
+                 st.integers(min_value=1, max_value=5))
+_delete = st.tuples(st.just("delete"),
+                    st.lists(st.integers(0, 40), min_size=1, max_size=4))
+_compact = st.tuples(st.just("compact"))
+op_sequences = st.lists(st.one_of(_add, _delete, _compact),
+                        min_size=1, max_size=6)
+
+
+def _materialize(tokens):
+    """Abstract op tokens → concrete ops (pure function of the tokens)."""
+    out = []
+    for tok in tokens:
+        if tok[0] == "add":
+            rng = np.random.RandomState(tok[1])
+            out.append(("add", rng.randn(tok[2], DIM).astype(np.float32)))
+        elif tok[0] == "delete":
+            out.append(("delete", list(tok[1])))
+        else:
+            out.append(("compact",))
+    return out
+
+
+def _base(seed: int, n: int = 24) -> np.ndarray:
+    return np.random.RandomState(seed).randn(n, DIM).astype(np.float32)
+
+
+COMMON = dict(deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+class TestBruteForceExactEquivalence:
+    @settings(max_examples=25, **COMMON)
+    @given(tokens=op_sequences,
+           metric=st.sampled_from(["cosine", "dot", "l2"]),
+           bits=st.sampled_from([4, 2]))
+    def test_search_equals_oracle(self, tokens, metric, bits):
+        idx = build_index("bruteforce", _base(1), metric=metric, bits=bits)
+        apply_ops(idx, _materialize(tokens))
+        q = np.random.RandomState(2).randn(3, DIM).astype(np.float32)
+        if idx.n_live == 0:
+            return
+        assert_matches_oracle(idx, q, 8, "bruteforce", use_kernel=False)
+
+    @settings(max_examples=10, **COMMON)
+    @given(tokens=op_sequences)
+    def test_kernel_interpret_path(self, tokens):
+        idx = build_index("bruteforce", _base(3))
+        apply_ops(idx, _materialize(tokens))
+        q = np.random.RandomState(4).randn(2, DIM).astype(np.float32)
+        if idx.n_live == 0:
+            return
+        assert_matches_oracle(idx, q, 6, "bruteforce",
+                              use_kernel=True, interpret=True)
+
+
+class TestIndexedBackendEquivalence:
+    @settings(max_examples=6, **COMMON)
+    @given(tokens=op_sequences, metric=st.sampled_from(["cosine", "l2"]))
+    def test_ivf_admissible(self, tokens, metric):
+        idx = build_index("ivf", _base(5), metric=metric, nlist=3)
+        apply_ops(idx, _materialize(tokens))
+        q = np.random.RandomState(6).randn(2, DIM).astype(np.float32)
+        if idx.n_live == 0:
+            return
+        assert_topk_admissible(idx, q, 6, "ivf", use_kernel=False)
+
+    @settings(max_examples=6, **COMMON)
+    @given(tokens=op_sequences, metric=st.sampled_from(["cosine", "l2"]))
+    def test_hnsw_admissible(self, tokens, metric):
+        idx = build_index("hnsw", _base(7), metric=metric, m=4,
+                          ef_construction=24)
+        apply_ops(idx, _materialize(tokens))
+        q = np.random.RandomState(8).randn(2, DIM).astype(np.float32)
+        if idx.n_live == 0:
+            return
+        assert_topk_admissible(idx, q, 6, "hnsw", use_kernel=False)
+
+
+class TestReplayByteIdentity:
+    @settings(max_examples=12, **COMMON)
+    @given(tokens=op_sequences,
+           kind=st.sampled_from(["bruteforce", "ivf"]),
+           metric=st.sampled_from(["cosine", "l2"]))
+    def test_identical_sequences_identical_bytes(self, tokens, kind, metric):
+        ops_list = _materialize(tokens)
+        digests = []
+        with tempfile.TemporaryDirectory() as d:
+            for run in range(2):
+                idx = build_index(kind, _base(9), metric=metric)
+                apply_ops(idx, ops_list)
+                digests.append(save_digest(idx, d, f"run{run}.mvec"))
+        assert digests[0] == digests[1]

@@ -1,0 +1,322 @@
+"""Segmented mutable lifecycle (DESIGN.md §6): deterministic suite.
+
+Pins the acceptance contract of the segment subsystem: for scripted
+add/delete/compact interleavings across metric × bits × backend,
+``search()`` (``use_kernel`` both ways) matches the per-segment brute-force
+oracle, tombstones are masked pre-top-k, and replaying the same op sequence
+serializes byte-identically.  The hypothesis suite
+(`test_lifecycle_props.py`) drives the same harness over random sequences.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Allowlist, MonaVec, SENTINEL_ID, derive_segment_seed
+from tests.lifecycle_harness import (apply_ops, assert_matches_oracle,
+                                     build_index, oracle_search, save_digest)
+
+
+def _vecs(rng, n, dim=16):
+    return rng.randn(n, dim).astype(np.float32)
+
+
+def _scripted_ops(seed: int, dim: int = 16, n_ops: int = 6):
+    """Deterministic pseudo-random interleaving of add/delete/compact."""
+    rng = np.random.RandomState(seed)
+    ops_list, next_id = [], 1000
+    for _ in range(n_ops):
+        r = rng.rand()
+        if r < 0.5:
+            ops_list.append(("add", _vecs(rng, int(rng.randint(1, 6)), dim)))
+        elif r < 0.85:
+            ops_list.append(("delete", rng.randint(0, 40, size=3).tolist()))
+        else:
+            ops_list.append(("compact",))
+    return ops_list
+
+
+class TestSeedDerivation:
+    def test_ordinal_zero_is_root(self):
+        assert derive_segment_seed(0x6D6F6E61, 0) == 0x6D6F6E61
+
+    def test_distinct_and_deterministic(self):
+        seeds = [derive_segment_seed(7, i) for i in range(64)]
+        assert len(set(seeds)) == 64
+        assert seeds == [derive_segment_seed(7, i) for i in range(64)]
+        assert all(0 <= s <= 0xFFFFFFFFFFFFFFFF for s in seeds)
+
+    def test_root_sensitivity(self):
+        assert derive_segment_seed(1, 3) != derive_segment_seed(2, 3)
+
+
+class TestLifecycleEquivalence:
+    """search() == per-segment brute-force oracle after scripted op mixes."""
+
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    def test_interleaving_matches_oracle(self, kind, metric):
+        if kind == "hnsw" and metric == "dot":
+            pytest.skip("HNSW build is cosine/l2 in this repo's test surface")
+        rng = np.random.RandomState(3)
+        idx = build_index(kind, _vecs(rng, 40), metric=metric)
+        apply_ops(idx, _scripted_ops(seed=17))
+        q = _vecs(rng, 5)
+        assert_matches_oracle(idx, q, 10, kind, use_kernel=False)
+
+    @pytest.mark.parametrize("bits", [4, 2])
+    def test_bits_modes_bruteforce_exact(self, bits):
+        rng = np.random.RandomState(5)
+        idx = build_index("bruteforce", _vecs(rng, 30), bits=bits)
+        apply_ops(idx, _scripted_ops(seed=23))
+        assert_matches_oracle(idx, _vecs(rng, 4), 8, "bruteforce",
+                              use_kernel=False)
+
+    def test_mixed_precision_segments(self):
+        rng = np.random.RandomState(6)
+        idx = MonaVec.build(_vecs(rng, 30), metric="cosine", avg_bits=3.0)
+        idx.add(_vecs(rng, 7))
+        idx.delete([1, 33])
+        assert idx.mut.extras[0].enc.n4_dims == idx.backend.enc.n4_dims
+        assert_matches_oracle(idx, _vecs(rng, 4), 8, "bruteforce",
+                              use_kernel=False)
+
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    def test_use_kernel_both_ways(self, kind):
+        """The kernel-dispatch contract survives mutation: interpret-mode
+        kernel and pure-jnp agree with their own-dispatch oracle."""
+        rng = np.random.RandomState(8)
+        idx = build_index(kind, _vecs(rng, 24))
+        idx.add(_vecs(rng, 6))
+        idx.delete([2, 25])
+        q = _vecs(rng, 3)
+        assert_matches_oracle(idx, q, 6, kind, use_kernel=False)
+        assert_matches_oracle(idx, q, 6, kind, use_kernel=True, interpret=True)
+
+
+class TestReplayDeterminism:
+    """Two identical op sequences → byte-identical .mvec + identical search."""
+
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    def test_replay_serializes_byte_identically(self, kind, tmp_path):
+        rng = np.random.RandomState(9)
+        base = _vecs(rng, 30)
+        ops_list = _scripted_ops(seed=31)
+        q = _vecs(rng, 4)
+        digests, results = [], []
+        for run in range(2):
+            idx = build_index(kind, base)
+            apply_ops(idx, ops_list)
+            digests.append(save_digest(idx, str(tmp_path), f"run{run}.mvec"))
+            results.append(idx.search(q, 5, use_kernel=False,
+                                      **({"nprobe": idx.backend.nlist}
+                                         if kind == "ivf" else {})))
+        assert digests[0] == digests[1]
+        np.testing.assert_array_equal(results[0][1], results[1][1])
+        np.testing.assert_array_equal(results[0][0], results[1][0])
+
+    def test_save_load_preserves_segment_structure(self, tmp_path):
+        rng = np.random.RandomState(10)
+        idx = build_index("bruteforce", _vecs(rng, 20))
+        idx.add(_vecs(rng, 5))
+        idx.add(_vecs(rng, 3))
+        idx.delete([0, 21])
+        p = str(tmp_path / "s.mvec")
+        idx.save(p)
+        idx2 = MonaVec.load(p)
+        assert len(idx2.mut.extras) == 2
+        assert idx2.mut.next_ordinal == 3
+        assert [s.enc.seed for s in idx2.mut.extras] == \
+               [s.enc.seed for s in idx.mut.extras]
+        np.testing.assert_array_equal(idx2.mut.base_tombs, idx.mut.base_tombs)
+        q = _vecs(rng, 3)
+        np.testing.assert_array_equal(idx.search(q, 7, use_kernel=False)[1],
+                                      idx2.search(q, 7, use_kernel=False)[1])
+
+    def test_compact_then_add_reuses_ordinals(self):
+        """After compact the store is a fresh single segment: the next add
+        derives ordinal 1 again — a pure function of current state."""
+        rng = np.random.RandomState(12)
+        idx = build_index("bruteforce", _vecs(rng, 12))
+        idx.add(_vecs(rng, 3))
+        idx.compact()
+        assert idx.mut.next_ordinal == 1
+        idx.add(_vecs(rng, 3))
+        assert idx.mut.extras[0].enc.seed == \
+            derive_segment_seed(idx.backend.enc.seed, 1)
+
+
+class TestTombstoneSemantics:
+    def test_deleted_rows_never_returned(self):
+        rng = np.random.RandomState(13)
+        idx = build_index("bruteforce", _vecs(rng, 20))
+        dead = [0, 3, 7, 11]
+        assert idx.delete(dead) == 4
+        assert idx.delete(dead) == 0              # idempotent
+        _, ids = idx.search(_vecs(rng, 6), 16, use_kernel=False)
+        assert not np.isin(ids, dead).any()
+        assert idx.n_live == 16
+
+    def test_underflow_returns_sentinels(self):
+        rng = np.random.RandomState(14)
+        idx = build_index("bruteforce", _vecs(rng, 8))
+        idx.delete(range(6))
+        vals, ids = idx.search(_vecs(rng, 2), 5, use_kernel=False)
+        assert (ids[:, 2:] == SENTINEL_ID).all()
+        assert (ids[:, :2] != SENTINEL_ID).all()
+
+    def test_static_bruteforce_underflow_matches_mutated(self):
+        """The static BF path honors the same no-result contract as the
+        segmented one: a selective allowlist smaller than k yields sentinels,
+        never disallowed filler rows, before AND after mutation."""
+        rng = np.random.RandomState(30)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        q = _vecs(rng, 2)
+        allow = Allowlist.from_ids([1, 4], idx.ids)
+        _, ids_static = idx.search(q, 5, allow=allow, use_kernel=False)
+        assert set(ids_static[:, :2].ravel().tolist()) == {1, 4}
+        assert (ids_static[:, 2:] == SENTINEL_ID).all()
+        idx.delete([7])                      # flip to the segmented path
+        allow2 = Allowlist.from_ids([1, 4], idx.ids)
+        _, ids_mut = idx.search(q, 5, allow=allow2, use_kernel=False)
+        np.testing.assert_array_equal(ids_static, ids_mut)
+
+    def test_bruteforce_rejects_backend_knobs_both_states(self):
+        """Misplaced IVF/HNSW knobs fail consistently whether or not the
+        BruteForce index has been mutated."""
+        rng = np.random.RandomState(31)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        q = _vecs(rng, 2)
+        with pytest.raises(TypeError):
+            idx.search(q, 3, ef=64, use_kernel=False)
+        idx.add(_vecs(rng, 2))
+        with pytest.raises(TypeError):
+            idx.search(q, 3, ef=64, use_kernel=False)
+
+    @pytest.mark.parametrize("kind", ["ivf", "hnsw"])
+    def test_prefilter_allowlist_on_mutated_index(self, kind):
+        """§3.5 survives mutation: exactly min(k, live∩allowed) real rows."""
+        rng = np.random.RandomState(15)
+        idx = build_index(kind, _vecs(rng, 30))
+        idx.add(_vecs(rng, 10))
+        idx.delete([4, 32])
+        allowed = [2, 4, 8, 31, 32, 35]            # 4 and 32 are tombstoned
+        allow = Allowlist.from_ids(allowed, idx.ids)
+        skw = {"nprobe": idx.backend.nlist} if kind == "ivf" else {"ef": 64}
+        _, ids = idx.search(_vecs(rng, 3), 4, allow=allow,
+                            use_kernel=False, **skw)
+        real = ids[ids != SENTINEL_ID]
+        assert set(real.tolist()) <= {2, 8, 31, 35}
+        assert (ids != SENTINEL_ID).sum(axis=1).tolist() == [4, 4, 4]
+
+
+class TestCompaction:
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    def test_compact_reclaims_and_matches_oracle(self, kind):
+        rng = np.random.RandomState(16)
+        idx = build_index(kind, _vecs(rng, 24))
+        idx.add(_vecs(rng, 8))
+        idx.delete([1, 2, 25])
+        reclaimed = idx.compact()
+        assert reclaimed == 3
+        assert idx.n_total == idx.n_live == 29
+        assert not idx.mut.extras and not idx.mut.base_tombs.any()
+        assert_matches_oracle(idx, _vecs(rng, 4), 8, kind, use_kernel=False)
+
+    def test_compact_is_deterministic(self, tmp_path):
+        rng = np.random.RandomState(18)
+        base, extra = _vecs(rng, 20), _vecs(rng, 6)
+        digests = []
+        for run in range(2):
+            idx = build_index("bruteforce", base)
+            idx.add(extra)
+            idx.delete([3, 21])
+            idx.compact()
+            digests.append(save_digest(idx, str(tmp_path), f"c{run}.mvec"))
+        assert digests[0] == digests[1]
+
+    def test_compact_noop_on_static(self):
+        rng = np.random.RandomState(19)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        assert idx.compact() == 0
+
+    def test_compacted_single_segment_saves_as_v6(self, tmp_path):
+        rng = np.random.RandomState(20)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        idx.add(_vecs(rng, 3))
+        idx.delete([0])
+        p = str(tmp_path / "v8.mvec")
+        idx.save(p)
+        assert open(p, "rb").read()[4] == 8
+        idx.compact()
+        idx.save(p)
+        assert open(p, "rb").read()[4] == 6        # back to the static layout
+
+    def test_hnsw_compact_keeps_ef_construction(self, tmp_path):
+        rng = np.random.RandomState(21)
+        idx = build_index("hnsw", _vecs(rng, 16), ef_construction=48)
+        idx.add(_vecs(rng, 4))
+        p = str(tmp_path / "h.mvec")
+        idx.save(p)
+        idx2 = MonaVec.load(p)
+        assert idx2.backend.ef_construction == 48
+        idx2.compact()
+        assert idx2.backend.ef_construction == 48
+
+    def test_hnsw_ef_construction_survives_static_save(self, tmp_path):
+        """param2 rides in every version (it was a reserved-zero field), so
+        a STATIC v6 save/load round-trip must not reset compact()'s rebuild
+        beam width to the default."""
+        rng = np.random.RandomState(27)
+        idx = build_index("hnsw", _vecs(rng, 16), ef_construction=48)
+        p = str(tmp_path / "static.mvec")
+        idx.save(p)
+        assert open(p, "rb").read()[4] == 6
+        assert MonaVec.load(p).backend.ef_construction == 48
+
+    def test_replay_across_save_load_compacts_identically(self, tmp_path):
+        """In-memory replay and save/load-interrupted replay of the same op
+        sequence must compact to byte-identical files (the round-trip must
+        not lose any state compact() depends on)."""
+        rng = np.random.RandomState(28)
+        base, extra = _vecs(rng, 16), _vecs(rng, 4)
+
+        def run(through_disk: bool) -> str:
+            idx = build_index("hnsw", base, ef_construction=40)
+            idx.add(extra)
+            idx.delete([1, 17])
+            if through_disk:
+                p = str(tmp_path / "mid.mvec")
+                idx.save(p)
+                idx = MonaVec.load(p)
+            idx.compact()
+            return save_digest(idx, str(tmp_path), f"end{through_disk}.mvec")
+
+        assert run(False) == run(True)
+
+
+class TestGuards:
+    def test_shard_rejects_mutated(self):
+        rng = np.random.RandomState(22)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        idx.add(_vecs(rng, 2))
+        with pytest.raises(TypeError, match="compact"):
+            idx.shard()
+
+    def test_add_dim_mismatch(self):
+        rng = np.random.RandomState(24)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        with pytest.raises(ValueError, match="dim"):
+            idx.add(rng.randn(2, 9).astype(np.float32))
+
+    def test_add_duplicate_ids_in_batch(self):
+        rng = np.random.RandomState(25)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        with pytest.raises(ValueError, match="duplicate"):
+            idx.add(_vecs(rng, 2), ids=[50, 50])
+
+    def test_empty_add_is_noop(self):
+        rng = np.random.RandomState(26)
+        idx = build_index("bruteforce", _vecs(rng, 10))
+        out = idx.add(np.zeros((0, 16), np.float32))
+        assert out.shape == (0,)
+        assert idx.mut.is_static

@@ -1,0 +1,155 @@
+"""TenantRegistry (paper §3.9): identity resolution, caching, degradation,
+and per-namespace mutation isolation — previously entirely untested.
+
+The verifier is an injected callable and the clock is an injected monotonic
+source, so TTL expiry and outage handling run without sleeping.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MonaVec, TenantRegistry
+from repro.core.tenancy import PUBLIC_NAMESPACE
+
+
+def _index(n=12, dim=8, seed=0):
+    rng = np.random.RandomState(seed)
+    return MonaVec.build(rng.randn(n, dim).astype(np.float32), metric="cosine")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 1000.0
+
+    def __call__(self):
+        return self.t
+
+
+class CountingVerifier:
+    """token -> user mapping with call counting and scriptable outages."""
+
+    def __init__(self, table):
+        self.table = table
+        self.calls = 0
+        self.down = False
+
+    def __call__(self, token):
+        self.calls += 1
+        if self.down:
+            raise ConnectionError("introspection endpoint unreachable")
+        return self.table.get(token)
+
+
+class TestIdentityResolution:
+    def test_no_token_is_public(self):
+        reg = TenantRegistry()
+        assert reg.resolve_namespace(None) == PUBLIC_NAMESPACE
+        assert reg.resolve_namespace("") == PUBLIC_NAMESPACE
+
+    def test_standalone_token_is_namespace(self):
+        """No verifier configured: the token IS the namespace key."""
+        reg = TenantRegistry()
+        assert reg.resolve_namespace("alice-key") == "alice-key"
+        reg.put("alice-key", "c", _index())
+        assert reg.collections("alice-key") == ["c"]
+        assert reg.collections("bob-key") == []
+
+    def test_verifier_maps_token_to_user(self):
+        ver = CountingVerifier({"tok-a": "alice"})
+        reg = TenantRegistry(verifier=ver)
+        assert reg.resolve_namespace("tok-a") == "alice"
+        assert reg.resolve_namespace("tok-bad") is None
+
+
+class TestCacheAndDegradation:
+    def test_cache_hit_within_ttl(self):
+        clock = FakeClock()
+        ver = CountingVerifier({"t": "u"})
+        reg = TenantRegistry(verifier=ver, cache_ttl=30.0, _clock=clock)
+        assert reg.resolve_namespace("t") == "u"
+        clock.t += 29.0
+        assert reg.resolve_namespace("t") == "u"
+        assert ver.calls == 1                      # second hit served cached
+
+    def test_ttl_expiry_revalidates(self):
+        clock = FakeClock()
+        ver = CountingVerifier({"t": "u"})
+        reg = TenantRegistry(verifier=ver, cache_ttl=30.0, _clock=clock)
+        reg.resolve_namespace("t")
+        clock.t += 31.0
+        ver.table["t"] = "u2"                      # rotation upstream
+        assert reg.resolve_namespace("t") == "u2"
+        assert ver.calls == 2
+
+    def test_stale_cache_served_on_verifier_outage(self):
+        clock = FakeClock()
+        ver = CountingVerifier({"t": "u"})
+        reg = TenantRegistry(verifier=ver, cache_ttl=30.0, _clock=clock)
+        reg.resolve_namespace("t")
+        clock.t += 100.0                           # entry is stale
+        ver.down = True
+        assert reg.resolve_namespace("t") == "u"   # graceful degradation
+
+    def test_outage_with_cold_cache_rejects(self):
+        ver = CountingVerifier({"t": "u"})
+        ver.down = True
+        reg = TenantRegistry(verifier=ver)
+        assert reg.resolve_namespace("t") is None
+
+
+class Test401Paths:
+    def test_put_get_collections_reject_bad_token(self):
+        ver = CountingVerifier({"good": "u"})
+        reg = TenantRegistry(verifier=ver)
+        with pytest.raises(PermissionError, match="401"):
+            reg.put("bad", "c", _index())
+        with pytest.raises(PermissionError, match="401"):
+            reg.get("bad", "c")
+        with pytest.raises(PermissionError, match="401"):
+            reg.collections("bad")
+
+    def test_mutation_endpoints_reject_bad_token(self):
+        ver = CountingVerifier({"good": "u"})
+        reg = TenantRegistry(verifier=ver)
+        reg.put("good", "c", _index())
+        with pytest.raises(PermissionError, match="401"):
+            reg.add("bad", "c", np.zeros((1, 8), np.float32))
+        with pytest.raises(PermissionError, match="401"):
+            reg.delete("bad", "c", [1])
+        with pytest.raises(PermissionError, match="401"):
+            reg.compact("bad", "c")
+
+    def test_missing_collection_names_namespace(self):
+        reg = TenantRegistry()
+        with pytest.raises(KeyError, match="not found in namespace"):
+            reg.get("alice", "nope")
+
+
+class TestNamespaceMutationIsolation:
+    def test_add_delete_isolated_per_namespace(self):
+        """Two tenants sharing a collection NAME mutate disjoint indexes."""
+        reg = TenantRegistry()
+        reg.put("alice", "corpus", _index(seed=1))
+        reg.put("bob", "corpus", _index(seed=2))
+        new_ids = reg.add("alice", "corpus",
+                          np.random.RandomState(3).randn(4, 8).astype(np.float32))
+        assert new_ids.tolist() == [12, 13, 14, 15]
+        assert reg.delete("alice", "corpus", [0, 13]) == 2
+        a = reg.get("alice", "corpus")
+        b = reg.get("bob", "corpus")
+        assert a.n_total == 16 and a.n_live == 14
+        assert b.n_total == b.n_live == 12        # bob untouched
+        q = np.random.RandomState(4).randn(2, 8).astype(np.float32)
+        _, ids_b = b.search(q, 12, use_kernel=False)
+        # bob's namespace still serves ALL 12 original rows (0 was deleted
+        # only in alice's), and never alice's added ids
+        assert set(ids_b[0].astype(np.int64).tolist()) == set(range(12))
+        assert reg.compact("alice", "corpus") == 2
+        assert reg.get("alice", "corpus").n_total == 14
+
+    def test_same_token_same_namespace_shares_state(self):
+        ver = CountingVerifier({"t1": "alice", "t2": "alice"})
+        reg = TenantRegistry(verifier=ver)
+        reg.put("t1", "c", _index())
+        reg.add("t2", "c", np.random.RandomState(5).randn(2, 8).astype(np.float32))
+        assert reg.get("t1", "c").n_total == 14
