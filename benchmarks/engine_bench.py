@@ -1,0 +1,143 @@
+"""Query-execution engine cost model: plans, buckets, micro-batches.
+
+What the engine (DESIGN.md §7) buys over ad-hoc dispatch:
+
+  * ``per_call``  — the no-cache baseline: the plan cache is cleared before
+    every batch, so every call pays plan build + jit trace + compile (what
+    a shape-wobbling serving loop used to pay on every new shape);
+  * ``cached``    — the serving path: one warm-up compile, then every batch
+    is a plan-cache hit.  Asserts ZERO retraces across the measured loop —
+    the acceptance criterion of the engine;
+  * ``wobble``    — batch sizes wobble inside one power-of-two bucket; still
+    zero retraces (bucketed padding is bit-identical, so serving never
+    re-compiles on ragged traffic);
+  * ``micro``     — many small multi-tenant requests coalesced by the
+    MicroBatcher into few bucketed executions, vs the same requests served
+    solo.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench [--n 16000] [--dim 512]
+
+Emits the standard ``name,us_per_call,derived`` rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import engine
+from repro.core import MonaVec, TenantRegistry
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+from .common import emit, time_fn
+
+
+def _batches(corpus, batch_q: int, count: int):
+    return [np.asarray(queries_from_corpus(corpus, 100 + i, batch_q))
+            for i in range(count)]
+
+
+def bench_engine(n: int = 16_000, dim: int = 512, batch_q: int = 16,
+                 k: int = 10, batches: int = 8, tenants: int = 4) -> None:
+    cache = engine.plan_cache()
+    corpus = embedding_corpus(51, n, dim)
+    idx = MonaVec.build(corpus, metric="cosine")
+    qs = _batches(corpus, batch_q, batches)
+
+    # --- per-call: every batch re-builds + re-traces its plan. -------------
+    retraces = 0
+    t0 = time.perf_counter()
+    for q in qs:
+        cache.clear()            # clearing resets counters: tally per batch
+        idx.search(q, k, use_kernel=False)
+        retraces += cache.stats.traces
+    dt = time.perf_counter() - t0
+    us_per_call = dt / batches * 1e6
+    emit("engine/per_call", us_per_call,
+         f"batches={batches} retraces={retraces}")
+
+    # --- cached plan: warm once, then hits only. ---------------------------
+    cache.clear()
+    search = idx.searcher(k=k, use_kernel=False).warmup(batch_q)
+    warm = cache.stats.snapshot()
+    t0 = time.perf_counter()
+    for q in qs:
+        search(q)
+    dt = time.perf_counter() - t0
+    us_cached = dt / batches * 1e6
+    d = cache.stats.since(warm)
+    assert d.traces == 0, f"cached plan retraced {d.traces}x"
+    assert d.misses == 0, f"cached plan missed {d.misses}x"
+    emit("engine/cached", us_cached,
+         f"hits={d.hits} retraces=0 speedup={us_per_call / us_cached:.1f}x")
+
+    # --- bucket wobble: ragged batch sizes, one bucket, zero retraces. -----
+    sizes = [batch_q, batch_q - 1, batch_q // 2 + 1, batch_q - 3]
+    sizes = [max(1, min(batch_q, s)) for s in sizes]
+    before = cache.stats.snapshot()
+    us = time_fn(lambda: [search(qs[i][: sizes[i % len(sizes)]])
+                          for i in range(batches)])
+    d = cache.stats.since(before)
+    assert d.traces == 0, f"bucketed wobble retraced {d.traces}x"
+    emit("engine/wobble", us / batches,
+         f"sizes={sorted(set(sizes))} retraces=0")
+
+    # --- micro-batched multi-tenant serving. -------------------------------
+    reg = TenantRegistry()
+    per_tenant = max(1, batch_q // tenants)
+    for t in range(tenants):
+        reg.put(f"tenant{t}", "docs", idx)   # same-shape corpora share plans
+
+    def solo():
+        for t in range(tenants):
+            for q in qs[:2]:
+                reg.get(f"tenant{t}", "docs").search(
+                    q[:per_tenant], k=k, use_kernel=False)
+
+    def micro():
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        tickets = [mb.submit(f"tenant{t}", "docs", q[:per_tenant], k=k)
+                   for t in range(tenants) for q in qs[:2]]
+        mb.flush()
+        for tk in tickets:
+            tk.result()
+        return mb
+
+    solo()      # warm both shapes
+    micro()
+    us_solo = time_fn(solo)
+    us_micro = time_fn(micro)
+    mb = micro()
+    emit("engine/micro_batched", us_micro,
+         f"requests={mb.stats.requests} executions={mb.stats.executions} "
+         f"solo_us={us_solo:.0f} speedup={us_solo / us_micro:.1f}x")
+
+
+def emit_benchmark() -> None:
+    """Hook for benchmarks.run (small shapes to keep the sweep fast)."""
+    bench_engine(n=8_000, dim=256)
+
+
+def emit_benchmark_smoke() -> None:
+    """CI smoke hook (benchmarks.run --smoke): tiny shapes, same code paths
+    — including the zero-retrace assertions."""
+    bench_engine(n=1_024, dim=64, batch_q=4, batches=4, tenants=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16_000)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--batch-q", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batches", type=int, default=8)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_engine(n=args.n, dim=args.dim, batch_q=args.batch_q, k=args.k,
+                 batches=args.batches)
+
+
+if __name__ == "__main__":
+    main()

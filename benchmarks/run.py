@@ -24,6 +24,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import dist_scan
+    from . import engine_bench
     from . import ivf_scan
     from . import paper_tables as pt
     from . import roofline
@@ -46,6 +47,8 @@ def main() -> None:
                   ivf_scan.bench_hnsw_qps(n=1_024, dim=128, batch_q=4))),
         ("segments", segments_bench.emit_benchmark,
          segments_bench.emit_benchmark_smoke),
+        ("engine", engine_bench.emit_benchmark,
+         engine_bench.emit_benchmark_smoke),
         ("roofline", roofline.emit_benchmark, None),
     ]
     print("name,us_per_call,derived")

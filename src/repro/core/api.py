@@ -239,24 +239,42 @@ class MonaVec:
         interpret: Optional[bool] = None,
         **kwargs,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Top-k over the active backend.  Every backend honors the same
-        kernel-dispatch contract: ``use_kernel=None`` picks the Pallas kernel
-        on TPU and the pure-jnp path elsewhere; ``use_kernel=True`` with
-        ``interpret=True`` runs the kernel body in interpret mode (validation,
-        bit-identical to the jnp path); backend-specific knobs (``nprobe``,
-        ``ef``) ride in ``**kwargs``.  On a mutated index the scan covers
-        every segment with tombstones masked pre-top-k (allowlists are built
-        from ``MonaVec.ids``)."""
-        queries = jnp.asarray(queries)
-        if self.mut.is_static:
-            return self.backend.search(
-                queries, k, allow=allow, use_kernel=use_kernel,
-                interpret=interpret, **kwargs,
-            )
-        return seg.search_segmented(
-            self.backend, self.mut, queries, k, allow=allow,
-            use_kernel=use_kernel, interpret=interpret, **kwargs,
+        """Top-k over the active backend, executed as one compiled SearchPlan
+        (repro.engine, DESIGN.md §7): rotate -> per-segment scans -> tombstone/
+        allowlist mask -> merge -> stable top-k, cached per (backend
+        fingerprint, shape bucket, k, dispatch) so repeated traffic never
+        re-traces.  Every backend honors the same kernel-dispatch contract:
+        ``use_kernel=None`` picks the Pallas kernel on TPU and the pure-jnp
+        path elsewhere; ``use_kernel=True`` with ``interpret=True`` runs the
+        kernel body in interpret mode (validation, bit-identical to the jnp
+        path); backend-specific knobs (``nprobe``, ``ef``) ride in
+        ``**kwargs``.  On a mutated index the scan covers every segment with
+        tombstones masked pre-top-k (allowlists are built from
+        ``MonaVec.ids``).  Always exactly ``k`` columns: inadmissible slots
+        carry SENTINEL_ID / NEG."""
+        from .. import engine
+        return engine.search_backend(
+            self.backend, None if self.mut.is_static else self.mut,
+            queries, k, allow=allow, use_kernel=use_kernel,
+            interpret=interpret, **kwargs,
         )
+
+    def searcher(
+        self,
+        k: int = 10,
+        *,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        **kwargs,
+    ):
+        """Bound search handle: ``s = idx.searcher(k=10, nprobe=16);
+        s(queries)``.  The handle resolves its compiled plan through the
+        shared engine cache on every call (so it tracks add/delete/compact),
+        and ``s.warmup(batch_size)`` pre-compiles a bucket so serving never
+        pays jit tracing inside a measured window."""
+        from .. import engine
+        return engine.Searcher(self, k=k, use_kernel=use_kernel,
+                               interpret=interpret, knobs=kwargs)
 
     # -- persistence -----------------------------------------------------------
 

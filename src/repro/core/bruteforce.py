@@ -3,6 +3,12 @@
 Zero build time, deterministic, memory-compact — the recommended default for
 embedded/offline corpora.  On TPU the scan is the Pallas nibble-dot kernel
 over the full packed corpus; scores then pre-filter + top-k.
+
+This backend's scan body IS the shared primitive ``ops.score_raw`` /
+``score_packed``: the query engine (``repro.engine``, DESIGN.md §7) builds
+its per-segment scan stages directly on it and composes them with the
+merge and top-k into a compiled ``SearchPlan``; ``search`` is a thin
+routing shim over that engine.
 """
 
 from __future__ import annotations
@@ -15,8 +21,7 @@ import numpy as np
 
 from ..kernels import ops
 from . import quantize as qz
-from .allowlist import NEG, Allowlist, apply_optional
-from .scoring import topk
+from .allowlist import Allowlist
 
 
 @dataclasses.dataclass
@@ -67,15 +72,14 @@ class BruteForceIndex:
         interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (scores [b,k], external_ids [b,k]).  Deterministic:
-        stable top-k (lower row index wins ties).  Slots with no admissible
-        row (a selective allowlist smaller than k) come back with
-        SENTINEL_ID and a NEG score — the same no-result contract as
-        IVF/HNSW and the segmented scan (§3.5: exactly min(k, allowed) real
-        results, never disallowed filler)."""
-        from .segments import rows_to_ids
-        scores = self.scores(queries, use_kernel=use_kernel, interpret=interpret)
-        scores = apply_optional(scores, allow)
-        vals, idx = topk(scores, min(k, self.enc.n))
-        vals = np.asarray(vals)
-        rows = np.where(vals > NEG, np.asarray(idx), -1)
-        return vals, rows_to_ids(rows, self.ids)
+        stable top-k (lower row index wins ties).  Always exactly ``k``
+        columns: slots with no admissible row (a selective allowlist — or a
+        corpus — smaller than k) come back with SENTINEL_ID and a NEG score,
+        the same no-result contract as IVF/HNSW and the segmented scan
+        (§3.5: exactly min(k, allowed) real results, never disallowed
+        filler).  Routed through the compiled-plan engine (DESIGN.md §7)."""
+        from .. import engine
+        return engine.search_backend(
+            self, None, queries, k, allow=allow, use_kernel=use_kernel,
+            interpret=interpret,
+        )

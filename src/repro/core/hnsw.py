@@ -25,7 +25,6 @@ bitmap, and stable top-k merges — deterministic by construction.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import heapq
 import math
 from typing import List, Optional, Tuple
@@ -218,50 +217,26 @@ class HnswIndex:
         ``k`` results with a narrow default beam never silently truncates to
         ``ef`` rows (a caller-set ``ef`` above ``k`` is kept as given).
         ``use_kernel``/``interpret`` dispatch exactly like ``score_packed``.
+        The whole rotate->descend->beam->top-k runs as one cached SearchPlan
+        per (shape bucket, ef, k) — repro.engine, DESIGN.md §7.
         """
-        queries = jnp.atleast_2d(queries)
-        q_rot = qz.encode_query(queries, self.enc)
-        from ..kernels import ops
-        use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
-        ef = max(ef, k)
-        allow_mask = (
-            jnp.ones((self.enc.n,), bool) if allow is None else jnp.asarray(allow.mask)
+        from .. import engine
+        return engine.search_backend(
+            self, None, queries, k, allow=allow, use_kernel=use_kernel,
+            interpret=interpret, ef=ef,
         )
-        vals, rows = _hnsw_search_jit(
-            q_rot,
-            self.enc.packed,
-            self.enc.qnorms,
-            jnp.asarray(self.neighbors0),
-            jnp.asarray(self.neighbors_hi) if self.max_level else None,
-            allow_mask,
-            entry=self.entry_point,
-            ef=ef,
-            k=k,
-            metric=self.enc.metric,
-            bits=self.enc.bits,
-            n4_dims=self.enc.n4_dims,
-            max_level=self.max_level,
-            use_kernel=use_kernel,
-            interpret=interpret,
-        )
-        from .segments import rows_to_ids
-        return np.asarray(vals), rows_to_ids(np.asarray(rows), self.ids)
 
 
 # ---------------------------------------------------------------------------
-# Jitted beam search.
+# The beam-search plan stage.
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("entry", "ef", "k", "metric", "bits", "n4_dims",
-                     "max_level", "use_kernel", "interpret"),
-)
-def _hnsw_search_jit(
+def search_stage(
     q_rot, packed, qnorms, nbr0, nbr_hi, allow_mask, *, entry, ef, k, metric,
     bits, n4_dims, max_level, use_kernel, interpret,
 ):
-    """Lock-step batched beam search over the whole query batch.
+    """Lock-step batched beam search over the whole query batch — the jitted
+    body exposed as a pure PLAN STAGE for the engine (DESIGN.md §7).
 
     Every scoring step is ONE batched ``ops.score_gathered`` call over the
     ``[b, rows]`` candidate matrix (the same gathered-scan primitive and tile

@@ -90,16 +90,14 @@ def _seeded_init(x: np.ndarray, k: int, seed: int, metric: str) -> np.ndarray:
     return x[np.asarray(chosen)]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "nprobe", "max_cand", "metric", "bits", "n4_dims",
-                     "use_kernel", "interpret"),
-)
-def _ivf_search_jit(
+def search_stage(
     q_rot, centroids, order, offsets, packed, qnorms, allow_mask, *,
     k, nprobe, max_cand, metric, bits, n4_dims, use_kernel, interpret,
 ):
-    """Fixed-shape probe + gathered scan + pre-filtered top-k, one jit call.
+    """Fixed-shape probe + gathered scan + pre-filtered top-k — the jitted
+    body exposed as a pure PLAN STAGE (the engine composes it with query
+    rotation and the segment merge into one compiled SearchPlan, DESIGN.md
+    §7; every array rides in as an argument, never a trace constant).
 
     Candidate assembly is a vectorized ragged-concat straight off the CSR
     (order, offsets) arrays: output slot j of query b belongs to the probed
@@ -193,6 +191,12 @@ class IvfFlatIndex:
             order=order, offsets=offsets, nlist=nlist,
         )
 
+    def max_candidates(self, nprobe: int) -> int:
+        """Sum of the ``nprobe`` largest cell sizes — the tight fixed shape
+        of the per-query candidate matrix (part of the engine's plan key)."""
+        counts = np.asarray(self.offsets[1:] - self.offsets[:-1])
+        return int(np.sort(counts)[::-1][:nprobe].sum())
+
     def search(
         self,
         queries: jnp.ndarray,
@@ -206,25 +210,15 @@ class IvfFlatIndex:
         """Probe the nprobe nearest cells and scan their lists with the packed
         gathered-candidate scan (``ops.score_gathered``): candidates stay
         4/2-bit until the fused dequant-dot, the allowlist masks scores before
-        the top-k, and the whole probe->scan->top-k is one fixed-shape jit
-        call per (batch, nprobe, k).  ``use_kernel``/``interpret`` dispatch
-        exactly like ``score_packed`` (None = kernel on TPU, jnp elsewhere).
-        Slots with no admissible candidate come back with id
+        the top-k, and the whole rotate->probe->scan->top-k is one cached
+        SearchPlan per (shape bucket, nprobe, k) — repro.engine, DESIGN.md §7.
+        ``use_kernel``/``interpret`` dispatch exactly like ``score_packed``
+        (None = kernel on TPU, jnp elsewhere).  Always exactly ``k`` columns:
+        slots with no admissible candidate come back with id
         0xFFFFFFFFFFFFFFFF and a NEG score (the HNSW sentinel contract).
         """
-        queries = jnp.atleast_2d(queries)
-        q_rot = qz.encode_query(queries, self.enc)
-        use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
-        allow_mask = None if allow is None else jnp.asarray(allow.mask)
-        nprobe = min(nprobe, self.nlist)
-        counts = np.asarray(self.offsets[1:] - self.offsets[:-1])
-        max_cand = int(np.sort(counts)[::-1][:nprobe].sum())
-        vals, rows = _ivf_search_jit(
-            q_rot, self.centroids, self.order_j, self.offsets_j,
-            self.enc.packed, self.enc.qnorms, allow_mask,
-            k=k, nprobe=nprobe, max_cand=max_cand, metric=self.enc.metric,
-            bits=self.enc.bits, n4_dims=self.enc.n4_dims,
-            use_kernel=use_kernel, interpret=interpret,
+        from .. import engine
+        return engine.search_backend(
+            self, None, queries, k, allow=allow, use_kernel=use_kernel,
+            interpret=interpret, nprobe=nprobe,
         )
-        from .segments import rows_to_ids
-        return np.asarray(vals), rows_to_ids(np.asarray(rows), self.ids)

@@ -38,7 +38,6 @@ from typing import List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels import ops
 from . import quantize as qz
 from .allowlist import NEG, Allowlist
 from .rhdh import rhdh_inverse
@@ -180,28 +179,44 @@ def _split_allow_mask(
     return mask[:base_n], out
 
 
-def _side_scan(
-    extras: Sequence[Segment],
-    queries: jnp.ndarray,
-    extra_masks: Sequence[Optional[np.ndarray]],
-    use_kernel: Optional[bool],
-    interpret: Optional[bool],
-) -> Tuple[jnp.ndarray, np.ndarray]:
-    """Brute-force packed scan of every extra segment.
+def live_mask(
+    state: SegmentedState, allow: Optional[Allowlist], base_n: int
+) -> np.ndarray:
+    """Concatenated [n_total] bool mask of live∩allowed rows — the single
+    dynamic mask argument every SearchPlan takes (tombstones and allowlists
+    change between calls; the compiled plan does not)."""
+    base_mask, extra_masks = _split_allow_mask(allow, base_n, state.extras)
+    cols = [~state.base_tombs if base_mask is None
+            else (~state.base_tombs & base_mask)]
+    for s, am in zip(state.extras, extra_masks):
+        cols.append(~s.tombs if am is None else (~s.tombs & am))
+    return np.concatenate(cols) if len(cols) > 1 else cols[0]
 
-    Returns (scores [b, n_extra], ids [n_extra]) with tombstoned/disallowed
-    rows already masked to NEG — ready to merge pre-top-k.
+
+def merge_stage(
+    main_vals: jnp.ndarray,      # [b, k] candidate-scan scores (NEG sentinels)
+    main_pos: jnp.ndarray,       # [b, k] base row positions, -1 sentinel
+    side_scores: jnp.ndarray,    # [b, n_extra] masked extra-segment scores
+    base_n: int,
+    k: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-top-k merge of a candidate-set scan (IVF/HNSW) with the extra
+    segments' brute-force side-scan — a pure PLAN STAGE (DESIGN.md §7).
+
+    Main candidates occupy the lower columns, so the stable top-k resolves
+    score ties to the base segment first, then extras in row order — exactly
+    like the concatenated-row-order oracle.  Returns (vals [b,k], positions
+    [b,k] in concatenated row order, -1 sentinel).
     """
-    score_cols, id_cols = [], []
-    for seg, am in zip(extras, extra_masks):
-        q_rot = qz.encode_query(queries, seg.enc)
-        s = ops.score_packed(q_rot, seg.enc, use_kernel=use_kernel,
-                             interpret=interpret)
-        live = ~seg.tombs if am is None else (~seg.tombs & am)
-        s = jnp.where(jnp.asarray(live)[None, :], s, NEG)
-        score_cols.append(s)
-        id_cols.append(seg.ids)
-    return jnp.concatenate(score_cols, axis=1), np.concatenate(id_cols)
+    b, n_extra = side_scores.shape
+    side_pos = jnp.broadcast_to(
+        base_n + jnp.arange(n_extra, dtype=main_pos.dtype)[None, :],
+        (b, n_extra))
+    cand_scores = jnp.concatenate([main_vals, side_scores], axis=1)
+    cand_pos = jnp.concatenate([main_pos, side_pos], axis=1)
+    vals, sel = topk(cand_scores, min(k, cand_scores.shape[1]))
+    pos = jnp.take_along_axis(cand_pos, sel, axis=1)
+    return vals, jnp.where(vals > NEG, pos, -1)
 
 
 def search_segmented(
@@ -219,62 +234,11 @@ def search_segmented(
 
     Slots with no admissible candidate (k exceeds the live∩allowed count)
     come back with SENTINEL_ID and a NEG score — the IVF/HNSW no-result
-    contract, now uniform across every mutated search path.
-    """
-    from .bruteforce import BruteForceIndex
-
-    queries = jnp.atleast_2d(queries)
-    base_n = backend.enc.n
-    base_mask, extra_masks = _split_allow_mask(allow, base_n, state.extras)
-
-    if isinstance(backend, BruteForceIndex):
-        if kwargs:
-            # The static path rejects unknown knobs with a TypeError; a
-            # mutated index must not start silently swallowing them.
-            raise TypeError(
-                f"unexpected search kwargs for the BruteForce backend: "
-                f"{sorted(kwargs)}")
-        # One concatenated packed scan: per-segment score matrices (each the
-        # same kernel scan a static index runs) side by side, one stable
-        # top-k over [b, n_total].
-        s0 = backend.scores(queries, use_kernel=use_kernel,
-                            interpret=interpret)
-        live0 = ~state.base_tombs if base_mask is None else (
-            ~state.base_tombs & base_mask)
-        s0 = jnp.where(jnp.asarray(live0)[None, :], s0, NEG)
-        if state.extras:
-            s_ext, ids_ext = _side_scan(state.extras, queries, extra_masks,
-                                        use_kernel, interpret)
-            scores = jnp.concatenate([s0, s_ext], axis=1)
-            all_ids = np.concatenate([backend.ids, ids_ext])
-        else:
-            scores, all_ids = s0, backend.ids
-        k_eff = min(k, scores.shape[1])
-        vals, pos = topk(scores, k_eff)
-        rows = np.where(np.asarray(vals) > NEG, np.asarray(pos), -1)
-        return np.asarray(vals), rows_to_ids(rows, all_ids)
-
-    # IVF / HNSW: main-index search with tombstones folded into the §3.5
-    # pre-filter mask, then a brute-force side-scan of the extras, merged by
-    # one stable top-k (main candidates first: ties resolve to the base
-    # segment, matching concatenated row order).
-    live0 = ~state.base_tombs if base_mask is None else (
-        ~state.base_tombs & base_mask)
-    eff_allow = Allowlist(mask=live0, n_allowed=int(live0.sum()))
-    main_vals, main_ids = backend.search(
-        queries, k, allow=eff_allow, use_kernel=use_kernel,
+    contract, uniform across every mutated search path.  Since DESIGN.md §7
+    this is a thin delegate: the per-segment scans and the merge run as
+    stages of one compiled SearchPlan (``repro.engine``)."""
+    from .. import engine
+    return engine.search_backend(
+        backend, state, queries, k, allow=allow, use_kernel=use_kernel,
         interpret=interpret, **kwargs,
     )
-    if not state.extras:
-        return main_vals, main_ids
-    s_ext, ids_ext = _side_scan(state.extras, queries, extra_masks,
-                                use_kernel, interpret)
-    b = main_vals.shape[0]
-    cand_scores = jnp.concatenate([jnp.asarray(main_vals), s_ext], axis=1)
-    cand_ids = np.concatenate(
-        [main_ids, np.broadcast_to(ids_ext, (b, ids_ext.shape[0]))], axis=1)
-    vals, pos = topk(cand_scores, min(k, cand_scores.shape[1]))
-    pos = np.asarray(pos)
-    out_ids = np.take_along_axis(cand_ids, pos, axis=1)
-    out_ids[np.asarray(vals) <= NEG] = SENTINEL_ID
-    return np.asarray(vals), out_ids

@@ -82,6 +82,12 @@ class TenantRegistry:
     # -> collection resolution as search: a tenant can only grow/churn its
     # own collections, and every path 401s exactly like get().
 
+    def searcher(self, token: Optional[str], name: str, k: int = 10, **knobs):
+        """Bound engine Searcher over a tenant's collection (DESIGN.md §7):
+        the handle the serving loop keeps per (tenant, collection) so every
+        request is a plan-cache hit, with the same 401 semantics as get()."""
+        return self.get(token, name).searcher(k=k, **knobs)
+
     def add(self, token: Optional[str], name: str, vectors, ids=None):
         """Append rows to a tenant's collection; returns the assigned ids."""
         return self.get(token, name).add(vectors, ids=ids)

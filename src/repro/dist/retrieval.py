@@ -119,6 +119,7 @@ def make_scan_topk_shardmap(
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     n_valid: Optional[int] = None,
+    on_trace=None,
 ):
     """Build fn(q_rot, packed, qnorms) -> (scores [b,k], global ids [b,k])
     scanning corpus shards along the mesh data axes.
@@ -127,12 +128,16 @@ def make_scan_topk_shardmap(
     sharded); shard_map's in_specs reshard it row-contiguously, padding first
     so every shard is equal-size.  Pass n_valid when the corpus is ALREADY
     padded (ShardedMonaVec) so the padding mask still knows the true row
-    count.  Results are identical to scan_topk_pjit.
+    count.  ``on_trace`` (if given) runs once per jit trace — the engine's
+    plan cache hangs its retrace counter on it (DESIGN.md §7).  Results are
+    identical to scan_topk_pjit.
     """
     axes, n_shards = _mesh_data_info(mesh)
 
     @jax.jit
     def call(q_rot, packed, qnorms):
+        if on_trace is not None:
+            on_trace()
         n = packed.shape[0] if n_valid is None else n_valid
         per, n_pad = shard_sizes(n, n_shards)
         k_local = min(k, per)

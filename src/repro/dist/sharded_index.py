@@ -13,7 +13,7 @@ results are identical to the single-device index (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -23,7 +23,6 @@ from repro.core.bruteforce import BruteForceIndex
 from repro.launch.mesh import make_local_mesh
 
 from .partition import place_sharded
-from .retrieval import make_scan_topk_shardmap
 
 
 @dataclasses.dataclass
@@ -32,7 +31,6 @@ class ShardedMonaVec:
     ids: np.ndarray          # [n] external ids (unpadded)
     mesh: object
     n: int                   # true (unpadded) corpus rows
-    _fns: Dict[int, object] = dataclasses.field(default_factory=dict)
 
     # -- construction ------------------------------------------------------
 
@@ -70,19 +68,17 @@ class ShardedMonaVec:
 
     # -- search ------------------------------------------------------------
 
-    def _fn(self, k: int):
-        if k not in self._fns:
-            self._fns[k] = make_scan_topk_shardmap(
-                self.mesh, metric=self.enc.metric, k=k, bits=self.enc.bits,
-                n4_dims=self.enc.n4_dims, n_valid=self.n)
-        return self._fns[k]
-
     def search(self, queries: jnp.ndarray, k: int = 10,
                ) -> Tuple[np.ndarray, np.ndarray]:
         """(scores [b,k], external ids [b,k]) — same contract, same results
-        as the single-device BruteForce search."""
-        k = min(k, self.n)
-        q_rot = qz.encode_query(jnp.atleast_2d(jnp.asarray(queries)), self.enc)
-        with self.mesh:
-            vals, gidx = self._fn(k)(q_rot, self.enc.packed, self.enc.qnorms)
-        return np.asarray(vals), self.ids[np.asarray(gidx)]
+        as the single-device BruteForce search.  The shard_map scan runs as
+        a cached SearchPlan (repro.engine, DESIGN.md §7): bucketed batches,
+        shared hit/miss/trace counters, and exactly ``k`` columns
+        (SENTINEL_ID / NEG padding when k exceeds the corpus)."""
+        from repro import engine
+        return engine.search_sharded(self, queries, k)
+
+    def searcher(self, k: int = 10):
+        """Bound search handle over the sharded scan (``engine.Searcher``)."""
+        from repro import engine
+        return engine.Searcher(self, k=k)

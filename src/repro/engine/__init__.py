@@ -1,0 +1,18 @@
+# Query-execution engine (DESIGN.md §7): compiled SearchPlans, the
+# shape-bucketed plan cache, the bound Searcher handle, and the
+# micro-batched multi-tenant serving queue.
+#
+# Every search path in the repo — facade, raw backend, segmented, sharded —
+# routes through plan.search_backend / plan.search_sharded, so "one index
+# abstraction over many backends" (Faiss-style) is also one COMPILED
+# abstraction: same keying, same bucketing, same hit/miss/trace accounting.
+
+from .batcher import BatcherStats, MicroBatcher, Ticket
+from .plan import (PlanCache, PlanKey, PlanStats, SearchPlan, Searcher,
+                   plan_cache, search_backend, search_sharded, shape_bucket)
+
+__all__ = [
+    "BatcherStats", "MicroBatcher", "Ticket",
+    "PlanCache", "PlanKey", "PlanStats", "SearchPlan", "Searcher",
+    "plan_cache", "search_backend", "search_sharded", "shape_bucket",
+]

@@ -1,0 +1,531 @@
+"""Compiled search plans + the shape-bucketed plan cache (DESIGN.md §7).
+
+Every MonaVec search — static or mutated, any backend, sharded or not — is
+executed through a ``SearchPlan``: a cached pipeline of compiled stages
+covering the entire query path (rotate/encode the query -> per-segment
+packed or gathered scans -> tombstone/allowlist mask -> segment merge ->
+stable top-k -> sentinel marking), keyed by
+
+    (backend fingerprint incl. segment signature, shape bucket, k,
+     resolved kernel dispatch, normalized backend knobs)
+
+so serving traffic re-dispatches in O(dict lookup) instead of re-tracing.
+Incoming batches are padded up to power-of-two buckets (``shape_bucket``,
+floored at 8 — the kernels' block_q granularity); pad queries are masked to
+NEG before the top-k and sliced off after, so the bucketed execution is
+**bit-identical** to the same plan's full-bucket run and, on the BruteForce
+paths, to the eager per-segment oracle at the raw batch size — the same
+guarantee style as the dist merge (§3) and the gathered scan (§5): ids
+exact, scores to the last ulp.
+
+Three rules make the compile cache sound (full rationale: DESIGN.md §7):
+
+* every ARRAY (packed codes, qnorms, CSR, graph tables, masks, perm) is an
+  argument of a stage, never a closure constant — XLA constant-folds
+  captured arrays and the folded arithmetic need not be bit-identical to
+  the runtime op sequence;
+* everything that IS baked into a trace (segment seeds, metric, bit mode,
+  std scalars, static graph params, shapes) is part of the fingerprint, so
+  two indexes share a plan only when the traced program is truly identical
+  — which is also what makes plan reuse across same-shape tenants safe;
+* stage boundaries confine floating-point arithmetic exactly where the
+  reference computations have op boundaries — whole-pipeline fusion is NOT
+  value-preserving (rotation fused into a tiny dot re-associates the
+  reduction; the L2 adjustment contracts to an FMA under jit).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw as hnsw_mod
+from repro.core import ivf as ivf_mod
+from repro.core import quantize as qz
+from repro.core import segments as seg
+from repro.core.allowlist import NEG, Allowlist
+from repro.core.rhdh import rhdh_apply
+from repro.core.scoring import adjust_scores, topk
+from repro.core.standardize import DOT, prepare
+from repro.kernels import ops
+
+
+def shape_bucket(b: int) -> int:
+    """Power-of-two batch bucket — the plan cache's shape key.
+
+    Floored at 8, the kernels' block_q/row-chunk granularity: every scoring
+    path in the repo computes rows in 8-query tiles, so executing at a
+    multiple of 8 keeps the tile decomposition — and therefore every row's
+    reduction order — independent of the incoming batch size.
+    """
+    p = 8
+    while p < max(b, 1):
+        p <<= 1
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Cache + keying.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    fingerprint: tuple            # backend + segment signature (trace-static)
+    bucket: int                   # padded batch size
+    k: int
+    dispatch: Tuple[bool, bool]   # resolved (use_kernel, interpret)
+    knobs: tuple                  # normalized backend knobs, sorted items
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Counters for the serving loop: cache hits/misses and actual jit
+    traces (a trace == one XLA compile; the acceptance criterion 'repeated
+    same-bucket searches incur zero retraces' is asserted on ``traces``)."""
+
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+    def snapshot(self) -> "PlanStats":
+        return dataclasses.replace(self)
+
+    def since(self, before: "PlanStats") -> "PlanStats":
+        return PlanStats(hits=self.hits - before.hits,
+                         misses=self.misses - before.misses,
+                         traces=self.traces - before.traces)
+
+
+@dataclasses.dataclass
+class SearchPlan:
+    """A compiled, reusable execution of one search configuration."""
+
+    key: PlanKey
+    fn: Callable   # (q_pad, q_valid, live, perm, *arrays) -> (vals, pos)
+
+
+class PlanCache:
+    """PlanKey -> SearchPlan: LRU with hit/miss/trace accounting.
+
+    Bounded because mutation churn mints new fingerprints (every add() or
+    compact() changes the segment signature, DESIGN.md §7), so a long-lived
+    serving process would otherwise accumulate superseded plans — and their
+    compiled executables — forever.  ``maxsize`` plans is far above any
+    steady-state working set (tenants × buckets × k values × knobs).
+    """
+
+    def __init__(self, maxsize: int = 256) -> None:
+        self._plans: "collections.OrderedDict[PlanKey, SearchPlan]" = \
+            collections.OrderedDict()
+        self.maxsize = maxsize
+        self.stats = PlanStats()
+
+    def get_or_build(self, key: PlanKey, builder: Callable[[], SearchPlan]) -> SearchPlan:
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+            self.stats.hits += 1
+            return plan
+        self.stats.misses += 1
+        plan = builder()
+        self._plans[key] = plan
+        while len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)      # evict least-recently-used
+        return plan
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.stats = PlanStats()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+_CACHE = PlanCache()
+
+
+def plan_cache() -> PlanCache:
+    """The process-wide plan cache (shared across indexes and tenants)."""
+    return _CACHE
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints: everything the trace bakes in.
+# ---------------------------------------------------------------------------
+
+def _std_sig(std) -> Optional[tuple]:
+    return None if std is None else (float(std.mean), float(std.inv_std))
+
+
+def _enc_sig(enc: qz.Encoded) -> tuple:
+    return (enc.n, enc.seed, enc.bits, enc.n4_dims, enc.dim, enc.dim_pad,
+            _std_sig(enc.std), enc.perm is not None)
+
+
+_BACKEND_KNOBS = {
+    "BruteForceIndex": frozenset(),
+    "IvfFlatIndex": frozenset({"nprobe"}),
+    "HnswIndex": frozenset({"ef"}),
+}
+
+
+def _validate_knobs(backend, kwargs: dict) -> None:
+    kind = type(backend).__name__
+    allowed = _BACKEND_KNOBS.get(kind, frozenset())
+    unknown = sorted(set(kwargs) - allowed)
+    if unknown:
+        raise TypeError(
+            f"unexpected search kwargs for the {kind} backend: {unknown}")
+
+
+def _normalize_knobs(backend, kwargs: dict, k: int) -> dict:
+    """Fill defaults and clamp exactly like the pre-engine search paths, so
+    the normalized knobs are part of the plan key (nprobe=min(nprobe,nlist);
+    the HNSW beam auto-widens to max(ef, k))."""
+    kind = type(backend).__name__
+    if kind == "IvfFlatIndex":
+        return {"nprobe": min(int(kwargs.get("nprobe", 8)), backend.nlist)}
+    if kind == "HnswIndex":
+        return {"ef": max(int(kwargs.get("ef", 64)), k)}
+    return {}
+
+
+def _fingerprint(backend, extras, knobs: dict) -> tuple:
+    kind = type(backend).__name__
+    segs = (_enc_sig(backend.enc),) + tuple(_enc_sig(s.enc) for s in extras)
+    head: tuple = (kind, backend.enc.metric, segs)
+    if kind == "IvfFlatIndex":
+        head += ((backend.nlist, backend.max_candidates(knobs["nprobe"])),)
+    elif kind == "HnswIndex":
+        head += ((backend.m, backend.entry_point, backend.max_level,
+                  int(backend.neighbors0.shape[1])),)
+    return head
+
+
+# ---------------------------------------------------------------------------
+# Plan compilation.
+# ---------------------------------------------------------------------------
+
+def _rotate(q, *, metric, std, seed, perm):
+    """encode_query as a trace-safe stage: same prepare + RHDH as the corpus,
+    with the v7 permutation riding in as an array ARGUMENT."""
+    prepared = prepare(q.astype(jnp.float32), metric, std)
+    rot = rhdh_apply(prepared, seed, normalized=False)
+    if perm is not None:
+        rot = rot[..., perm]
+    return rot
+
+
+def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
+                cache: PlanCache) -> SearchPlan:
+    """Compile one plan: a pipeline of per-plan jitted STAGES driven by a
+    plain-Python closure.
+
+    The stage boundaries are load-bearing for bit-identity: XLA may fuse a
+    query rotation into a downstream (especially tiny) matmul and
+    re-associate the reduction, so the rotation, each floating-point scan,
+    and the candidate-set search each compile as their own stage — matching
+    the op boundaries of the reference/oracle computations exactly — while
+    the mask/concat/merge/top-k finalizer (which performs NO float
+    arithmetic, only selection and data movement, and is therefore exact
+    under any fusion) compiles as one stage on top.  Each stage bumps the
+    cache's trace counter at trace time, so a plan-cache hit provably costs
+    zero retraces.
+    """
+    kind = type(backend).__name__
+    enc0 = backend.enc
+    metric, bits, n4 = enc0.metric, enc0.bits, enc0.n4_dims
+    std = enc0.std
+    seeds = (enc0.seed,) + tuple(s.enc.seed for s in extras)
+    seg_ns = (enc0.n,) + tuple(s.enc.n for s in extras)
+    base_n, n_total = seg_ns[0], sum(seg_ns)
+    k = key.k
+    use_kernel, interpret = key.dispatch
+    stats = cache.stats
+
+    def marked(fn):
+        """jit(fn) with the trace counter attached (runs once per trace)."""
+        def wrapper(*args):
+            stats.traces += 1
+            return fn(*args)
+        return jax.jit(wrapper)
+
+    def make_rot(seed):
+        return marked(lambda q, perm: _rotate(q, metric=metric, std=std,
+                                              seed=seed, perm=perm))
+
+    def make_scan():
+        # Raw dot compiles as its own stage; the metric adjustment runs
+        # EAGERLY (op-by-op), exactly like the reference scoring: under jit
+        # XLA contracts the L2 multiply+subtract into an FMA and the result
+        # is no longer bit-identical to the eager op sequence the oracles
+        # (and the pre-engine search paths) compute.
+        raw_fn = marked(lambda q_rot, packed: ops.score_raw(
+            packed, q_rot, bits=bits, n4_dims=n4, use_kernel=use_kernel,
+            interpret=interpret))
+        if metric == DOT:
+            return lambda q_rot, packed, qnorms: raw_fn(q_rot, packed)
+        return lambda q_rot, packed, qnorms: adjust_scores(
+            raw_fn(q_rot, packed), qnorms, metric)
+
+    rot_stages = [make_rot(s) for s in seeds]
+
+    if kind == "BruteForceIndex":
+        scan_stages = [make_scan() for _ in seeds]
+
+        def fin(q_valid, live, *cols):
+            scores = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+            scores = jnp.where(live[None, :], scores, NEG)
+            scores = jnp.where(q_valid[:, None], scores, NEG)
+            if n_total < k:    # k > n: sentinel-pad to the full [b, k] contract
+                scores = jnp.pad(scores, ((0, 0), (0, k - n_total)),
+                                 constant_values=NEG)
+            vals, pos = topk(scores, k)
+            return vals, jnp.where(vals > NEG, pos, -1)
+        finalize = marked(fin)
+
+        def fn(q, q_valid, live, perm, *seg_arrays):
+            cols = [scan_stages[i](rot_stages[i](q, perm),
+                                   seg_arrays[2 * i], seg_arrays[2 * i + 1])
+                    for i in range(len(seeds))]
+            return finalize(q_valid, live, *cols)
+
+        return SearchPlan(key=key, fn=fn)
+
+    # Candidate-set backends: one compiled main-scan stage (the same jit
+    # body the pre-engine paths ran), brute-force side-scan stages for the
+    # extra segments, and an exact merge/finalize stage.
+    if kind == "IvfFlatIndex":
+        nprobe = knobs["nprobe"]
+        max_cand = backend.max_candidates(nprobe)
+        main = marked(lambda q_rot, centroids, order, offsets, packed, qnorms,
+                      live0: ivf_mod.search_stage(
+                          q_rot, centroids, order, offsets, packed, qnorms,
+                          live0, k=k, nprobe=nprobe, max_cand=max_cand,
+                          metric=metric, bits=bits, n4_dims=n4,
+                          use_kernel=use_kernel, interpret=interpret))
+        n_head = 3
+    elif kind == "HnswIndex":
+        ef = knobs["ef"]
+        entry, max_level = backend.entry_point, backend.max_level
+        main = marked(lambda q_rot, nbr0, nbr_hi, packed, qnorms, live0:
+                      hnsw_mod.search_stage(
+                          q_rot, packed, qnorms, nbr0, nbr_hi, live0,
+                          entry=entry, ef=ef, k=k, metric=metric, bits=bits,
+                          n4_dims=n4, max_level=max_level,
+                          use_kernel=use_kernel, interpret=interpret))
+        n_head = 2
+    else:
+        raise TypeError(f"no plan builder for backend {kind}")
+
+    # Closures capture COUNTS, never the Segment objects: a superseded plan
+    # sitting in the LRU must not pin old segments' quantized arrays.
+    n_extras = len(extras)
+    scan_stages = [make_scan() for _ in range(n_extras)]
+
+    def merge(q_valid, live, main_vals, main_pos, *side_cols):
+        if side_cols:
+            cols = [jnp.where(live[off: off + n][None, :], c, NEG)
+                    for c, off, n in zip(
+                        side_cols,
+                        np.cumsum((base_n,) + seg_ns[1:-1]).tolist(),
+                        seg_ns[1:])]
+            side = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+            main_vals, main_pos = seg.merge_stage(
+                main_vals, main_pos, side, base_n, k)
+        vals = jnp.where(q_valid[:, None], main_vals, NEG)
+        return vals, jnp.where(vals > NEG, main_pos, -1)
+    finalize = marked(merge)
+
+    def fn(q, q_valid, live, perm, *arrays):
+        head, seg_arrays = arrays[:n_head], arrays[n_head:]
+        q_rot0 = rot_stages[0](q, perm)
+        main_vals, main_pos = main(q_rot0, *head, seg_arrays[0],
+                                   seg_arrays[1], live[:base_n])
+        side_cols = [scan_stages[i](rot_stages[i + 1](q, perm),
+                                    seg_arrays[2 * (i + 1)],
+                                    seg_arrays[2 * (i + 1) + 1])
+                     for i in range(n_extras)]
+        return finalize(q_valid, live, main_vals, main_pos, *side_cols)
+
+    return SearchPlan(key=key, fn=fn)
+
+
+def _bind_arrays(backend, extras) -> tuple:
+    """Per-call array operands, in the plan function's positional order."""
+    kind = type(backend).__name__
+    head: tuple = ()
+    if kind == "IvfFlatIndex":
+        head = (backend.centroids, backend.order_j, backend.offsets_j)
+    elif kind == "HnswIndex":
+        head = (jnp.asarray(backend.neighbors0),
+                jnp.asarray(backend.neighbors_hi) if backend.max_level else None)
+    segs: list = []
+    for enc in [backend.enc] + [s.enc for s in extras]:
+        segs.extend((enc.packed, enc.qnorms))
+    return head + tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# Execution: the one search entry point every backend routes through.
+# ---------------------------------------------------------------------------
+
+def search_backend(
+    backend,
+    state,                       # SegmentedState or None (= static index)
+    queries,
+    k: int,
+    *,
+    allow: Optional[Allowlist] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    **kwargs,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Bucketed compiled-plan search: (scores [b,k], external ids [b,k]).
+
+    Exactly ``k`` columns always; inadmissible slots carry SENTINEL_ID/NEG.
+    Bit-identical to the pre-engine per-path implementations (the oracle
+    suites in tests/ pin this), with the whole pipeline compiled once per
+    (fingerprint, bucket, k, dispatch, knobs) and reused across calls —
+    and across same-shape tenants.
+    """
+    _validate_knobs(backend, kwargs)
+    knobs = _normalize_knobs(backend, kwargs, k)
+    use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
+    extras = state.extras if state is not None else []
+
+    q = jnp.atleast_2d(jnp.asarray(queries))
+    b = int(q.shape[0])
+    bucket = shape_bucket(b)
+
+    base_n = backend.enc.n
+    if state is not None:
+        live = seg.live_mask(state, allow, base_n)
+    elif allow is not None:
+        mask = np.asarray(allow.mask, dtype=bool)
+        if mask.shape[0] != base_n:
+            raise ValueError(
+                f"allowlist mask covers {mask.shape[0]} rows but the index "
+                f"has {base_n}; build it from the index ids")
+        live = mask
+    else:
+        live = np.ones(base_n, dtype=bool)
+
+    key = PlanKey(
+        fingerprint=_fingerprint(backend, extras, knobs),
+        bucket=bucket, k=k, dispatch=(use_kernel, interpret),
+        knobs=tuple(sorted(knobs.items())),
+    )
+    plan = _CACHE.get_or_build(
+        key, lambda: _build_plan(backend, extras, key=key, knobs=knobs,
+                                 cache=_CACHE))
+
+    if bucket != b:
+        q = jnp.pad(q, ((0, bucket - b), (0, 0)))
+    q_valid = jnp.asarray(np.arange(bucket) < b)
+    perm = None if backend.enc.perm is None else jnp.asarray(backend.enc.perm)
+    vals, pos = plan.fn(q, q_valid, jnp.asarray(live), perm,
+                        *_bind_arrays(backend, extras))
+    vals = np.asarray(vals)[:b]
+    pos = np.asarray(pos)[:b]
+    ids = (backend.ids if not extras else
+           np.concatenate([backend.ids] + [s.ids for s in extras]))
+    return vals, seg.rows_to_ids(pos, ids)
+
+
+def search_sharded(index, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """The shard_map scan as a cached plan: same bucketing, same counters,
+    same [b, k] sentinel-padded contract as the single-device engines."""
+    q = jnp.atleast_2d(jnp.asarray(queries))
+    b = int(q.shape[0])
+    bucket = shape_bucket(b)
+    enc = index.enc
+    k_eff = min(k, index.n)
+    # Content-keyed like search_backend — the plan must not retain the index:
+    # the closure holds only scalars + the (small, long-lived) mesh, arrays
+    # ride in as arguments, and same-config corpora on one mesh share plans.
+    key = PlanKey(
+        fingerprint=("ShardedMonaVec", id(index.mesh), index.n,
+                     _enc_sig(enc), enc.metric),
+        bucket=bucket, k=k_eff, dispatch=(None, None), knobs=(),
+    )
+
+    def build() -> SearchPlan:
+        from repro.dist.retrieval import make_scan_topk_shardmap
+        stats = _CACHE.stats
+
+        def on_trace() -> None:
+            stats.traces += 1
+
+        mesh = index.mesh
+        metric, std, seed = enc.metric, enc.std, enc.seed
+        scan = make_scan_topk_shardmap(
+            mesh, metric=metric, k=k_eff, bits=enc.bits,
+            n4_dims=enc.n4_dims, n_valid=index.n, on_trace=on_trace)
+
+        def raw(q_pad, packed, qnorms, perm):
+            # Eager rotation: the exact op sequence of qz.encode_query.
+            q_rot = _rotate(q_pad, metric=metric, std=std, seed=seed,
+                            perm=perm)
+            with mesh:
+                return scan(q_rot, packed, qnorms)
+
+        return SearchPlan(key=key, fn=raw)
+
+    plan = _CACHE.get_or_build(key, build)
+    if bucket != b:
+        q = jnp.pad(q, ((0, bucket - b), (0, 0)))
+    perm = None if enc.perm is None else jnp.asarray(enc.perm)
+    vals, gidx = plan.fn(q, enc.packed, enc.qnorms, perm)
+    vals = np.asarray(vals)[:b]
+    ids = index.ids[np.asarray(gidx)[:b]]
+    if k_eff < k:   # k > n: sentinel-pad to the full [b, k] contract
+        vals = np.pad(vals, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+        ids = np.pad(ids, ((0, 0), (0, k - k_eff)),
+                     constant_values=seg.SENTINEL_ID)
+    return vals, ids
+
+
+# ---------------------------------------------------------------------------
+# The searcher handle.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Searcher:
+    """A bound (index, k, dispatch, knobs) handle: ``searcher(queries)``.
+
+    Produced by ``MonaVec.searcher(...)`` / ``ShardedMonaVec.searcher(...)``;
+    plans resolve through the shared cache on every call, so a searcher is
+    always consistent with the index's CURRENT mutation state (add/delete/
+    compact simply select a different plan).  ``warmup()`` pre-compiles the
+    plan for a bucket so serving never pays the trace inside a measured or
+    latency-sensitive window.
+    """
+
+    index: object
+    k: int = 10
+    use_kernel: Optional[bool] = None
+    interpret: Optional[bool] = None
+    knobs: dict = dataclasses.field(default_factory=dict)
+
+    def __call__(self, queries, *, allow: Optional[Allowlist] = None):
+        kw = dict(self.knobs)
+        if self.use_kernel is not None:
+            kw["use_kernel"] = self.use_kernel
+        if self.interpret is not None:
+            kw["interpret"] = self.interpret
+        if allow is not None:
+            kw["allow"] = allow
+        return self.index.search(queries, self.k, **kw)
+
+    def warmup(self, batch_size: int = 1) -> "Searcher":
+        enc = self.index.enc if hasattr(self.index, "enc") else \
+            self.index.backend.enc
+        bucket = shape_bucket(batch_size)
+        self(np.zeros((bucket, enc.dim), dtype=np.float32))
+        return self

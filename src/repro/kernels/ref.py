@@ -1,31 +1,61 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
-These mirror the kernels' semantics with no tiling, packing tricks, or fused
-dequant — the simplest possible correct implementation.  All kernel tests
+These mirror the kernels' semantics with no packing tricks or fused dequant —
+the simplest possible correct implementation.  All kernel tests
 assert_allclose against these.
+
+The full-corpus dots run ROW-CHUNKED (fixed 8-query blocks via ``lax.map``):
+XLA's dot emitter may pick a different reduction strategy per operand shape,
+so a plain ``[b, d] @ [d, n]`` matmul can return different last-ulp results
+for the SAME query row at different batch sizes (observed on the CPU backend
+with tiny ``n``).  Fixing the chunk shape makes every row's score a pure
+function of (row, corpus) regardless of batch composition — the property the
+engine's shape-bucketed plans (DESIGN.md §7) and the eager oracles both rely
+on, and the same 8-row granularity the Pallas kernel's ``block_q`` tiling
+already has.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import lloydmax
 from repro.core.quantize import unpack_2bit, unpack_4bit
 from repro.core.rhdh import hadamard_matrix
 
+_ROW_CHUNK = 8
+
+
+def _chunked_dot(q_rot: jnp.ndarray, deq_t: jnp.ndarray) -> jnp.ndarray:
+    """[b, d] @ [d, n] in fixed [8, d] query chunks (batch-size-stable).
+
+    The optimization barrier is load-bearing: without it XLA folds
+    pad -> single-trip map -> slice back into an unpadded [b, d] dot and the
+    shape-dependent strategy choice returns.  With it, every chunk runs the
+    SAME [8, d] @ [d, n] program regardless of b.
+    """
+    b = q_rot.shape[0]
+    b_pad = ((b + _ROW_CHUNK - 1) // _ROW_CHUNK) * _ROW_CHUNK
+    qp = jnp.pad(q_rot, ((0, b_pad - b), (0, 0)))
+    chunks = qp.reshape(b_pad // _ROW_CHUNK, _ROW_CHUNK, q_rot.shape[1])
+    chunks = jax.lax.optimization_barrier(chunks)
+    out = jax.lax.map(lambda qc: qc @ deq_t, chunks)
+    return out.reshape(b_pad, deq_t.shape[1])[:b]
+
 
 def nibble_dot_ref(packed: jnp.ndarray, q_rot: jnp.ndarray) -> jnp.ndarray:
     """[n, d/2] packed uint8, [b, d] rotated f32 query -> [b, n] raw scores."""
     codes = unpack_4bit(packed)                       # [n, d]
     deq = lloydmax.dequantize(codes, 4)               # [n, d] f32
-    return q_rot @ deq.T
+    return _chunked_dot(q_rot, deq.T)
 
 
 def crumb_dot_ref(packed: jnp.ndarray, q_rot: jnp.ndarray) -> jnp.ndarray:
     """[n, d/4] packed uint8 (2-bit codes), [b, d] query -> [b, n]."""
     codes = unpack_2bit(packed)
     deq = lloydmax.dequantize(codes, 2)
-    return q_rot @ deq.T
+    return _chunked_dot(q_rot, deq.T)
 
 
 def mixed_dot_ref(

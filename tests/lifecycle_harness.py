@@ -86,7 +86,11 @@ def oracle_search(
                                      interpret=interpret))
     scores = np.array(jnp.concatenate(cols, axis=1))
     scores[:, ~live] = NEG
-    vals, pos = topk(jnp.asarray(scores), min(k, scores.shape[1]))
+    if scores.shape[1] < k:   # k > n: sentinel-pad to the full [b, k] contract
+        scores = np.pad(scores, ((0, 0), (0, k - scores.shape[1])),
+                        constant_values=NEG)
+        all_ids = np.pad(all_ids, (0, k - all_ids.shape[0]))
+    vals, pos = topk(jnp.asarray(scores), k)
     vals, pos = np.asarray(vals), np.asarray(pos)
     out = all_ids[pos].copy()
     out[vals <= NEG] = SENTINEL_ID

@@ -1,0 +1,319 @@
+"""Query-execution engine (DESIGN.md §7): bucketing bit-identity, plan-cache
+hit accounting, the uniform [b, k] contract, and the micro-batcher.
+
+The load-bearing property: executing a batch of b queries inside a padded
+power-of-two bucket returns EXACTLY what the direct b-row execution returns
+— ids exact, scores to the last ulp — for every backend × metric × bits,
+static, mutated, and sharded.  A full-bucket batch is by construction an
+unpadded execution of the same plan, so comparing its row prefix against
+smaller batches in the same bucket pins the guarantee without any appeal to
+a second implementation; the BruteForce paths are additionally pinned
+against the eager per-segment oracle (tests/lifecycle_harness.py), which
+never goes through the engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import Allowlist, MonaVec, SENTINEL_ID, TenantRegistry
+from tests.lifecycle_harness import assert_matches_oracle, build_index
+
+BUCKET = 8          # queries per full bucket in these tests
+DIM = 32
+
+
+def _vecs(rng, n, dim=DIM):
+    return rng.randn(n, dim).astype(np.float32)
+
+
+def _mutate(idx, rng):
+    idx.add(_vecs(rng, 3))
+    idx.add(_vecs(rng, 5))
+    idx.delete(idx.ids[::7])
+
+
+def _search_kwargs(kind, idx, k):
+    if kind == "ivf":
+        return {"nprobe": max(2, idx.backend.nlist // 2)}
+    if kind == "hnsw":
+        return {"ef": max(16, k)}
+    return {}
+
+
+class TestBucketingBitIdentity:
+    """b < bucket executions equal the full-bucket run's row prefix."""
+
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    @pytest.mark.parametrize("metric", ["cosine", "l2"])
+    @pytest.mark.parametrize("mutated", [False, True])
+    def test_prefix_identity(self, kind, metric, mutated):
+        rng = np.random.RandomState(11)
+        idx = build_index(kind, _vecs(rng, 60), metric=metric)
+        if mutated:
+            _mutate(idx, rng)
+        q = _vecs(rng, BUCKET)
+        kw = _search_kwargs(kind, idx, 10)
+        s_full, i_full = idx.search(q, 10, use_kernel=False, **kw)
+        for b in (1, 3, 5, 7):
+            s, i = idx.search(q[:b], 10, use_kernel=False, **kw)
+            np.testing.assert_array_equal(i, i_full[:b])
+            np.testing.assert_array_equal(s, s_full[:b])    # last-ulp exact
+
+    @pytest.mark.parametrize("bits", [2, 4])
+    def test_prefix_identity_across_bits(self, bits):
+        rng = np.random.RandomState(12)
+        idx = build_index("bruteforce", _vecs(rng, 50), bits=bits)
+        _mutate(idx, rng)
+        q = _vecs(rng, BUCKET)
+        s_full, i_full = idx.search(q, 6, use_kernel=False)
+        for b in (2, 6):
+            s, i = idx.search(q[:b], 6, use_kernel=False)
+            np.testing.assert_array_equal(i, i_full[:b])
+            np.testing.assert_array_equal(s, s_full[:b])
+
+    def test_mixed_precision_prefix_identity(self):
+        rng = np.random.RandomState(13)
+        idx = MonaVec.build(_vecs(rng, 50, 64), metric="cosine", avg_bits=3.0)
+        q = _vecs(rng, BUCKET, 64)
+        s_full, i_full = idx.search(q, 5, use_kernel=False)
+        s, i = idx.search(q[:3], 5, use_kernel=False)
+        np.testing.assert_array_equal(i, i_full[:3])
+        np.testing.assert_array_equal(s, s_full[:3])
+
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    def test_bucketed_matches_eager_oracle(self, metric):
+        """Second witness: the padded engine run equals the NON-engine eager
+        per-segment oracle at the unpadded batch size."""
+        rng = np.random.RandomState(14)
+        idx = build_index("bruteforce", _vecs(rng, 40), metric=metric)
+        _mutate(idx, rng)
+        assert_matches_oracle(idx, _vecs(rng, 5), 10, "bruteforce",
+                              use_kernel=False)
+
+    def test_sharded_prefix_identity(self):
+        rng = np.random.RandomState(15)
+        idx = MonaVec.build(_vecs(rng, 64), metric="cosine")
+        sharded = idx.shard()
+        q = _vecs(rng, BUCKET)
+        s_full, i_full = sharded.search(q, 7)
+        s, i = sharded.search(q[:3], 7)
+        np.testing.assert_array_equal(i, i_full[:3])
+        np.testing.assert_array_equal(s, s_full[:3])
+        # and the sharded scan matches the single-device engine result
+        s1, i1 = idx.search(q, 7)
+        np.testing.assert_array_equal(i_full, i1)
+        np.testing.assert_allclose(s_full, s1, rtol=1e-6)
+
+
+class TestExactKColumns:
+    """k > n returns exactly k columns, SENTINEL/NEG padded — every backend,
+    every lifecycle state (the static BruteForce path used to truncate to
+    min(k, n))."""
+
+    K, N = 12, 7
+
+    def _assert_contract(self, scores, ids, n_real):
+        assert ids.shape == (3, self.K) and scores.shape == (3, self.K)
+        assert (ids[:, n_real:] == SENTINEL_ID).all()
+        real = ids[:, :n_real]
+        assert (real != SENTINEL_ID).all()
+        for row in real:
+            assert len(set(row.tolist())) == n_real
+
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    def test_static(self, kind):
+        rng = np.random.RandomState(21)
+        idx = build_index(kind, _vecs(rng, self.N))
+        kw = {"nprobe": idx.backend.nlist} if kind == "ivf" else (
+            {"ef": self.N + self.K} if kind == "hnsw" else {})
+        s, i = idx.search(_vecs(rng, 3), self.K, use_kernel=False, **kw)
+        self._assert_contract(s, i, self.N)
+
+    @pytest.mark.parametrize("kind", ["bruteforce", "ivf", "hnsw"])
+    def test_mutated(self, kind):
+        rng = np.random.RandomState(22)
+        idx = build_index(kind, _vecs(rng, self.N))
+        idx.add(_vecs(rng, 2))
+        idx.delete([1, 3])
+        kw = {"nprobe": idx.backend.nlist} if kind == "ivf" else (
+            {"ef": idx.n_total + self.K} if kind == "hnsw" else {})
+        s, i = idx.search(_vecs(rng, 3), self.K, use_kernel=False, **kw)
+        self._assert_contract(s, i, idx.n_live)
+
+    def test_sharded(self):
+        rng = np.random.RandomState(23)
+        sharded = MonaVec.build(_vecs(rng, self.N), metric="cosine").shard()
+        s, i = sharded.search(_vecs(rng, 3), self.K)
+        self._assert_contract(s, i, self.N)
+
+
+class TestPlanCache:
+    """Same bucket => cache hit => zero retraces; different knobs/shapes =>
+    distinct plans."""
+
+    def test_same_bucket_no_retrace(self):
+        rng = np.random.RandomState(31)
+        idx = build_index("bruteforce", _vecs(rng, 40))
+        q = _vecs(rng, BUCKET)
+        cache = engine.plan_cache()
+        cache.clear()
+        idx.search(q, 5, use_kernel=False)
+        after_first = cache.stats.snapshot()
+        assert after_first.misses == 1 and after_first.traces > 0
+        for b in (BUCKET, 7, 5):
+            idx.search(q[:b], 5, use_kernel=False)
+        d = cache.stats.since(after_first)
+        assert d.misses == 0 and d.traces == 0 and d.hits == 3
+
+    def test_searcher_tracks_mutation(self):
+        """add() changes the segment signature: the handle re-keys instead of
+        serving a stale plan."""
+        rng = np.random.RandomState(32)
+        idx = build_index("bruteforce", _vecs(rng, 30))
+        search = idx.searcher(k=4, use_kernel=False)
+        q = _vecs(rng, 4)
+        s1, i1 = search(q)
+        idx.add(_vecs(rng, 3), ids=[1000, 1001, 1002])
+        cache = engine.plan_cache()
+        before = cache.stats.snapshot()
+        s2, i2 = search(q)
+        assert cache.stats.since(before).misses == 1   # new plan, new key
+        assert set(map(int, np.unique(i2))) - set(map(int, np.unique(i1))) \
+            <= {1000, 1001, 1002}
+
+    def test_distinct_knobs_distinct_plans(self):
+        rng = np.random.RandomState(33)
+        idx = build_index("ivf", _vecs(rng, 64))
+        q = _vecs(rng, 4)
+        cache = engine.plan_cache()
+        cache.clear()
+        idx.search(q, 5, use_kernel=False, nprobe=2)
+        idx.search(q, 5, use_kernel=False, nprobe=4)
+        assert cache.stats.misses == 2
+        idx.search(q, 5, use_kernel=False, nprobe=4)
+        assert cache.stats.hits == 1
+
+    def test_knob_normalization_shares_plans(self):
+        """nprobe clamps to nlist and ef to max(ef, k) BEFORE keying, so
+        equivalent requests share one plan."""
+        rng = np.random.RandomState(34)
+        idx = build_index("ivf", _vecs(rng, 40))
+        nlist = idx.backend.nlist
+        q = _vecs(rng, 4)
+        cache = engine.plan_cache()
+        cache.clear()
+        idx.search(q, 5, use_kernel=False, nprobe=nlist)
+        idx.search(q, 5, use_kernel=False, nprobe=nlist + 7)
+        assert cache.stats.misses == 1 and cache.stats.hits == 1
+
+    def test_tombstones_do_not_invalidate(self):
+        """delete() is a dynamic-mask change: same plan, new results."""
+        rng = np.random.RandomState(35)
+        idx = build_index("bruteforce", _vecs(rng, 30))
+        idx.add(_vecs(rng, 4))
+        q = _vecs(rng, 4)
+        _, i1 = idx.search(q, 3, use_kernel=False)
+        cache = engine.plan_cache()
+        before = cache.stats.snapshot()
+        idx.delete([int(i1[0, 0])])
+        _, i2 = idx.search(q, 3, use_kernel=False)
+        d = cache.stats.since(before)
+        assert d.misses == 0 and d.traces == 0 and d.hits == 1
+        assert int(i1[0, 0]) not in i2[0].tolist()
+
+
+class TestMicroBatcher:
+    def _registry(self, rng, corpora):
+        reg = TenantRegistry()
+        for tok, x in corpora.items():
+            reg.put(tok, "docs", MonaVec.build(x, metric="cosine"))
+        return reg
+
+    def test_coalesced_equals_direct(self):
+        """Per-request results are bit-identical to solo searches, in
+        submission order, while whole groups execute as single plans."""
+        rng = np.random.RandomState(41)
+        x = _vecs(rng, 60)
+        reg = self._registry(rng, {"a": x})
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        requests = [_vecs(rng, m) for m in (3, 1, 5, 2)]
+        tickets = [mb.submit("a", "docs", q, k=4) for q in requests]
+        assert mb.pending == 4
+        executions = mb.flush()
+        assert executions == 1                      # one coalesced plan call
+        direct = reg.get("a", "docs")
+        for q, t in zip(requests, tickets):
+            s_direct, i_direct = direct.search(q, 4, use_kernel=False)
+            s_mb, i_mb = t.result()
+            np.testing.assert_array_equal(i_mb, i_direct)
+            np.testing.assert_array_equal(s_mb, s_direct)
+
+    def test_namespace_isolation(self):
+        """Interleaved submissions from two tenants never mix: each group
+        executes against its own index and returns its own corpus' ids."""
+        rng = np.random.RandomState(42)
+        xa, xb = _vecs(rng, 40), _vecs(rng, 40)
+        reg = self._registry(rng, {"a": xa, "b": xb})
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        qa, qb = xa[:3] + 0.01, xb[:3] + 0.01
+        ta = mb.submit("a", "docs", qa, k=1)
+        tb = mb.submit("b", "docs", qb, k=1)
+        ta2 = mb.submit("a", "docs", qa, k=1)
+        assert mb.flush() == 2                      # one execution per tenant
+        np.testing.assert_array_equal(ta.result()[1][:, 0],
+                                      np.arange(3, dtype=np.uint64))
+        np.testing.assert_array_equal(tb.result()[1][:, 0],
+                                      np.arange(3, dtype=np.uint64))
+        np.testing.assert_array_equal(ta2.result()[1], ta.result()[1])
+        # the two tenants' top-1 scores differ (different corpora served)
+        assert not np.array_equal(ta.result()[0], tb.result()[0])
+
+    def test_result_autoflushes(self):
+        rng = np.random.RandomState(43)
+        reg = self._registry(rng, {"a": _vecs(rng, 20)})
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        t = mb.submit("a", "docs", _vecs(rng, 2), k=3)
+        assert not t.done()
+        s, i = t.result()                           # triggers flush
+        assert t.done() and i.shape == (2, 3)
+        assert mb.pending == 0
+
+    def test_rejected_token_raises_at_submit(self):
+        reg = TenantRegistry(verifier=lambda tok: None)
+        mb = engine.MicroBatcher(reg)
+        with pytest.raises(PermissionError):
+            mb.submit("bad-token", "docs", np.zeros((1, DIM), np.float32))
+
+    def test_missing_collection_raises_at_submit(self):
+        rng = np.random.RandomState(45)
+        reg = self._registry(rng, {"a": _vecs(rng, 20)})
+        mb = engine.MicroBatcher(reg)
+        with pytest.raises(KeyError):
+            mb.submit("a", "nope", _vecs(rng, 1))
+        assert mb.pending == 0
+
+    def test_group_failure_is_isolated(self):
+        """A group that fails at execution (knobs its backend rejects)
+        reports the error on ITS tickets; other tenants' requests in the
+        same flush still succeed."""
+        rng = np.random.RandomState(46)
+        reg = self._registry(rng, {"a": _vecs(rng, 20), "b": _vecs(rng, 20)})
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        bad = mb.submit("a", "docs", _vecs(rng, 2), k=3, ef=9)  # BF rejects ef
+        good = mb.submit("b", "docs", _vecs(rng, 2), k=3)
+        mb.flush()
+        assert good.result()[1].shape == (2, 3)
+        with pytest.raises(TypeError):
+            bad.result()
+
+    def test_max_batch_splits_whole_requests(self):
+        rng = np.random.RandomState(44)
+        reg = self._registry(rng, {"a": _vecs(rng, 30)})
+        mb = engine.MicroBatcher(reg, use_kernel=False, max_batch=4)
+        tickets = [mb.submit("a", "docs", _vecs(rng, 3), k=2)
+                   for _ in range(3)]
+        # Whole-request packing at max_batch=4: 3-row requests never pair up.
+        assert mb.flush() == 3
+        for t in tickets:
+            assert t.result()[1].shape == (3, 2)
