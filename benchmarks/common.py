@@ -1,9 +1,9 @@
-"""Shared benchmark utilities: timing, recall, CSV emission."""
+"""Shared benchmark utilities: timing, recall, CSV + JSON record emission."""
 
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,10 +13,22 @@ from repro.core.scoring import score_f32, topk
 
 ROWS: List[Tuple[str, float, str]] = []
 
+# Structured records for the machine-readable BENCH_<name>.json artifacts
+# (benchmarks.run writes one file per benchmark from the records it appended).
+# Fields are free-form per benchmark; the filtered/backends sweeps use
+# {backend, n, dim, qps, recall_at_10, bytes_per_vector, ...}.
+RECORDS: List[Dict[str, object]] = []
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def record(**fields: object) -> None:
+    """Append one structured benchmark record (JSON-serializable scalars)."""
+    RECORDS.append({k: (v.item() if isinstance(v, np.generic) else v)
+                    for k, v in fields.items()})
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -1,0 +1,104 @@
+"""Filtered-search cost model: predicate selectivity vs the unfiltered scan.
+
+The compiled predicate stage (DESIGN.md §8) masks rows BEFORE the top-k, so
+a filtered query costs one fused mask stage on top of the same bucketed
+scan — it does not re-partition, re-encode, or post-filter.  This sweep
+measures that claim: per backend, QPS and recall@10 (vs the exact filtered
+oracle: full-precision scores with non-matching rows masked to -inf) at
+predicate selectivities of ~1%, ~10%, and ~50%, against the unfiltered
+baseline on the same corpus.
+
+    PYTHONPATH=src python -m benchmarks.filtered_bench [--n 32000] [--dim 256]
+
+Emits the standard ``name,us_per_call,derived`` rows plus structured
+records (common.record) for the BENCH_filtered.json artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MonaVec, Lt
+from repro.core.scoring import score_f32, topk
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+from .common import emit, recall_at_10, record, time_fn
+
+SELECTIVITIES = (1, 10, 50)   # Lt("attr", s) over uniform 0..99 => s percent
+
+
+def _filtered_gt(queries: np.ndarray, corpus: np.ndarray, metric: str,
+                 mask: Optional[np.ndarray], k: int = 10) -> np.ndarray:
+    """Exact oracle: f32 scores, non-matching rows masked to -inf pre-top-k."""
+    scores = score_f32(jnp.asarray(queries), jnp.asarray(corpus), metric)
+    if mask is not None:
+        scores = jnp.where(jnp.asarray(mask)[None, :], scores, -jnp.inf)
+    return np.asarray(topk(scores, k)[1])
+
+
+def bench_filtered(n: int = 32_000, dim: int = 256, batch_q: int = 16,
+                   k: int = 10,
+                   backends: Sequence[str] = ("bruteforce",)) -> None:
+    corpus = embedding_corpus(63, n, dim)
+    rng = np.random.RandomState(63)
+    attr = rng.randint(0, 100, size=n).astype(np.int64)
+    queries = np.asarray(queries_from_corpus(corpus, 163, batch_q))
+
+    for backend in backends:
+        kw = {"nlist": 64} if backend == "ivf" else (
+            {"m": 16, "ef_construction": 64} if backend == "hnsw" else {})
+        idx = MonaVec.build(corpus, metric="cosine", index=backend,
+                            meta={"attr": attr}, **kw)
+        bpv = int(idx.backend.enc.packed.shape[-1])
+        for sel in (None,) + SELECTIVITIES:
+            where = None if sel is None else Lt("attr", int(sel))
+            mask = None if sel is None else attr < sel
+            search = idx.searcher(k=k, where=where, use_kernel=False)
+            search.warmup(batch_q)
+            us = time_fn(lambda: search(queries))
+            ids = np.asarray(search(queries)[1])
+            gt = _filtered_gt(queries, corpus, "cosine", mask, k)
+            rec = recall_at_10(ids, gt)
+            qps = batch_q / (us / 1e6)
+            label = "unfiltered" if sel is None else f"sel{sel:02d}"
+            live = n if mask is None else int(mask.sum())
+            emit(f"filtered/{backend}/{label}", us,
+                 f"qps={qps:.0f} recall={rec:.3f} live={live}/{n} "
+                 f"bytes_per_vec={bpv}")
+            record(bench="filtered", backend=backend, n=n, dim=dim,
+                   batch_q=batch_q, k=k,
+                   selectivity_pct=(100.0 if sel is None else float(sel)),
+                   live_rows=live, qps=float(qps), recall_at_10=float(rec),
+                   bytes_per_vector=bpv, us_per_call=float(us))
+
+
+def emit_benchmark() -> None:
+    """Hook for benchmarks.run (all three backends, moderate shape)."""
+    bench_filtered(n=16_000, dim=256, backends=("bruteforce", "ivf", "hnsw"))
+
+
+def emit_benchmark_smoke() -> None:
+    """CI smoke hook (benchmarks.run --smoke): tiny shape, same code paths —
+    the compiled predicate stage runs at every selectivity."""
+    bench_filtered(n=2_048, dim=64, batch_q=4, backends=("bruteforce",))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=32_000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--batch-q", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--backends", default="bruteforce,ivf,hnsw")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_filtered(n=args.n, dim=args.dim, batch_q=args.batch_q, k=args.k,
+                   backends=tuple(args.backends.split(",")))
+
+
+if __name__ == "__main__":
+    main()

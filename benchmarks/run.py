@@ -5,13 +5,38 @@
 variant executes end to end (same code paths, tiny problem sizes) so a
 kernel or benchmark regression fails the build in minutes; benchmarks with
 no cheap variant are skipped and say so.
+
+Besides the CSV on stdout, every executed benchmark writes a machine-
+readable ``BENCH_<name>.json`` next to the working directory (or under
+``--json-dir``): the csv rows it printed plus any structured records it
+appended via ``common.record`` (QPS / recall / bytes-per-vector per
+backend and shape).  CI uploads ``BENCH_*.json`` as workflow artifacts.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+
+def _write_json(json_dir: str, name: str, status: str, smoke: bool,
+                rows, records) -> None:
+    payload = {
+        "bench": name,
+        "status": status,
+        "smoke": smoke,
+        "csv_rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                     for r in rows],
+        "records": list(records),
+    }
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
@@ -21,10 +46,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small-shape CI sweep (skips benchmarks without a "
                          "smoke variant)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
 
+    from . import common
     from . import dist_scan
     from . import engine_bench
+    from . import filtered_bench
     from . import ivf_scan
     from . import paper_tables as pt
     from . import roofline
@@ -49,6 +78,8 @@ def main() -> None:
          segments_bench.emit_benchmark_smoke),
         ("engine", engine_bench.emit_benchmark,
          engine_bench.emit_benchmark_smoke),
+        ("filtered", filtered_bench.emit_benchmark,
+         filtered_bench.emit_benchmark_smoke),
         ("roofline", roofline.emit_benchmark, None),
     ]
     print("name,us_per_call,derived")
@@ -61,12 +92,17 @@ def main() -> None:
                 print(f"{name},nan,SKIPPED(no smoke variant)", flush=True)
                 continue
             fn = smoke_fn
+        rows_at, recs_at = len(common.ROWS), len(common.RECORDS)
         try:
             fn()
+            status = "ok"
         except Exception:  # noqa: BLE001
             failed += 1
+            status = "error"
             print(f"{name},nan,ERROR", flush=True)
             traceback.print_exc()
+        _write_json(args.json_dir, name, status, args.smoke,
+                    common.ROWS[rows_at:], common.RECORDS[recs_at:])
     sys.exit(1 if failed else 0)
 
 

@@ -67,7 +67,7 @@ def main() -> None:
     docs = [f"document {i} topic-{i % 50}" + (" quantization" if i % 997 == 0 else "")
             for i in range(10_000)]
     hy = HybridIndex.build(corpus[:10_000], docs, metric="cosine")
-    vals, ids = hy.search(q[:1], "quantization topic-3", k=5)
+    vals, ids = hy.search(q[0], "quantization topic-3", k=5)
     print(f"[hybrid] RRF fused top-5: {ids.tolist()}")
 
 

@@ -2,8 +2,8 @@
 #
 # Data-oblivious quantization (RHDH + Lloyd-Max), asymmetric scoring, three
 # index backends, segmented mutable lifecycle (add/delete/compact), pre-filter
-# allowlist, hybrid BM25+RRF, single-file .mvec persistence (v6-v8), and
-# identity-based multi-tenancy.
+# allowlist, metadata columns + compiled predicates, hybrid BM25+RRF,
+# single-file .mvec persistence (v6-v9), and identity-based multi-tenancy.
 
 from .api import MonaVec
 from .allowlist import Allowlist
@@ -11,6 +11,8 @@ from .bruteforce import BruteForceIndex
 from .hnsw import HnswIndex, recommended_m
 from .hybrid import HybridIndex
 from .ivf import IvfFlatIndex
+from .metadata import MetaStore
+from .predicate import And, Eq, Ge, Gt, In, Le, Lt, Ne, Not, Or, Predicate
 from .segments import SENTINEL_ID, Segment, SegmentedState, derive_segment_seed
 from .standardize import COSINE, DOT, L2, GlobalStd
 from .tenancy import TenantRegistry
@@ -20,4 +22,6 @@ __all__ = [
     "IvfFlatIndex", "TenantRegistry", "GlobalStd", "recommended_m",
     "Segment", "SegmentedState", "SENTINEL_ID", "derive_segment_seed",
     "COSINE", "DOT", "L2",
+    "MetaStore", "Predicate",
+    "Eq", "Ne", "Lt", "Le", "Gt", "Ge", "In", "And", "Or", "Not",
 ]

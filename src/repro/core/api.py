@@ -38,6 +38,8 @@ from .allowlist import Allowlist
 from .bruteforce import BruteForceIndex
 from .hnsw import HnswIndex, recommended_m
 from .ivf import IvfFlatIndex
+from .metadata import MetaStore
+from .predicate import Predicate
 from .standardize import COSINE, GlobalStd
 
 Backend = Union[BruteForceIndex, IvfFlatIndex, HnswIndex]
@@ -49,6 +51,7 @@ _TYPE_CODE = {BruteForceIndex: fmt.INDEX_BRUTEFORCE, IvfFlatIndex: fmt.INDEX_IVF
 class MonaVec:
     backend: Backend
     mut: Optional[seg.SegmentedState] = None
+    meta: Optional[MetaStore] = None   # per-row metadata columns (v9, §8)
 
     def __post_init__(self):
         if self.mut is None:
@@ -76,6 +79,7 @@ class MonaVec:
         avg_bits: Optional[float] = None,
         std: Optional[GlobalStd] = None,
         ids: Optional[np.ndarray] = None,
+        meta: Optional[dict] = None,
         **kwargs,
     ) -> "MonaVec":
         vectors = jnp.asarray(vectors)
@@ -94,7 +98,9 @@ class MonaVec:
             )
         else:
             raise ValueError(f"unknown index {index!r}")
-        return MonaVec(backend=be)
+        store = (MetaStore.build(meta, int(vectors.shape[0]))
+                 if meta else None)
+        return MonaVec(backend=be, meta=store)
 
     # -- corpus introspection ---------------------------------------------
 
@@ -124,13 +130,24 @@ class MonaVec:
         self,
         vectors: jnp.ndarray,
         ids: Optional[Sequence[int]] = None,
+        meta: Optional[dict] = None,
     ) -> np.ndarray:
         """Append a new immutable segment quantized through the same
         RHDH + Lloyd-Max pipeline under ``derive_segment_seed(root, ordinal)``.
         Returns the assigned external ids.  Ids duplicating a LIVE row are
-        rejected (tombstoned ids may be reused)."""
+        rejected (tombstoned ids may be reused).  An index built with
+        metadata columns requires ``meta`` for every batch (exact schema
+        match); a metadata-free index rejects it."""
         vectors = jnp.atleast_2d(jnp.asarray(vectors))
         n_new = int(vectors.shape[0])
+        if self.meta is not None and meta is None:
+            raise ValueError(
+                "add: this index has metadata columns "
+                f"{[n for n, _ in self.meta.schema]}; pass meta= for the batch")
+        if self.meta is None and meta is not None:
+            raise ValueError(
+                "add: meta= given but the index was built without metadata "
+                "columns")
         if n_new == 0:
             return np.zeros(0, dtype=np.uint64)
         if vectors.shape[1] != self.backend.enc.dim:
@@ -153,6 +170,8 @@ class MonaVec:
         clash = np.intersect1d(new_ids, live_ids)
         if clash.size:
             raise ValueError(f"add: ids already live in the index: {clash[:8].tolist()}")
+        if self.meta is not None:
+            self.meta.append(meta, n_new)    # atomic: validates before commit
         seed = seg.derive_segment_seed(self.backend.enc.seed, self.mut.next_ordinal)
         enc = seg.encode_segment(vectors, self.backend.enc, seed)
         self.mut.extras.append(
@@ -188,6 +207,8 @@ class MonaVec:
             return 0
         if self.n_live == 0:
             raise ValueError("compact: no live rows to rewrite")
+        if self.meta is not None:
+            self.meta = self.meta.gather(np.concatenate(self._live_masks()))
         encs = [self.backend.enc] + [s.enc for s in self.mut.extras]
         all_ids = [self.backend.ids] + [s.ids for s in self.mut.extras]
         vec_parts, id_parts = [], []
@@ -235,6 +256,7 @@ class MonaVec:
         k: int = 10,
         *,
         allow: Optional[Allowlist] = None,
+        where: Optional[Predicate] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
         **kwargs,
@@ -248,21 +270,25 @@ class MonaVec:
         path elsewhere; ``use_kernel=True`` with ``interpret=True`` runs the
         kernel body in interpret mode (validation, bit-identical to the jnp
         path); backend-specific knobs (``nprobe``, ``ef``) ride in
-        ``**kwargs``.  On a mutated index the scan covers every segment with
-        tombstones masked pre-top-k (allowlists are built from
-        ``MonaVec.ids``).  Always exactly ``k`` columns: inadmissible slots
-        carry SENTINEL_ID / NEG."""
+        ``**kwargs``.  ``where=`` takes a structured predicate over the
+        index's metadata columns, compiled into the same plan as a mask
+        stage (DESIGN.md §8) — its structure joins the fingerprint, its
+        constants ride as dynamic arguments.  On a mutated index the scan
+        covers every segment with tombstones masked pre-top-k (allowlists
+        are built from ``MonaVec.ids``).  Always exactly ``k`` columns:
+        inadmissible slots carry SENTINEL_ID / NEG."""
         from .. import engine
         return engine.search_backend(
             self.backend, None if self.mut.is_static else self.mut,
-            queries, k, allow=allow, use_kernel=use_kernel,
-            interpret=interpret, **kwargs,
+            queries, k, allow=allow, where=where, meta=self.meta,
+            use_kernel=use_kernel, interpret=interpret, **kwargs,
         )
 
     def searcher(
         self,
         k: int = 10,
         *,
+        where: Optional[Predicate] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
         **kwargs,
@@ -271,9 +297,10 @@ class MonaVec:
         s(queries)``.  The handle resolves its compiled plan through the
         shared engine cache on every call (so it tracks add/delete/compact),
         and ``s.warmup(batch_size)`` pre-compiles a bucket so serving never
-        pays jit tracing inside a measured window."""
+        pays jit tracing inside a measured window.  ``where=`` binds a
+        predicate over metadata columns into every call."""
         from .. import engine
-        return engine.Searcher(self, k=k, use_kernel=use_kernel,
+        return engine.Searcher(self, k=k, where=where, use_kernel=use_kernel,
                                interpret=interpret, knobs=kwargs)
 
     # -- persistence -----------------------------------------------------------
@@ -296,6 +323,7 @@ class MonaVec:
             extras=[fmt.ExtraSegment(enc=s.enc, ids=s.ids)
                     for s in self.mut.extras],
             tombs=[self.mut.base_tombs] + [s.tombs for s in self.mut.extras],
+            meta=self.meta,
         ))
 
     @staticmethod
@@ -325,4 +353,4 @@ class MonaVec:
                     for i, e in enumerate(f.extras)],
             next_ordinal=len(f.extras) + 1,
         )
-        return MonaVec(backend=be, mut=mut)
+        return MonaVec(backend=be, mut=mut, meta=f.meta)

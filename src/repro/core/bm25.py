@@ -14,7 +14,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-_TOKEN_RE = re.compile(r"[a-z0-9]+")
+# Unicode word pattern: any run of word characters minus underscore.  The
+# old `[a-z0-9]+` silently dropped every non-ASCII term, so any non-English
+# doc got an empty sparse channel; on lowercased ASCII text this pattern
+# tokenizes identically (letters+digits runs split at `_`, which the old
+# pattern also split at, since `_` matched neither class).
+_TOKEN_RE = re.compile(r"[^\W_]+", re.UNICODE)
 
 
 def tokenize(text: str) -> List[str]:

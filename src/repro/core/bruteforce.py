@@ -68,6 +68,7 @@ class BruteForceIndex:
         k: int,
         *,
         allow: Optional[Allowlist] = None,
+        where_mask=None,
         use_kernel: Optional[bool] = None,   # None = backend dispatch
         interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
@@ -77,9 +78,11 @@ class BruteForceIndex:
         corpus — smaller than k) come back with SENTINEL_ID and a NEG score,
         the same no-result contract as IVF/HNSW and the segmented scan
         (§3.5: exactly min(k, allowed) real results, never disallowed
-        filler).  Routed through the compiled-plan engine (DESIGN.md §7)."""
+        filler).  ``where_mask`` is a compiled predicate's [n] boolean row
+        mask (DESIGN.md §8), ANDed into the live mask pre-top-k.  Routed
+        through the compiled-plan engine (DESIGN.md §7)."""
         from .. import engine
         return engine.search_backend(
-            self, None, queries, k, allow=allow, use_kernel=use_kernel,
-            interpret=interpret,
+            self, None, queries, k, allow=allow, where_mask=where_mask,
+            use_kernel=use_kernel, interpret=interpret,
         )

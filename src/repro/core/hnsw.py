@@ -207,6 +207,7 @@ class HnswIndex:
         *,
         ef: int = 64,
         allow: Optional[Allowlist] = None,
+        where_mask=None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
@@ -222,8 +223,8 @@ class HnswIndex:
         """
         from .. import engine
         return engine.search_backend(
-            self, None, queries, k, allow=allow, use_kernel=use_kernel,
-            interpret=interpret, ef=ef,
+            self, None, queries, k, allow=allow, where_mask=where_mask,
+            use_kernel=use_kernel, interpret=interpret, ef=ef,
         )
 
 

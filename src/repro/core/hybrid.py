@@ -4,12 +4,20 @@ Pipeline (paper):
   1. query embedded (dense) + tokenized (sparse) simultaneously;
   2. dense top-K and BM25 top-K retrieved independently;
   3. RRF combination; 4. final top-K.
+
+Since DESIGN.md §8 this is a thin facade over ``repro.engine.fusion``: the
+dense channel runs as one compiled, bucketed SearchPlan (predicate mask
+stage included), BM25 stays host-side with the same combined
+allowlist ∧ predicate pre-filter on its channel, and the RRF merge is the
+deterministic host stage.  Batched queries are first-class — ``[b, d]``
+vectors with ``b`` texts return ``[b, k]`` results, each row identical to
+its single-query run.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -17,13 +25,15 @@ import numpy as np
 from .allowlist import Allowlist
 from .bm25 import Bm25Index
 from .bruteforce import BruteForceIndex
-from .rrf import rrf_fuse
+from .metadata import MetaStore
+from .predicate import Predicate
 
 
 @dataclasses.dataclass
 class HybridIndex:
     dense: BruteForceIndex
     sparse: Bm25Index
+    meta: Optional[MetaStore] = None
 
     @staticmethod
     def build(
@@ -33,36 +43,41 @@ class HybridIndex:
         metric: str = "cosine",
         seed: int = 0x6D6F6E61,
         std=None,
+        meta: Optional[dict] = None,
     ) -> "HybridIndex":
         assert vectors.shape[0] == len(docs)
+        store = (MetaStore.build(meta, int(vectors.shape[0]))
+                 if meta else None)
         return HybridIndex(
             dense=BruteForceIndex.build(vectors, metric=metric, seed=seed, std=std),
             sparse=Bm25Index.build(docs),
+            meta=store,
         )
 
     def search(
         self,
         query_vec: jnp.ndarray,
-        query_text: str,
-        k: int,
+        query_text: Union[str, Sequence[str]],
+        k: int = 10,
         *,
         fetch_k: Optional[int] = None,
         rrf_k: int = 60,
         allow: Optional[Allowlist] = None,
+        where: Optional[Predicate] = None,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        fetch_k = fetch_k or max(2 * k, 20)
-        _, dense_ids = self.dense.search(query_vec, fetch_k, allow=allow)
-        # A selective allowlist can return fewer than fetch_k real rows;
-        # SENTINEL_ID slots must not enter the fusion as if they were docs.
-        from .segments import SENTINEL_ID
-        dense_ids = dense_ids[0]
-        dense_ids = dense_ids[dense_ids != SENTINEL_ID]
-        # Both channels pre-filter (§3.5): the BM25 top-k runs over allowed
-        # rows only, so selective allowlists still surface fetch_k sparse
-        # candidates instead of a post-filtered remnant.
-        _, sparse_rows = self.sparse.search(
-            query_text, fetch_k,
-            allow_mask=None if allow is None else allow.mask,
+        """Hybrid top-k through the engine (``repro.engine.fusion``).
+
+        Single query (1-D vec + str): the classic 1-D ``(scores, ids)``,
+        possibly shorter than ``k`` when the fused candidate pool is small.
+        Batch ([b, d] vec + b texts): ``[b, k]`` arrays, rows padded with
+        id -1 / score 0.0.  ``where=`` filters BOTH channels through the
+        index's metadata columns (§3.5 pre-filter semantics).
+        """
+        from ..engine import fusion
+        return fusion.search_hybrid(
+            self, query_vec, query_text, k, fetch_k=fetch_k, rrf_k=rrf_k,
+            allow=allow, where=where, use_kernel=use_kernel,
+            interpret=interpret,
         )
-        sparse_ids = self.dense.ids[sparse_rows]
-        return rrf_fuse([dense_ids, sparse_ids], k=rrf_k, top_k=k)

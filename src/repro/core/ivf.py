@@ -204,6 +204,7 @@ class IvfFlatIndex:
         *,
         nprobe: int = 8,
         allow: Optional[Allowlist] = None,
+        where_mask=None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
@@ -219,6 +220,6 @@ class IvfFlatIndex:
         """
         from .. import engine
         return engine.search_backend(
-            self, None, queries, k, allow=allow, use_kernel=use_kernel,
-            interpret=interpret, nprobe=nprobe,
+            self, None, queries, k, allow=allow, where_mask=where_mask,
+            use_kernel=use_kernel, interpret=interpret, nprobe=nprobe,
         )

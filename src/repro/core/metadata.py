@@ -1,0 +1,292 @@
+"""Per-row metadata columns (DESIGN.md §8, format v9).
+
+The paper's deployment scenario — on-device RAG — is rarely "top-k over
+everything": real queries are "top-k WHERE lang=en AND date>cutoff" (the
+Faiss library paper treats metadata-filtered search as a first-class index
+operation).  A ``MetaStore`` attaches named, typed columns to an index,
+row-aligned with ``MonaVec.ids`` (the concatenation of every segment's rows,
+tombstoned included, so positions are stable across delete()):
+
+  * ``i64``  — numpy int64 values, exact;
+  * ``f64``  — numpy float64 values, exact (NaN rejected, -0.0 canonicalized
+    to +0.0 so equality and ordering are total);
+  * ``str``  — small-enum interned strings: an index-global vocabulary per
+    column plus int32 codes per row (the classic dictionary encoding).
+
+Exactness contract.  Predicates over these columns must evaluate to the SAME
+boolean mask on the host (the numpy oracle, ``predicate.evaluate``) and on
+the device (the compiled plan stage) — but JAX runs with x64 disabled, so
+shipping raw int64/float64 to a trace would silently truncate values and
+flip comparisons.  The resolution: every column lowers ONCE to an
+order-and-equality-preserving unsigned-64 key, stored as two uint32 planes
+(``key_hi``/``key_lo``):
+
+  * i64  -> two's-complement bits with the sign bit flipped (monotone);
+  * f64  -> the IEEE-754 total-order map (negatives -> ~bits, positives ->
+    bits | 2^63), which preserves <, =, > exactly on non-NaN values;
+  * str  -> the non-negative vocab code (equality-only; ordering rejected).
+
+Any comparison on (hi, lo) pairs — lexicographic on two uint32 planes — then
+reproduces the original int64/float64 comparison bit-exactly inside a trace,
+with the predicate CONSTANTS mapped through the same function at call time
+(so they ride as dynamic arguments and never force a retrace).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+KIND_I64, KIND_F64, KIND_STR = "i64", "f64", "str"
+KINDS = (KIND_I64, KIND_F64, KIND_STR)
+_KIND_CODE = {KIND_I64: 0, KIND_F64: 1, KIND_STR: 2}
+_KIND_NAME = {v: k for k, v in _KIND_CODE.items()}
+
+_U64_MASK = (1 << 64) - 1
+_SIGN = 1 << 63
+#: u64 key guaranteed to equal no interned code (codes are int32 >= 0).
+NO_MATCH_KEY = _U64_MASK
+
+
+def kind_code(kind: str) -> int:
+    return _KIND_CODE[kind]
+
+
+def kind_name(code: int) -> str:
+    if code not in _KIND_NAME:
+        raise ValueError(f"unknown metadata column kind code {code}")
+    return _KIND_NAME[code]
+
+
+# ---------------------------------------------------------------------------
+# Order-preserving u64 keys (host-side, computed once per column version).
+# ---------------------------------------------------------------------------
+
+def _i64_keys(values: np.ndarray) -> np.ndarray:
+    return values.view(np.uint64) ^ np.uint64(_SIGN)
+
+
+def _f64_keys(values: np.ndarray) -> np.ndarray:
+    bits = values.view(np.uint64)
+    return np.where(bits >> np.uint64(63) != 0,
+                    ~bits, bits | np.uint64(_SIGN))
+
+
+def encode_constant(kind: str, value, vocab: Optional[Dict[str, int]]) -> int:
+    """Map one predicate constant through the column's key function.
+
+    Returns a python int in [0, 2^64); out-of-vocabulary strings map to
+    ``NO_MATCH_KEY`` so equality against them is False for every row.
+    """
+    if kind == KIND_I64:
+        if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
+            raise TypeError(
+                f"i64 column constant must be an int, got {value!r}")
+        v = int(value)
+        if not (-(1 << 63) <= v < (1 << 63)):
+            raise TypeError(f"i64 constant out of range: {value!r}")
+        return (v & _U64_MASK) ^ _SIGN
+    if kind == KIND_F64:
+        if isinstance(value, bool) or not isinstance(
+                value, (int, float, np.integer, np.floating)):
+            raise TypeError(
+                f"f64 column constant must be a number, got {value!r}")
+        arr = np.asarray([value], dtype=np.float64)
+        if np.isnan(arr[0]):
+            raise TypeError("f64 column constant may not be NaN")
+        arr[arr == 0.0] = 0.0          # -0.0 == +0.0: one canonical key
+        return int(_f64_keys(arr)[0])
+    if kind == KIND_STR:
+        if not isinstance(value, str):
+            raise TypeError(
+                f"str column constant must be a string, got {value!r}")
+        code = (vocab or {}).get(value)
+        return NO_MATCH_KEY if code is None else code
+    raise ValueError(f"unknown column kind {kind!r}")
+
+
+def split_key(keys) -> Tuple[np.ndarray, np.ndarray]:
+    """u64 key(s) -> (hi, lo) uint32 planes (trace-safe dtypes)."""
+    k = np.asarray(keys, dtype=np.uint64)
+    return ((k >> np.uint64(32)).astype(np.uint32),
+            (k & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Columns + the store.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Column:
+    """One typed column: exact host values + the precomputed device keys."""
+
+    kind: str
+    values: np.ndarray                    # i64 / f64, or int32 codes for str
+    vocab: Optional[List[str]] = None     # str columns: code -> string
+    key_hi: np.ndarray = dataclasses.field(init=False)
+    key_lo: np.ndarray = dataclasses.field(init=False)
+
+    def __post_init__(self) -> None:
+        self._rekey()
+
+    def _rekey(self) -> None:
+        if self.kind == KIND_I64:
+            keys = _i64_keys(self.values)
+        elif self.kind == KIND_F64:
+            keys = _f64_keys(self.values)
+        else:
+            keys = self.values.astype(np.uint64)    # codes are >= 0
+        self.key_hi, self.key_lo = split_key(keys)
+
+    @property
+    def n(self) -> int:
+        return int(self.values.shape[0])
+
+    def vocab_map(self) -> Optional[Dict[str, int]]:
+        return None if self.vocab is None else {
+            s: i for i, s in enumerate(self.vocab)}
+
+    def decoded(self) -> np.ndarray:
+        """Host-facing values (strings materialized for str columns)."""
+        if self.kind != KIND_STR:
+            return self.values
+        return np.asarray([self.vocab[c] for c in self.values], dtype=object)
+
+
+def _ingest(name: str, data, vocab: Optional[List[str]],
+            kind: Optional[str]) -> Column:
+    """Coerce one user-supplied column; kind inferred unless pinned."""
+    arr = np.asarray(data)
+    if arr.ndim != 1:
+        raise ValueError(f"metadata column {name!r} must be 1-D, got shape "
+                         f"{arr.shape}")
+    if kind is None:
+        if arr.dtype == bool or np.issubdtype(arr.dtype, np.integer):
+            kind = KIND_I64
+        elif np.issubdtype(arr.dtype, np.floating):
+            kind = KIND_F64
+        elif arr.dtype.kind in ("U", "O", "S"):
+            kind = KIND_STR
+        else:
+            raise TypeError(f"metadata column {name!r}: cannot infer a kind "
+                            f"from dtype {arr.dtype}")
+    if kind == KIND_I64:
+        if not (arr.dtype == bool or np.issubdtype(arr.dtype, np.integer)):
+            raise TypeError(f"metadata column {name!r} is i64 but got "
+                            f"dtype {arr.dtype}")
+        return Column(kind=KIND_I64, values=arr.astype(np.int64))
+    if kind == KIND_F64:
+        if not np.issubdtype(arr.dtype, np.number) or arr.dtype == bool:
+            raise TypeError(f"metadata column {name!r} is f64 but got "
+                            f"dtype {arr.dtype}")
+        vals = arr.astype(np.float64).copy()
+        if np.isnan(vals).any():
+            raise ValueError(f"metadata column {name!r} contains NaN "
+                             "(unsupported: NaN breaks total ordering)")
+        vals[vals == 0.0] = 0.0        # canonicalize -0.0
+        return Column(kind=KIND_F64, values=vals)
+    # str: intern against the (possibly pre-existing, index-global) vocab.
+    voc = list(vocab) if vocab else []
+    lut = {s: i for i, s in enumerate(voc)}
+    codes = np.empty(arr.shape[0], dtype=np.int32)
+    for i, v in enumerate(arr.tolist()):
+        if not isinstance(v, str):
+            raise TypeError(f"metadata column {name!r} is str but row {i} "
+                            f"is {v!r}")
+        code = lut.get(v)
+        if code is None:
+            code = lut[v] = len(voc)
+            voc.append(v)
+        codes[i] = code
+    return Column(kind=KIND_STR, values=codes, vocab=voc)
+
+
+@dataclasses.dataclass
+class MetaStore:
+    """Named typed columns, row-aligned with the index's concatenated rows."""
+
+    columns: "collections.OrderedDict[str, Column]"
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def build(data: Mapping[str, Sequence], n_rows: int) -> "MetaStore":
+        cols: "collections.OrderedDict[str, Column]" = collections.OrderedDict()
+        for name in data:
+            if not isinstance(name, str) or not name:
+                raise ValueError(f"metadata column name must be a non-empty "
+                                 f"string, got {name!r}")
+            col = _ingest(name, data[name], vocab=None, kind=None)
+            if col.n != n_rows:
+                raise ValueError(
+                    f"metadata column {name!r} has {col.n} rows but the "
+                    f"index has {n_rows}")
+            cols[name] = col
+        return MetaStore(columns=cols)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return next(iter(self.columns.values())).n if self.columns else 0
+
+    @property
+    def schema(self) -> Tuple[Tuple[str, str], ...]:
+        """Ordered (name, kind) pairs — part of the plan fingerprint."""
+        return tuple((name, c.kind) for name, c in self.columns.items())
+
+    def __bool__(self) -> bool:
+        return bool(self.columns)
+
+    def __getitem__(self, name: str) -> Column:
+        try:
+            return self.columns[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown metadata column {name!r}; this index has "
+                f"{sorted(self.columns)}") from None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def append(self, data: Mapping[str, Sequence], n_new: int) -> None:
+        """Extend every column by one segment's rows (add() path).
+
+        The batch must supply EXACTLY the schema's columns; enum values not
+        yet in a column's vocabulary extend it (the vocab is index-global,
+        codes are append-only so existing rows never re-encode).
+        """
+        got, want = set(data), set(self.columns)
+        if got != want:
+            raise ValueError(
+                f"add: metadata columns {sorted(got)} do not match the "
+                f"index schema {sorted(want)}")
+        staged = {}
+        for name, col in self.columns.items():
+            new = _ingest(name, data[name], vocab=col.vocab, kind=col.kind)
+            if new.n != n_new:
+                raise ValueError(
+                    f"add: metadata column {name!r} has {new.n} rows, "
+                    f"expected {n_new}")
+            staged[name] = new
+        for name, col in self.columns.items():
+            new = staged[name]
+            self.columns[name] = Column(
+                kind=col.kind,
+                values=np.concatenate([col.values, new.values]),
+                vocab=new.vocab if col.kind == KIND_STR else None,
+            )
+
+    def gather(self, keep: np.ndarray) -> "MetaStore":
+        """Row-select every column (compact() carries columns through)."""
+        cols: "collections.OrderedDict[str, Column]" = collections.OrderedDict()
+        for name, c in self.columns.items():
+            cols[name] = Column(kind=c.kind, values=c.values[keep],
+                                vocab=None if c.vocab is None else list(c.vocab))
+        return MetaStore(columns=cols)
+
+    def slice(self, lo: int, hi: int) -> Dict[str, np.ndarray]:
+        """Per-segment value blocks, for the v9 writer."""
+        return {name: c.values[lo:hi] for name, c in self.columns.items()}

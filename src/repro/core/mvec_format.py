@@ -1,4 +1,4 @@
-"""`.mvec` single-file index format, versions 6-8 (paper §3.8 + DESIGN.md §6).
+"""`.mvec` single-file index format, versions 6-9 (paper §3.8 + DESIGN.md §6/§8).
 
 Fixed 56-byte header followed by variable-length blocks.  The embedded SEED
 makes load→search reproduce the same top-K on any platform; all payloads are
@@ -9,7 +9,8 @@ Header layout (offsets in bytes, little-endian):
     4   VERSION     u32  6 (7 when a mixed-precision permutation block is
                          persisted — our documented extension, DESIGN.md §2;
                          8 when the index is MUTATED: extra segments and/or
-                         tombstones — DESIGN.md §6)
+                         tombstones — DESIGN.md §6; 9 when per-row METADATA
+                         COLUMNS are attached — DESIGN.md §8)
     8   DIM         u32  input dimension d
     12  METRIC      u8   0=Cosine 1=Dot 2=L2
     13  BIT_WIDTH   u8   2, 3 (mixed) or 4
@@ -25,14 +26,15 @@ Header layout (offsets in bytes, little-endian):
                          reserved-zero field, so pre-existing readers and
                          files are unaffected)
     44  HAS_STD     u8   1 if global standardization block follows
-    45  HAS_PERM    u8   v8 only: 1 if a permutation block follows (v7
+    45  HAS_PERM    u8   v8/v9 only: 1 if a permutation block follows (v7
                          signals the same through VERSION; always 0 in v6/v7)
     46  RESERVED    10B  (pads the header to exactly 56 bytes)
 
 Blocks (in order): STD_MEAN [f32 × dim], STD_INV_STD [f32 × dim] (if HAS_STD;
 scalar globals replicated per the paper's field spec), PERM [i32 × dim_pad]
-(v7, or v8 with HAS_PERM), VECTORS [u8], IDS [u64], NORMS [f32], INDEX_DATA
-(backend blob).  Version 8 appends the segment table and tombstone bitmaps:
+(v7, or v8/v9 with HAS_PERM), VECTORS [u8], IDS [u64], NORMS [f32],
+INDEX_DATA (backend blob).  Version 8 appends the segment table and tombstone
+bitmaps:
 
     SEG_COUNT  u32               number of EXTRA segments (>= 0)
     per extra segment, in ordinal order:
@@ -43,6 +45,19 @@ scalar globals replicated per the paper's field spec), PERM [i32 × dim_pad]
     per segment INCLUDING the base, in order:
         TOMBS      [u8]          np.packbits deletion bitmap (bit set = dead)
 
+Version 9 (an index with metadata columns, mutated or not) writes the v8
+body — SEG_COUNT may be 0 and the tombstone bitmaps all-zero — then the
+metadata column table (DESIGN.md §8):
+
+    COL_COUNT  u32               number of metadata columns (>= 1)
+    per column, in schema order:
+        NAME       str           u32 byte length + utf-8 bytes
+        KIND       u8            0=i64  1=f64  2=str (interned enum)
+        VOCAB      (str only)    u32 entry count, then that many strs
+                                 (code -> string, index-global per column)
+        per segment INCLUDING the base, in order:
+            VALUES [i64|f64|i32] the segment's rows (i32 = vocab codes)
+
 Every block is length-prefixed and every read is validated against the bytes
 actually present — a truncated or garbage-tailed file raises ``ValueError``
 naming the short block instead of letting ``np.frombuffer`` misparse it.
@@ -50,6 +65,7 @@ naming the short block instead of letting ``np.frombuffer`` misparse it.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import io
 import struct
@@ -58,6 +74,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from . import metadata as md
 from . import quantize as qz
 from .standardize import COSINE, DOT, L2, GlobalStd
 
@@ -66,13 +83,21 @@ HEADER_LEN = 56
 _METRIC_CODE = {COSINE: 0, DOT: 1, L2: 2}
 _METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
 INDEX_BRUTEFORCE, INDEX_IVF, INDEX_HNSW = 0, 1, 2
-SUPPORTED_VERSIONS = (6, 7, 8)
+SUPPORTED_VERSIONS = (6, 7, 8, 9)
+_META_DTYPE = {md.KIND_I64: np.int64, md.KIND_F64: np.float64,
+               md.KIND_STR: np.int32}
 
 
 def _write_array(buf: io.BytesIO, arr: np.ndarray) -> None:
     """Length-prefixed raw little-endian block."""
     raw = np.ascontiguousarray(arr).astype(arr.dtype.newbyteorder("<")).tobytes()
     buf.write(struct.pack("<Q", len(raw)))
+    buf.write(raw)
+
+
+def _write_str(buf: io.BytesIO, s: str) -> None:
+    raw = s.encode("utf-8")
+    buf.write(struct.pack("<I", len(raw)))
     buf.write(raw)
 
 
@@ -99,6 +124,18 @@ class _Reader:
 
     def u64(self, name: str) -> int:
         return struct.unpack("<Q", self.take(8, name))[0]
+
+    def u8(self, name: str) -> int:
+        return self.take(1, name)[0]
+
+    def str_(self, name: str) -> str:
+        nbytes = self.u32(f"{name} length")
+        try:
+            return self.take(nbytes, name).decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise ValueError(
+                f".mvec corrupt block {name!r}: invalid utf-8 ({e})"
+            ) from None
 
     def array(self, dtype, name: str, count: Optional[int] = None) -> np.ndarray:
         nbytes = self.u64(f"{name} length")
@@ -143,6 +180,7 @@ class MvecFile:
     index_param2: int = 0         # HNSW ef_construction (0 = unknown)
     extras: List[ExtraSegment] = dataclasses.field(default_factory=list)
     tombs: Optional[List[np.ndarray]] = None   # [1+len(extras)] bool bitmaps
+    meta: Optional[md.MetaStore] = None        # v9: per-row metadata columns
 
 
 def _bytes_per_vector(dim_pad: int, bits: int, n4_dims: int) -> int:
@@ -158,10 +196,19 @@ def save(path: str, f: MvecFile) -> None:
     mutated = bool(f.extras) or (
         f.tombs is not None and any(t.any() for t in f.tombs)
     )
-    if mutated:
+    has_meta = f.meta is not None and bool(f.meta)
+    if has_meta:
+        version = 9
+    elif mutated:
         version = 8
     else:
         version = 7 if enc.perm is not None else 6
+    seg_rows = [int(enc.n)] + [int(seg.ids.shape[0]) for seg in f.extras]
+    if has_meta and f.meta.n_rows != sum(seg_rows):
+        raise ValueError(
+            f"metadata has {f.meta.n_rows} rows but the index has "
+            f"{sum(seg_rows)}"
+        )
     has_std = enc.std is not None
     has_perm = enc.perm is not None
     header = struct.pack(
@@ -171,7 +218,7 @@ def save(path: str, f: MvecFile) -> None:
         enc.n, enc.seed & 0xFFFFFFFFFFFFFFFF,
         enc.n4_dims, f.index_param, f.index_param2,
         1 if has_std else 0,
-        1 if (version == 8 and has_perm) else 0,
+        1 if (version >= 8 and has_perm) else 0,
         b"\x00" * 10,
     )
     assert len(header) == HEADER_LEN, len(header)
@@ -189,18 +236,29 @@ def save(path: str, f: MvecFile) -> None:
     blob = f.index_data or b""
     buf.write(struct.pack("<Q", len(blob)))
     buf.write(blob)
-    if version == 8:
+    if version >= 8:
         buf.write(struct.pack("<I", len(f.extras)))
         for seg in f.extras:
             buf.write(struct.pack("<Q", seg.enc.seed & 0xFFFFFFFFFFFFFFFF))
             _write_array(buf, np.asarray(seg.enc.packed, dtype=np.uint8))
             _write_array(buf, np.asarray(seg.ids, dtype=np.uint64))
             _write_array(buf, np.asarray(seg.enc.qnorms, dtype=np.float32))
-        tombs = f.tombs or [np.zeros(enc.n, dtype=bool)] + [
-            np.zeros(seg.ids.shape[0], dtype=bool) for seg in f.extras
-        ]
+        tombs = f.tombs or [np.zeros(n, dtype=bool) for n in seg_rows]
         for t in tombs:
             _write_array(buf, np.packbits(np.asarray(t, dtype=bool)))
+    if version == 9:
+        bounds = np.concatenate([[0], np.cumsum(seg_rows)]).tolist()
+        buf.write(struct.pack("<I", len(f.meta.columns)))
+        for name, col in f.meta.columns.items():
+            _write_str(buf, name)
+            buf.write(struct.pack("<B", md.kind_code(col.kind)))
+            if col.kind == md.KIND_STR:
+                buf.write(struct.pack("<I", len(col.vocab)))
+                for entry in col.vocab:
+                    _write_str(buf, entry)
+            for lo, hi in zip(bounds, bounds[1:]):
+                _write_array(buf, np.asarray(
+                    col.values[lo:hi], dtype=_META_DTYPE[col.kind]))
     with open(path, "wb") as fh:
         fh.write(buf.getvalue())
 
@@ -221,7 +279,7 @@ def load(path: str) -> MvecFile:
         raise ValueError(f"not a .mvec file (magic={magic!r})")
     # Versions 1-5 predate this header layout entirely — parsing them against
     # the v6 offsets would silently misread every field, so reject anything
-    # outside the three layouts we actually implement.
+    # outside the layouts we actually implement.
     if version not in SUPPORTED_VERSIONS:
         raise ValueError(
             f"unsupported .mvec version {version} (this reader supports "
@@ -237,7 +295,7 @@ def load(path: str) -> MvecFile:
 
     dim_pad = next_pow2(dim)
     perm = None
-    if version == 7 or (version == 8 and has_perm):
+    if version == 7 or (version >= 8 and has_perm):
         perm = np.asarray(rd.array(np.int32, "perm", count=dim_pad))
     bytes_per = _bytes_per_vector(dim_pad, bits, n4_dims)
 
@@ -272,7 +330,7 @@ def load(path: str) -> MvecFile:
 
     extras: List[ExtraSegment] = []
     tombs: Optional[List[np.ndarray]] = None
-    if version == 8:
+    if version >= 8:
         n_extra = rd.u32("segment table")
         for i in range(n_extra):
             seg_seed = rd.u64(f"segment[{i}] seed")
@@ -283,13 +341,57 @@ def load(path: str) -> MvecFile:
             packed_bits = rd.array(
                 np.uint8, f"tombstones[{i}]", count=(n_rows + 7) // 8)
             tombs.append(np.unpackbits(packed_bits)[:n_rows].astype(bool))
+
+    meta: Optional[md.MetaStore] = None
+    if version == 9:
+        n_cols = rd.u32("metadata column table")
+        if n_cols == 0:
+            raise ValueError(
+                ".mvec corrupt block 'metadata column table': version 9 "
+                "requires at least one column"
+            )
+        seg_rows = [int(count)] + [int(e.ids.shape[0]) for e in extras]
+        cols: "collections.OrderedDict[str, md.Column]" = (
+            collections.OrderedDict())
+        for ci in range(n_cols):
+            name = rd.str_(f"column[{ci}] name")
+            if not name or name in cols:
+                raise ValueError(
+                    f".mvec corrupt block 'column[{ci}] name': empty or "
+                    f"duplicate column name {name!r}"
+                )
+            kind = md.kind_name(rd.u8(f"column[{ci}] kind"))
+            vocab = None
+            if kind == md.KIND_STR:
+                n_vocab = rd.u32(f"column[{ci}] vocab count")
+                vocab = [rd.str_(f"column[{ci}] vocab[{vi}]")
+                         for vi in range(n_vocab)]
+            blocks = [
+                rd.array(_META_DTYPE[kind],
+                         f"column[{ci}] segment[{si}] values", count=n)
+                for si, n in enumerate(seg_rows)
+            ]
+            values = np.ascontiguousarray(
+                np.concatenate(blocks).astype(_META_DTYPE[kind]))
+            if kind == md.KIND_STR and values.size and (
+                    values.min() < 0 or values.max() >= len(vocab)):
+                raise ValueError(
+                    f".mvec corrupt block 'column[{ci}]': code out of "
+                    f"vocabulary range (vocab has {len(vocab)} entries)"
+                )
+            if kind == md.KIND_F64 and np.isnan(values).any():
+                raise ValueError(
+                    f".mvec corrupt block 'column[{ci}]': NaN in f64 column"
+                )
+            cols[name] = md.Column(kind=kind, values=values, vocab=vocab)
+        meta = md.MetaStore(columns=cols)
     rd.expect_eof()
 
     return MvecFile(
         enc=enc, ids=ids, index_type=int(index_type),
         index_param=int(index_param), index_data=blob,
         index_param2=int(param2),
-        extras=extras, tombs=tombs,
+        extras=extras, tombs=tombs, meta=meta,
     )
 
 

@@ -1,0 +1,298 @@
+"""Structured predicates over metadata columns (DESIGN.md §8).
+
+A small AST — ``Eq/Ne/Lt/Le/Gt/Ge/In`` over columns, composed with
+``And/Or/Not`` (also spelled ``&``, ``|``, ``~``) — that compiles to a
+vectorized boolean-mask PLAN STAGE fused with the engine's tombstone/
+allowlist live-mask machinery:
+
+    idx.search(q, 10, where=Eq("lang", "en") & (Ge("date", 20260101)))
+
+Three views of one predicate, all guaranteed to agree:
+
+  * ``evaluate(p, store)`` — the host-side numpy oracle, computed on the
+    exact original values (int64/float64/str).  This is the semantics; the
+    golden and hypothesis suites pin everything else against it.
+  * ``structure(p, schema)`` — the predicate's SHAPE (ops, column names and
+    kinds, In-set sizes) with the constants stripped.  This tuple goes into
+    the plan fingerprint, so two queries with the same predicate structure
+    but different constants share one compiled plan: zero retraces.
+  * ``build_stage_fn(p)`` + ``flatten_args(p, store)`` — the device lowering.
+    The stage function consumes, per comparison leaf in preorder, the
+    column's uint32 key planes and the constant's key planes (dynamic
+    arguments), and reproduces the host comparison bit-exactly: the u64 keys
+    are order-and-equality-preserving (metadata.py), and lexicographic
+    comparison on (hi, lo) uint32 pairs is u64 comparison.
+
+Ordering comparisons on ``str`` columns are rejected at validation: codes
+are interning order, not collation order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+from .metadata import (KIND_STR, MetaStore, NO_MATCH_KEY, encode_constant,
+                       split_key)
+
+
+class Predicate:
+    """Base: composable with ``&``, ``|``, ``~``."""
+
+    def __and__(self, other: "Predicate") -> "Predicate":
+        return And(self, other)
+
+    def __or__(self, other: "Predicate") -> "Predicate":
+        return Or(self, other)
+
+    def __invert__(self) -> "Predicate":
+        return Not(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cmp(Predicate):
+    col: str
+    value: object
+
+    op = ""          # overridden
+
+    def __str__(self) -> str:
+        return f"{self.op}({self.col}, {self.value!r})"
+
+
+class Eq(_Cmp):
+    op = "eq"
+
+
+class Ne(_Cmp):
+    op = "ne"
+
+
+class Lt(_Cmp):
+    op = "lt"
+
+
+class Le(_Cmp):
+    op = "le"
+
+
+class Gt(_Cmp):
+    op = "gt"
+
+
+class Ge(_Cmp):
+    op = "ge"
+
+
+@dataclasses.dataclass(frozen=True)
+class In(Predicate):
+    col: str
+    values: tuple
+
+    op = "in"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "values", tuple(self.values))
+        if not self.values:
+            raise ValueError("In() needs at least one value")
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Predicate):
+    lhs: Predicate
+    rhs: Predicate
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Predicate):
+    lhs: Predicate
+    rhs: Predicate
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Predicate):
+    inner: Predicate
+
+
+_ORDERING = frozenset({"lt", "le", "gt", "ge"})
+
+
+def _leaves(p: Predicate) -> Iterator[Predicate]:
+    """Comparison leaves in preorder — the canonical argument order."""
+    if isinstance(p, (And, Or)):
+        yield from _leaves(p.lhs)
+        yield from _leaves(p.rhs)
+    elif isinstance(p, Not):
+        yield from _leaves(p.inner)
+    else:
+        yield p
+
+
+def used_columns(p: Predicate) -> Tuple[str, ...]:
+    out: List[str] = []
+    for leaf in _leaves(p):
+        if leaf.col not in out:
+            out.append(leaf.col)
+    return tuple(out)
+
+
+def validate(p: Predicate, store: MetaStore) -> None:
+    """Check columns exist, ops suit their kinds, constants are typed right.
+
+    Raises before any plan work, with the column/op named — the same errors
+    the host oracle would hit, surfaced eagerly.
+    """
+    for leaf in _leaves(p):
+        if not isinstance(leaf, (_Cmp, In)):
+            raise TypeError(f"not a predicate node: {leaf!r}")
+        col = store[leaf.col]
+        if leaf.op in _ORDERING and col.kind == KIND_STR:
+            raise TypeError(
+                f"ordering comparison {leaf.op!r} is not defined on str "
+                f"column {leaf.col!r} (codes are interning order)")
+        vocab = col.vocab_map()
+        values = leaf.values if isinstance(leaf, In) else (leaf.value,)
+        for v in values:
+            encode_constant(col.kind, v, vocab)     # raises on bad type
+
+
+# ---------------------------------------------------------------------------
+# Structure fingerprint: the shape without the constants.
+# ---------------------------------------------------------------------------
+
+def structure(p: Predicate, store: MetaStore) -> tuple:
+    if isinstance(p, And):
+        return ("and", structure(p.lhs, store), structure(p.rhs, store))
+    if isinstance(p, Or):
+        return ("or", structure(p.lhs, store), structure(p.rhs, store))
+    if isinstance(p, Not):
+        return ("not", structure(p.inner, store))
+    kind = store[p.col].kind
+    if isinstance(p, In):
+        # len(values) is a traced SHAPE (the constant array's), so it is
+        # structure, not constant.
+        return ("in", p.col, kind, len(p.values))
+    return (p.op, p.col, kind)
+
+
+# ---------------------------------------------------------------------------
+# Host oracle (numpy, exact original values).
+# ---------------------------------------------------------------------------
+
+def evaluate(p: Predicate, store: MetaStore) -> np.ndarray:
+    """[n_rows] bool — the reference semantics every other path must match."""
+    if isinstance(p, And):
+        return evaluate(p.lhs, store) & evaluate(p.rhs, store)
+    if isinstance(p, Or):
+        return evaluate(p.lhs, store) | evaluate(p.rhs, store)
+    if isinstance(p, Not):
+        return ~evaluate(p.inner, store)
+    col = store[p.col]
+    vals = col.values
+    if col.kind == KIND_STR:
+        lut = col.vocab_map()
+        if isinstance(p, In):
+            codes = [lut.get(v, -1) for v in p.values]
+            return np.isin(vals, np.asarray(codes, dtype=np.int64))
+        code = lut.get(p.value, -1)
+        hit = vals == code
+        return ~hit if p.op == "ne" else hit
+    if isinstance(p, In):
+        return np.isin(vals, np.asarray(list(p.values), dtype=vals.dtype))
+    c = vals.dtype.type(p.value)
+    return {
+        "eq": lambda: vals == c, "ne": lambda: vals != c,
+        "lt": lambda: vals < c, "le": lambda: vals <= c,
+        "gt": lambda: vals > c, "ge": lambda: vals >= c,
+    }[p.op]()
+
+
+# ---------------------------------------------------------------------------
+# Device lowering: stage builder + per-call argument packing.
+# ---------------------------------------------------------------------------
+
+def _key_cmp(op: str, ch, cl, kh, kl):
+    """u64 comparison on (hi, lo) uint32 planes — jnp, selection-only."""
+    eq = (ch == kh) & (cl == kl)
+    if op == "eq":
+        return eq
+    if op == "ne":
+        return ~eq
+    lt = (ch < kh) | ((ch == kh) & (cl < kl))
+    if op == "lt":
+        return lt
+    if op == "ge":
+        return ~lt
+    if op == "le":
+        return lt | eq
+    return ~(lt | eq)                                # gt
+
+
+def build_stage_fn(p: Predicate):
+    """Compile the AST into ``fn(live, *args) -> live & mask``.
+
+    Pure jnp boolean algebra over the flat argument tuple (preorder leaf
+    order: column hi, column lo, constant hi, constant lo).  No float
+    arithmetic anywhere — the mask is exact under any XLA fusion, so the
+    stage composes with the engine's bit-identity contract for free.
+    """
+    def rec(node):
+        if isinstance(node, And):
+            fa, fb = rec(node.lhs), rec(node.rhs)
+            return lambda it: fa(it) & fb(it)
+        if isinstance(node, Or):
+            fa, fb = rec(node.lhs), rec(node.rhs)
+            return lambda it: fa(it) | fb(it)
+        if isinstance(node, Not):
+            fa = rec(node.inner)
+            return lambda it: ~fa(it)
+        op = node.op
+
+        def leaf(it, op=op):
+            ch, cl, kh, kl = (next(it) for _ in range(4))
+            if op == "in":          # [n,1] vs [m] -> any over the value set
+                hit = (ch[:, None] == kh[None, :]) & (cl[:, None] == kl[None, :])
+                return hit.any(axis=1)
+            return _key_cmp(op, ch, cl, kh, kl)
+        return leaf
+
+    inner = rec(p)
+
+    def fn(live, *args):
+        return live & inner(iter(args))
+
+    return fn
+
+
+def flatten_args(p: Predicate, store: MetaStore) -> Tuple[np.ndarray, ...]:
+    """Per-call dynamic operands for the compiled stage, in preorder.
+
+    Constants are mapped through the column's key function HERE, at call
+    time — they are arguments of the stage, never trace constants, which is
+    what makes "same structure, different constants" a plan-cache hit.
+    """
+    out: List[np.ndarray] = []
+    for leaf in _leaves(p):
+        col = store[leaf.col]
+        vocab = col.vocab_map()
+        out.append(col.key_hi)
+        out.append(col.key_lo)
+        values = leaf.values if isinstance(leaf, In) else (leaf.value,)
+        keys = np.asarray(
+            [encode_constant(col.kind, v, vocab) for v in values],
+            dtype=np.uint64)
+        kh, kl = split_key(keys)
+        if not isinstance(leaf, In):
+            kh, kl = kh[0], kl[0]                   # scalar operands
+        out.append(kh)
+        out.append(kl)
+    return tuple(out)
+
+
+__all__ = [
+    "Predicate", "Eq", "Ne", "Lt", "Le", "Gt", "Ge", "In", "And", "Or",
+    "Not", "validate", "structure", "evaluate", "build_stage_fn",
+    "flatten_args", "used_columns", "NO_MATCH_KEY",
+]

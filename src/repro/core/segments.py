@@ -226,6 +226,7 @@ def search_segmented(
     k: int,
     *,
     allow: Optional[Allowlist] = None,
+    where_mask=None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     **kwargs,
@@ -239,6 +240,6 @@ def search_segmented(
     stages of one compiled SearchPlan (``repro.engine``)."""
     from .. import engine
     return engine.search_backend(
-        backend, state, queries, k, allow=allow, use_kernel=use_kernel,
-        interpret=interpret, **kwargs,
+        backend, state, queries, k, allow=allow, where_mask=where_mask,
+        use_kernel=use_kernel, interpret=interpret, **kwargs,
     )

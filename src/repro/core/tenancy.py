@@ -82,15 +82,21 @@ class TenantRegistry:
     # -> collection resolution as search: a tenant can only grow/churn its
     # own collections, and every path 401s exactly like get().
 
-    def searcher(self, token: Optional[str], name: str, k: int = 10, **knobs):
+    def searcher(self, token: Optional[str], name: str, k: int = 10,
+                 where=None, **knobs):
         """Bound engine Searcher over a tenant's collection (DESIGN.md §7):
         the handle the serving loop keeps per (tenant, collection) so every
-        request is a plan-cache hit, with the same 401 semantics as get()."""
+        request is a plan-cache hit, with the same 401 semantics as get().
+        ``where=`` binds a metadata predicate (DESIGN.md §8) into every call
+        — per-namespace filtered serving."""
+        if where is not None:
+            knobs["where"] = where
         return self.get(token, name).searcher(k=k, **knobs)
 
-    def add(self, token: Optional[str], name: str, vectors, ids=None):
+    def add(self, token: Optional[str], name: str, vectors, ids=None,
+            meta=None):
         """Append rows to a tenant's collection; returns the assigned ids."""
-        return self.get(token, name).add(vectors, ids=ids)
+        return self.get(token, name).add(vectors, ids=ids, meta=meta)
 
     def delete(self, token: Optional[str], name: str, ids) -> int:
         """Tombstone rows in a tenant's collection; returns rows deleted."""

@@ -120,6 +120,7 @@ def make_scan_topk_shardmap(
     interpret: Optional[bool] = None,
     n_valid: Optional[int] = None,
     on_trace=None,
+    with_mask: bool = False,
 ):
     """Build fn(q_rot, packed, qnorms) -> (scores [b,k], global ids [b,k])
     scanning corpus shards along the mesh data axes.
@@ -129,13 +130,18 @@ def make_scan_topk_shardmap(
     so every shard is equal-size.  Pass n_valid when the corpus is ALREADY
     padded (ShardedMonaVec) so the padding mask still knows the true row
     count.  ``on_trace`` (if given) runs once per jit trace — the engine's
-    plan cache hangs its retrace counter on it (DESIGN.md §7).  Results are
-    identical to scan_topk_pjit.
+    plan cache hangs its retrace counter on it (DESIGN.md §7).
+    ``with_mask=True`` makes the fn take a fourth argument — an [n] boolean
+    row-admissibility mask, sharded alongside the corpus (padding rows are
+    masked False) and applied with the padding sentinel BEFORE the local
+    top-k, so filtered shards merge exactly like unfiltered ones.  Results
+    are identical to scan_topk_pjit (slots with no admissible row surface
+    as -inf for the caller to sentinel-convert).
     """
     axes, n_shards = _mesh_data_info(mesh)
 
     @jax.jit
-    def call(q_rot, packed, qnorms):
+    def call(q_rot, packed, qnorms, mask=None):
         if on_trace is not None:
             on_trace()
         n = packed.shape[0] if n_valid is None else n_valid
@@ -144,23 +150,31 @@ def make_scan_topk_shardmap(
         packed_p = pad_rows(packed, n_pad)
         qnorms_p = pad_rows(qnorms, n_pad, fill=1.0)
 
-        def local_scan(q, pk, qn):
+        def local_scan(q, pk, qn, *rest):
             # pk [per, bytes], qn [per] — this shard's contiguous row block.
             gid0 = _shard_index(axes, mesh) * per
             raw = score_raw(pk, q, bits=bits, n4_dims=n4_dims,
                             use_kernel=use_kernel, interpret=interpret)
             s = adjust_scores(raw, qn, metric)
             gids = gid0 + jnp.arange(per, dtype=jnp.int32)
-            s = jnp.where(gids[None, :] < n, s, -jnp.inf)   # padding sentinel
+            ok = gids[None, :] < n                          # padding sentinel
+            if rest:
+                ok = ok & rest[0][None, :]                  # row admissibility
+            s = jnp.where(ok, s, -jnp.inf)
             v, li = jax.lax.top_k(s, k_local)               # local stable top-k
             return _merge_topk(v, jnp.take(gids, li), axes, k)
 
+        in_specs = [P(), P(axes, None), P(axes)]
+        operands = [q_rot, packed_p, qnorms_p]
+        if with_mask:
+            in_specs.append(P(axes))
+            operands.append(pad_rows(mask, n_pad, fill=False))
         return shard_map(
             local_scan, mesh=mesh,
-            in_specs=(P(), P(axes, None), P(axes)),
+            in_specs=tuple(in_specs),
             out_specs=(P(), P()),
             check_rep=False,
-        )(q_rot, packed_p, qnorms_p)
+        )(*operands)
 
     return call
 

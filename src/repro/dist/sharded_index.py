@@ -13,13 +13,15 @@ results are identical to the single-device index (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import predicate as pred
 from repro.core import quantize as qz
 from repro.core.bruteforce import BruteForceIndex
+from repro.core.metadata import MetaStore
 from repro.launch.mesh import make_local_mesh
 
 from .partition import place_sharded
@@ -31,6 +33,7 @@ class ShardedMonaVec:
     ids: np.ndarray          # [n] external ids (unpadded)
     mesh: object
     n: int                   # true (unpadded) corpus rows
+    meta: Optional[MetaStore] = None   # metadata columns (carried from MonaVec)
 
     # -- construction ------------------------------------------------------
 
@@ -44,7 +47,9 @@ class ShardedMonaVec:
         (IVF/HNSW traversals are pointer-chasing, not row scans).
         """
         from repro.core.api import MonaVec
+        meta = None
         if isinstance(index, MonaVec):
+            meta = index.meta
             index = index.backend
         if isinstance(index, BruteForceIndex):
             enc, ids = index.enc, index.ids
@@ -59,7 +64,7 @@ class ShardedMonaVec:
         packed, qnorms, n = place_sharded(mesh, enc.packed, enc.qnorms)
         enc_sharded = dataclasses.replace(enc, packed=packed, qnorms=qnorms)
         return ShardedMonaVec(enc=enc_sharded, ids=np.asarray(ids), mesh=mesh,
-                              n=n)
+                              n=n, meta=meta)
 
     @staticmethod
     def load(path: str, mesh=None) -> "ShardedMonaVec":
@@ -68,17 +73,39 @@ class ShardedMonaVec:
 
     # -- search ------------------------------------------------------------
 
-    def search(self, queries: jnp.ndarray, k: int = 10,
+    def search(self, queries: jnp.ndarray, k: int = 10, *,
+               where: Optional[pred.Predicate] = None,
+               where_mask=None,
                ) -> Tuple[np.ndarray, np.ndarray]:
         """(scores [b,k], external ids [b,k]) — same contract, same results
         as the single-device BruteForce search.  The shard_map scan runs as
         a cached SearchPlan (repro.engine, DESIGN.md §7): bucketed batches,
         shared hit/miss/trace counters, and exactly ``k`` columns
-        (SENTINEL_ID / NEG padding when k exceeds the corpus)."""
-        from repro import engine
-        return engine.search_sharded(self, queries, k)
+        (SENTINEL_ID / NEG padding when k exceeds the corpus).
 
-    def searcher(self, k: int = 10):
+        ``where=`` filters through the index's metadata columns: the
+        predicate is evaluated host-side against the exact original values
+        (the same oracle the engine's compiled stage is pinned to) and the
+        resulting row mask is sharded alongside the corpus, applied before
+        every local top-k.  ``where_mask=`` passes a precomputed [n] mask
+        directly; both compose (AND)."""
+        from repro import engine
+        mask = None if where_mask is None else np.asarray(where_mask, bool)
+        if where is not None:
+            if self.meta is None or not self.meta:
+                raise ValueError(
+                    "where= requires an index built with metadata columns")
+            if self.meta.n_rows != self.n:
+                raise ValueError(
+                    f"metadata has {self.meta.n_rows} rows but the index "
+                    f"has {self.n}")
+            pred.validate(where, self.meta)
+            pm = pred.evaluate(where, self.meta)
+            mask = pm if mask is None else mask & pm
+        return engine.search_sharded(self, queries, k, where_mask=mask)
+
+    def searcher(self, k: int = 10, *,
+                 where: Optional[pred.Predicate] = None):
         """Bound search handle over the sharded scan (``engine.Searcher``)."""
         from repro import engine
-        return engine.Searcher(self, k=k)
+        return engine.Searcher(self, k=k, where=where)

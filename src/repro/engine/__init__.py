@@ -8,11 +8,13 @@
 # abstraction: same keying, same bucketing, same hit/miss/trace accounting.
 
 from .batcher import BatcherStats, MicroBatcher, Ticket
+from .fusion import search_hybrid
 from .plan import (PlanCache, PlanKey, PlanStats, SearchPlan, Searcher,
                    plan_cache, search_backend, search_sharded, shape_bucket)
 
 __all__ = [
     "BatcherStats", "MicroBatcher", "Ticket",
     "PlanCache", "PlanKey", "PlanStats", "SearchPlan", "Searcher",
-    "plan_cache", "search_backend", "search_sharded", "shape_bucket",
+    "plan_cache", "search_backend", "search_hybrid", "search_sharded",
+    "shape_bucket",
 ]

@@ -3,9 +3,12 @@
 The paper's service layer answers one HTTP request at a time; at "millions
 of users" scale the winning shape is the classic serving micro-batch:
 requests arriving across calls (and across tenants) are queued, coalesced
-per **(namespace, collection, k, knobs)** group, and executed as ONE
-bucketed SearchPlan call per group — so ten 3-query requests cost one
-32-bucket plan execution instead of ten traces/dispatches.
+per **(namespace, collection, k, where, hybrid?, knobs)** group, and
+executed as ONE bucketed SearchPlan call per group — so ten 3-query
+requests cost one 32-bucket plan execution instead of ten traces/
+dispatches.  Filtered (``where=``) and hybrid (``text=``) requests coalesce
+the same way: identical predicates share a group, same-structure
+predicates with different constants share a compiled plan (DESIGN.md §8).
 
 Because bucketed plan execution is bit-identical to direct search (plan.py),
 coalescing is invisible to callers: every request gets exactly the rows a
@@ -73,13 +76,15 @@ class Ticket:
 
 @dataclasses.dataclass
 class _Group:
-    """One coalescible (namespace, collection, k, knobs) request stream."""
+    """One coalescible (namespace, collection, k, where, knobs) stream."""
 
     token: Optional[str]          # any token resolving to this namespace
     collection: str
     k: int
     knobs: tuple
+    where: Optional[object] = None          # predicate bound to every row
     queries: List[np.ndarray] = dataclasses.field(default_factory=list)
+    texts: Optional[List[List[str]]] = None   # hybrid: texts per request
     tickets: List[Ticket] = dataclasses.field(default_factory=list)
 
 
@@ -118,25 +123,45 @@ class MicroBatcher:
         queries,
         *,
         k: int = 10,
+        where=None,
+        text=None,
         **knobs,
     ) -> Ticket:
         """Queue one request; auth AND collection existence resolve NOW
         (401 = PermissionError, missing collection = KeyError, both here —
         never poisoning other tenants' flush).  Execution happens at the
-        next ``flush()``."""
+        next ``flush()``.
+
+        ``where=`` is a metadata predicate (DESIGN.md §8); predicates are
+        frozen (hashable), so identical predicates coalesce into one group
+        while same-structure/different-constant predicates form separate
+        groups that still share one compiled plan.  ``text=`` (a str, or one
+        str per query row) routes the group through the hybrid engine path —
+        texts concatenate alongside the query rows."""
         ns = self.registry.resolve_namespace(token)
         if ns is None:
             raise PermissionError("401: token rejected")
         self.registry.get(token, collection)    # missing collection: raise now
         q = np.atleast_2d(np.asarray(queries, dtype=np.float32))
-        key = (ns, collection, k, tuple(sorted(knobs.items())))
+        texts: Optional[List[str]] = None
+        if text is not None:
+            texts = [text] * int(q.shape[0]) if isinstance(text, str) \
+                else list(text)
+            if len(texts) != int(q.shape[0]):
+                raise ValueError(
+                    f"submit: {q.shape[0]} query rows but {len(texts)} texts")
+        key = (ns, collection, k, where, texts is not None,
+               tuple(sorted(knobs.items())))
         group = self._groups.get(key)
         if group is None:
             group = self._groups[key] = _Group(
                 token=token, collection=collection, k=k,
-                knobs=tuple(sorted(knobs.items())))
+                knobs=tuple(sorted(knobs.items())), where=where,
+                texts=[] if texts is not None else None)
         ticket = Ticket(self)
         group.queries.append(q)
+        if texts is not None:
+            group.texts.append(texts)
         group.tickets.append(ticket)
         self.stats.requests += 1
         self.stats.rows += int(q.shape[0])
@@ -149,7 +174,8 @@ class MicroBatcher:
     # -- drain -------------------------------------------------------------
 
     def _execute(self, group: _Group, queries: List[np.ndarray],
-                 tickets: List[Ticket]) -> None:
+                 tickets: List[Ticket],
+                 texts: Optional[List[List[str]]] = None) -> None:
         """Run one coalesced chunk; a failure (stale collection, knobs the
         collection's backend rejects, ...) is delivered to THIS chunk's
         tickets — other groups and chunks are isolated and still execute."""
@@ -160,8 +186,14 @@ class MicroBatcher:
                 kw["use_kernel"] = self.use_kernel
             if self.interpret is not None:
                 kw["interpret"] = self.interpret
+            if group.where is not None:
+                kw["where"] = group.where
             qcat = queries[0] if len(queries) == 1 else np.concatenate(queries)
-            scores, ids = index.search(qcat, k=group.k, **kw)
+            if texts is not None:
+                tcat = [t for ts in texts for t in ts]
+                scores, ids = index.search(qcat, tcat, k=group.k, **kw)
+            else:
+                scores, ids = index.search(qcat, k=group.k, **kw)
         except Exception as e:  # noqa: BLE001 — re-raised at ticket.result()
             for t in tickets:
                 t._error = e
@@ -182,17 +214,23 @@ class MicroBatcher:
         for group in groups.values():
             chunk_q: List[np.ndarray] = []
             chunk_t: List[Ticket] = []
+            chunk_x: Optional[List[List[str]]] = \
+                [] if group.texts is not None else None
             rows = 0
-            for q, t in zip(group.queries, group.tickets):
+            texts = group.texts or [None] * len(group.queries)
+            for q, x, t in zip(group.queries, texts, group.tickets):
                 if chunk_q and rows + q.shape[0] > self.max_batch:
-                    self._execute(group, chunk_q, chunk_t)
+                    self._execute(group, chunk_q, chunk_t, chunk_x)
                     executions += 1
                     chunk_q, chunk_t, rows = [], [], 0
+                    chunk_x = [] if group.texts is not None else None
                 chunk_q.append(q)
                 chunk_t.append(t)
+                if chunk_x is not None:
+                    chunk_x.append(x)
                 rows += int(q.shape[0])
             if chunk_q:
-                self._execute(group, chunk_q, chunk_t)
+                self._execute(group, chunk_q, chunk_t, chunk_x)
                 executions += 1
         if executions:
             self.stats.flushes += 1

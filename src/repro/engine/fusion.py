@@ -1,0 +1,117 @@
+"""Hybrid dense+sparse retrieval as an engine path (DESIGN.md §8, paper §3.6).
+
+The pre-engine ``HybridIndex.search`` was a side-door: single-query only
+(it silently dropped every query row past the first), brute-force only, and
+it bypassed ``repro.engine`` entirely — no plan cache, no bucketing, no
+micro-batch coalescing.  This module routes the dense channel through the
+same compiled ``SearchPlan`` as every other search (predicate mask stage
+included), keeps BM25 as the host-side stage it semantically is, and fuses
+with the deterministic host RRF merge:
+
+  1. dense channel — one bucketed ``search_backend`` call over the WHOLE
+     query batch, with ``allow`` and ``where`` compiled into the plan's
+     live-mask stage;
+  2. sparse channel — per-row BM25 top-k with the SAME combined
+     allowlist ∧ predicate row mask applied BEFORE the top-k (§3.5: both
+     channels pre-filter, so selective filters still surface ``fetch_k``
+     candidates per channel instead of a post-filtered remnant);
+  3. RRF merge — ``rrf_fuse`` per row, ties by smaller id.
+
+Contract: a single query (1-D ``query_vec``, ``str`` text) returns exactly
+the pre-refactor 1-D ``(scores, ids)`` — possibly shorter than ``k`` when
+the candidate pool is small (pinned bit-for-bit by the golden fixture).  A
+batch returns ``[b, k]`` arrays, rows independently identical to their
+single-query results, padded with id -1 / score 0.0.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import predicate as pred
+from repro.core.allowlist import Allowlist
+from repro.core.rrf import rrf_fuse
+from repro.core.segments import SENTINEL_ID
+
+from .plan import search_backend
+
+
+def _sparse_mask(index, allow: Optional[Allowlist],
+                 where: Optional[pred.Predicate]) -> Optional[np.ndarray]:
+    """The combined allowlist ∧ predicate row mask for the BM25 channel.
+
+    Evaluated host-side against the exact original column values — the same
+    oracle the dense channel's compiled mask stage is pinned to, so both
+    channels filter identically.
+    """
+    mask = None if allow is None else np.asarray(allow.mask, dtype=bool)
+    if where is not None:
+        if index.meta is None or not index.meta:
+            raise ValueError(
+                "where= requires a hybrid index built with metadata columns")
+        pred.validate(where, index.meta)
+        pm = pred.evaluate(where, index.meta)
+        mask = pm if mask is None else mask & pm
+    return mask
+
+
+def search_hybrid(
+    index,                                   # HybridIndex
+    query_vec,
+    query_text: Union[str, Sequence[str]],
+    k: int = 10,
+    *,
+    fetch_k: Optional[int] = None,
+    rrf_k: int = 60,
+    allow: Optional[Allowlist] = None,
+    where: Optional[pred.Predicate] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Filtered hybrid search through the compiled engine (module docstring).
+
+    ``query_vec`` is [d] (with a ``str`` text) or [b, d] (with ``b`` texts);
+    rows past the first are first-class — each gets its own BM25 channel and
+    RRF merge against its slice of the one batched dense scan.
+    """
+    fetch_k = fetch_k or max(2 * k, 20)
+    qv = np.asarray(query_vec)
+    single = qv.ndim == 1
+    texts = [query_text] if isinstance(query_text, str) else list(query_text)
+    b = 1 if single else int(qv.shape[0])
+    if len(texts) != b:
+        raise ValueError(
+            f"hybrid search: {b} query rows but {len(texts)} query texts")
+    for t in texts:
+        if not isinstance(t, str):
+            raise TypeError(f"query text must be a string, got {t!r}")
+
+    # Dense channel: ONE bucketed plan execution for the whole batch, the
+    # predicate compiled into the plan's mask stage (plan.py).
+    _, dense_ids = search_backend(
+        index.dense, None, qv, fetch_k, allow=allow, where=where,
+        meta=index.meta, use_kernel=use_kernel, interpret=interpret,
+    )
+
+    mask = _sparse_mask(index, allow, where)
+    corpus_ids = np.asarray(index.dense.ids)
+
+    out_vals = np.zeros((b, k), dtype=np.float32)
+    out_ids = np.full((b, k), -1, dtype=np.int64)
+    for i in range(b):
+        # A selective filter can return fewer than fetch_k real rows;
+        # SENTINEL_ID slots must not enter the fusion as if they were docs.
+        drow = dense_ids[i]
+        drow = drow[drow != SENTINEL_ID]
+        _, sparse_rows = index.sparse.search(texts[i], fetch_k,
+                                             allow_mask=mask)
+        sparse_ids = corpus_ids[sparse_rows]
+        vals, ids = rrf_fuse([drow, sparse_ids], k=rrf_k, top_k=k)
+        if single:
+            return vals, ids
+        m = ids.shape[0]
+        out_vals[i, :m] = vals
+        out_ids[i, :m] = ids
+    return out_vals, out_ids

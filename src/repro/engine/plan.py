@@ -46,9 +46,11 @@ import numpy as np
 
 from repro.core import hnsw as hnsw_mod
 from repro.core import ivf as ivf_mod
+from repro.core import predicate as pred
 from repro.core import quantize as qz
 from repro.core import segments as seg
 from repro.core.allowlist import NEG, Allowlist
+from repro.core.metadata import MetaStore
 from repro.core.rhdh import rhdh_apply
 from repro.core.scoring import adjust_scores, topk
 from repro.core.standardize import DOT, prepare
@@ -106,7 +108,7 @@ class SearchPlan:
     """A compiled, reusable execution of one search configuration."""
 
     key: PlanKey
-    fn: Callable   # (q_pad, q_valid, live, perm, *arrays) -> (vals, pos)
+    fn: Callable   # (q_pad, q_valid, live, perm, where_args, *arrays) -> (vals, pos)
 
 
 class PlanCache:
@@ -222,7 +224,8 @@ def _rotate(q, *, metric, std, seed, perm):
 
 
 def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
-                cache: PlanCache) -> SearchPlan:
+                cache: PlanCache,
+                where: Optional[pred.Predicate] = None) -> SearchPlan:
     """Compile one plan: a pipeline of per-plan jitted STAGES driven by a
     plain-Python closure.
 
@@ -259,6 +262,16 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
         return marked(lambda q, perm: _rotate(q, metric=metric, std=std,
                                               seed=seed, perm=perm))
 
+    # Predicate mask stage (DESIGN.md §8): pure boolean algebra over the
+    # live mask and the flattened (column keys, constant keys) operands —
+    # no float arithmetic, so exact under any fusion.  The stage function
+    # depends only on the predicate STRUCTURE (which is in the plan key),
+    # never on its constants, so plans are shared across constant values.
+    where_stage = None if where is None else marked(pred.build_stage_fn(where))
+
+    def masked_live(live, where_args):
+        return live if where_stage is None else where_stage(live, *where_args)
+
     def make_scan():
         # Raw dot compiles as its own stage; the metric adjustment runs
         # EAGERLY (op-by-op), exactly like the reference scoring: under jit
@@ -289,7 +302,8 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
             return vals, jnp.where(vals > NEG, pos, -1)
         finalize = marked(fin)
 
-        def fn(q, q_valid, live, perm, *seg_arrays):
+        def fn(q, q_valid, live, perm, where_args, *seg_arrays):
+            live = masked_live(live, where_args)
             cols = [scan_stages[i](rot_stages[i](q, perm),
                                    seg_arrays[2 * i], seg_arrays[2 * i + 1])
                     for i in range(len(seeds))]
@@ -342,7 +356,8 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
         return vals, jnp.where(vals > NEG, main_pos, -1)
     finalize = marked(merge)
 
-    def fn(q, q_valid, live, perm, *arrays):
+    def fn(q, q_valid, live, perm, where_args, *arrays):
+        live = masked_live(live, where_args)
         head, seg_arrays = arrays[:n_head], arrays[n_head:]
         q_rot0 = rot_stages[0](q, perm)
         main_vals, main_pos = main(q_rot0, *head, seg_arrays[0],
@@ -382,6 +397,9 @@ def search_backend(
     k: int,
     *,
     allow: Optional[Allowlist] = None,
+    where: Optional[pred.Predicate] = None,
+    meta: Optional[MetaStore] = None,
+    where_mask=None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     **kwargs,
@@ -393,6 +411,15 @@ def search_backend(
     suites in tests/ pin this), with the whole pipeline compiled once per
     (fingerprint, bucket, k, dispatch, knobs) and reused across calls —
     and across same-shape tenants.
+
+    Filtering (DESIGN.md §8): ``where=`` is a structured predicate over
+    ``meta``'s columns, compiled as a mask stage fused with the tombstone/
+    allowlist live mask — its STRUCTURE joins the fingerprint, its
+    constants (and the column key planes) ride as dynamic arguments, so
+    repeated predicate shapes hit the cache with zero retrace.
+    ``where_mask=`` is the already-computed [n_total] boolean row mask for
+    callers that evaluated a predicate themselves; it is ANDed host-side
+    (the live mask is a dynamic argument, so no new plan is minted).
     """
     _validate_knobs(backend, kwargs)
     knobs = _normalize_knobs(backend, kwargs, k)
@@ -404,6 +431,7 @@ def search_backend(
     bucket = shape_bucket(b)
 
     base_n = backend.enc.n
+    n_total = int(base_n + sum(s.enc.n for s in extras))
     if state is not None:
         live = seg.live_mask(state, allow, base_n)
     elif allow is not None:
@@ -416,20 +444,45 @@ def search_backend(
     else:
         live = np.ones(base_n, dtype=bool)
 
+    if where_mask is not None:
+        wm = np.asarray(where_mask, dtype=bool)
+        if wm.shape != (n_total,):
+            raise ValueError(
+                f"where_mask covers {wm.shape} rows but the index has "
+                f"{n_total}")
+        live = np.asarray(live, dtype=bool) & wm
+
+    where_sig = None
+    where_args: tuple = ()
+    if where is not None:
+        if meta is None or not meta:
+            raise ValueError(
+                "where= requires an index built with metadata columns")
+        if meta.n_rows != n_total:
+            raise ValueError(
+                f"metadata has {meta.n_rows} rows but the index has {n_total}")
+        pred.validate(where, meta)
+        where_sig = pred.structure(where, meta)
+        where_args = tuple(
+            jnp.asarray(a) for a in pred.flatten_args(where, meta))
+
+    fingerprint = _fingerprint(backend, extras, knobs)
+    if where_sig is not None:
+        fingerprint = fingerprint + (("where", where_sig),)
     key = PlanKey(
-        fingerprint=_fingerprint(backend, extras, knobs),
+        fingerprint=fingerprint,
         bucket=bucket, k=k, dispatch=(use_kernel, interpret),
         knobs=tuple(sorted(knobs.items())),
     )
     plan = _CACHE.get_or_build(
         key, lambda: _build_plan(backend, extras, key=key, knobs=knobs,
-                                 cache=_CACHE))
+                                 cache=_CACHE, where=where))
 
     if bucket != b:
         q = jnp.pad(q, ((0, bucket - b), (0, 0)))
     q_valid = jnp.asarray(np.arange(bucket) < b)
     perm = None if backend.enc.perm is None else jnp.asarray(backend.enc.perm)
-    vals, pos = plan.fn(q, q_valid, jnp.asarray(live), perm,
+    vals, pos = plan.fn(q, q_valid, jnp.asarray(live), perm, where_args,
                         *_bind_arrays(backend, extras))
     vals = np.asarray(vals)[:b]
     pos = np.asarray(pos)[:b]
@@ -438,20 +491,34 @@ def search_backend(
     return vals, seg.rows_to_ids(pos, ids)
 
 
-def search_sharded(index, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+def search_sharded(index, queries, k: int, *, where_mask=None,
+                   ) -> Tuple[np.ndarray, np.ndarray]:
     """The shard_map scan as a cached plan: same bucketing, same counters,
-    same [b, k] sentinel-padded contract as the single-device engines."""
+    same [b, k] sentinel-padded contract as the single-device engines.
+
+    ``where_mask`` is an [n] boolean row-admissibility mask (a compiled
+    predicate's output, or any caller-built filter), sharded alongside the
+    corpus and applied BEFORE the local top-k — slots with no admissible
+    row come back as SENTINEL_ID / NEG exactly like the single-device
+    filtered path."""
     q = jnp.atleast_2d(jnp.asarray(queries))
     b = int(q.shape[0])
     bucket = shape_bucket(b)
     enc = index.enc
     k_eff = min(k, index.n)
+    masked = where_mask is not None
+    if masked:
+        where_mask = np.asarray(where_mask, dtype=bool)
+        if where_mask.shape != (index.n,):
+            raise ValueError(
+                f"where_mask covers {where_mask.shape} rows but the index "
+                f"has {index.n}")
     # Content-keyed like search_backend — the plan must not retain the index:
     # the closure holds only scalars + the (small, long-lived) mesh, arrays
     # ride in as arguments, and same-config corpora on one mesh share plans.
     key = PlanKey(
         fingerprint=("ShardedMonaVec", id(index.mesh), index.n,
-                     _enc_sig(enc), enc.metric),
+                     _enc_sig(enc), enc.metric, masked),
         bucket=bucket, k=k_eff, dispatch=(None, None), knobs=(),
     )
 
@@ -466,14 +533,17 @@ def search_sharded(index, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
         metric, std, seed = enc.metric, enc.std, enc.seed
         scan = make_scan_topk_shardmap(
             mesh, metric=metric, k=k_eff, bits=enc.bits,
-            n4_dims=enc.n4_dims, n_valid=index.n, on_trace=on_trace)
+            n4_dims=enc.n4_dims, n_valid=index.n, on_trace=on_trace,
+            with_mask=masked)
 
-        def raw(q_pad, packed, qnorms, perm):
+        def raw(q_pad, packed, qnorms, perm, mask):
             # Eager rotation: the exact op sequence of qz.encode_query.
             q_rot = _rotate(q_pad, metric=metric, std=std, seed=seed,
                             perm=perm)
             with mesh:
-                return scan(q_rot, packed, qnorms)
+                if mask is None:
+                    return scan(q_rot, packed, qnorms)
+                return scan(q_rot, packed, qnorms, mask)
 
         return SearchPlan(key=key, fn=raw)
 
@@ -481,9 +551,16 @@ def search_sharded(index, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
     if bucket != b:
         q = jnp.pad(q, ((0, bucket - b), (0, 0)))
     perm = None if enc.perm is None else jnp.asarray(enc.perm)
-    vals, gidx = plan.fn(q, enc.packed, enc.qnorms, perm)
+    vals, gidx = plan.fn(q, enc.packed, enc.qnorms, perm,
+                         jnp.asarray(where_mask) if masked else None)
     vals = np.asarray(vals)[:b]
     ids = index.ids[np.asarray(gidx)[:b]]
+    if masked:
+        # Filtered shards surface inadmissible slots as -inf; convert to the
+        # engine-wide sentinel contract (NEG score, SENTINEL_ID id).
+        bad = ~np.isfinite(vals)
+        vals = np.where(bad, NEG, vals).astype(vals.dtype)
+        ids = np.where(bad, seg.SENTINEL_ID, ids)
     if k_eff < k:   # k > n: sentinel-pad to the full [b, k] contract
         vals = np.pad(vals, ((0, 0), (0, k - k_eff)), constant_values=NEG)
         ids = np.pad(ids, ((0, 0), (0, k - k_eff)),
@@ -512,6 +589,7 @@ class Searcher:
     use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None
     knobs: dict = dataclasses.field(default_factory=dict)
+    where: Optional[pred.Predicate] = None
 
     def __call__(self, queries, *, allow: Optional[Allowlist] = None):
         kw = dict(self.knobs)
@@ -521,6 +599,8 @@ class Searcher:
             kw["interpret"] = self.interpret
         if allow is not None:
             kw["allow"] = allow
+        if self.where is not None:
+            kw["where"] = self.where
         return self.index.search(queries, self.k, **kw)
 
     def warmup(self, batch_size: int = 1) -> "Searcher":

@@ -34,8 +34,15 @@ rewrites the live rows into one segment and serves a final phase.
 
 --micro-batch R splits every batch into R separate requests and serves them
 through the engine's MicroBatcher: requests are coalesced per (namespace,
-collection, k) group and executed as ONE bucketed plan call — the
-multi-tenant serving shape, with bit-identical per-request results.
+collection, k, where, hybrid?) group and executed as ONE bucketed plan call
+— the multi-tenant serving shape, with bit-identical per-request results.
+
+--filter-every N attaches a ``bucket = row % N`` metadata column at build
+time and serves an extra phase with ``where=Eq("bucket", 0)`` (selectivity
+1/N) through the compiled predicate stage (DESIGN.md §8): the report shows
+the filtered phase hitting the SAME plan cache — the predicate mask is a
+fused stage, not a separate pass, so repeat filtered batches are zero-
+retrace just like unfiltered ones.
 """
 
 from __future__ import annotations
@@ -46,7 +53,7 @@ import time
 import numpy as np
 
 from repro import engine
-from repro.core import MonaVec, TenantRegistry
+from repro.core import Eq, MonaVec, TenantRegistry
 from repro.data.synthetic import embedding_corpus, queries_from_corpus
 
 
@@ -74,6 +81,11 @@ def main() -> None:
                     help="compact() after the mutation phase and re-serve")
     ap.add_argument("--shard", action="store_true",
                     help="shard the corpus over all local devices (bruteforce)")
+    ap.add_argument("--filter-every", type=int, default=0, metavar="N",
+                    help="attach a bucket=row%%N metadata column and serve a "
+                         "filtered phase with where=Eq('bucket', 0) — "
+                         "selectivity 1/N through the compiled predicate "
+                         "stage (DESIGN.md §8)")
     ap.add_argument("--micro-batch", type=int, default=0, metavar="R",
                     help="serve each batch as R coalesced requests through "
                          "the engine MicroBatcher (0 = direct searcher)")
@@ -117,14 +129,25 @@ def main() -> None:
         corpus = None
         print(f"[serve] loaded {args.load}: n={index.backend.enc.n} "
               f"metric={index.backend.enc.metric}")
+        if args.filter_every and (index.meta is None or "bucket" not in
+                                  getattr(index.meta, "columns", {})):
+            raise SystemExit("--filter-every needs a 'bucket' metadata "
+                             "column; the loaded .mvec has none (build one "
+                             "with --filter-every --save)")
     else:
         corpus = embedding_corpus(0, args.n, args.dim)
         kw = {"nlist": 128} if args.index == "ivf" else (
             {"m": 16, "ef_construction": 64} if args.index == "hnsw" else {})
+        meta = ({"bucket": np.arange(args.n, dtype=np.int64)
+                 % args.filter_every}
+                if args.filter_every else None)
         t0 = time.time()
-        index = MonaVec.build(corpus, metric="cosine", index=args.index, **kw)
+        index = MonaVec.build(corpus, metric="cosine", index=args.index,
+                              meta=meta, **kw)
         print(f"[serve] built {args.index} over {args.n}x{args.dim} "
-              f"in {time.time() - t0:.1f}s")
+              f"in {time.time() - t0:.1f}s"
+              + (f" (+ bucket metadata column, {args.filter_every} values)"
+                 if meta else ""))
         if args.save:
             index.save(args.save)
             print(f"[serve] saved {args.save}")
@@ -155,12 +178,13 @@ def main() -> None:
         rng = np.random.RandomState(100 + b)
         return rng.randn(args.batch_size, dim).astype(np.float32)
 
-    def serve_batch(search, q: np.ndarray) -> None:
+    def serve_batch(search, q: np.ndarray, where=None) -> None:
         if batcher is not None:
             # Split the batch into R requests and let the engine coalesce
             # them back into one bucketed plan execution per group.
             parts = np.array_split(q, min(args.micro_batch, len(q)))
-            tickets = [batcher.submit(args.token, "default", p, k=args.k)
+            tickets = [batcher.submit(args.token, "default", p, k=args.k,
+                                      where=where)
                        for p in parts]
             batcher.flush()
             for t in tickets:
@@ -168,24 +192,26 @@ def main() -> None:
         else:
             search(q)
 
-    def run_phase(label: str) -> None:
+    def run_phase(label: str, where=None) -> None:
         # The serving loop holds ONE bound searcher per phase; mutation
         # phases pick up the index's new segment signature automatically.
         if args.shard:   # sharded scan has its own shard_map dispatch
-            search = reg.get(args.token, "default").searcher(k=args.k)
+            search = reg.get(args.token, "default").searcher(k=args.k,
+                                                             where=where)
         else:
             search = reg.searcher(args.token, "default", k=args.k,
+                                  where=where,
                                   use_kernel=use_kernel, interpret=interpret)
         # Untimed warm-up: the first batch of a phase pays jit trace +
         # compile; measured QPS must not include it (at small --batches the
         # old numbers were dominated by compile time).
-        serve_batch(search, phase_queries(0))
+        serve_batch(search, phase_queries(0), where)
         before = engine.plan_cache().stats.snapshot()
         mb_before = batcher.stats.snapshot() if batcher is not None else None
         total, t0 = 0, time.time()
         for b in range(args.batches):
             q = phase_queries(b)
-            serve_batch(search, q)
+            serve_batch(search, q, where)
             total += len(q)
         dt = time.time() - t0
         d = engine.plan_cache().stats.since(before)
@@ -201,14 +227,28 @@ def main() -> None:
 
     run_phase("static")
 
+    if args.filter_every:
+        # Filtered serving phase (DESIGN.md §8): same plan cache, the
+        # predicate compiles in as a fused mask stage — the report's
+        # retrace count shows the filter costs ONE extra trace total,
+        # not one per batch.
+        live = reg.get(args.token, "default")
+        frac = float(np.mean(live.meta["bucket"].values == 0))
+        print(f"[serve] filter: where=Eq('bucket', 0) selects "
+              f"~{100.0 * frac:.1f}% of rows")
+        run_phase("filtered", where=Eq("bucket", 0))
+
     if args.mutate:
         # The paper's service-layer mutation routes, as registry calls.
         live = reg.get(args.token, "default")
         add_n = args.add_n if args.add_n is not None else max(1, live.n_total // 10)
         rng = np.random.RandomState(7)
         delta = rng.randn(add_n, dim).astype(np.float32)
+        delta_meta = ({"bucket": np.arange(add_n, dtype=np.int64)
+                       % args.filter_every}
+                      if args.filter_every else None)
         t0 = time.time()
-        new_ids = reg.add(args.token, "default", delta)
+        new_ids = reg.add(args.token, "default", delta, meta=delta_meta)
         print(f"[serve] add: {len(new_ids)} rows quantized into segment "
               f"ordinal {live.mut.next_ordinal - 1} in {time.time() - t0:.2f}s")
         victims = live.ids[::args.delete_every]
@@ -225,7 +265,7 @@ def main() -> None:
         if args.save:
             live.save(args.save)
             print(f"[serve] saved mutated index to {args.save} "
-                  f"(v8 multi-segment layout)" if not live.mut.is_static
+                  f"(multi-segment layout)" if not live.mut.is_static
                   else f"[serve] saved {args.save}")
 
 

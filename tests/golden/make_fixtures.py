@@ -59,10 +59,28 @@ def build_v8_segmented_ivf():
     return idx
 
 
+def build_v9_meta_bruteforce():
+    """v9: metadata columns (i64 / f64 / interned str) over a mutated index —
+    per-segment value blocks, vocab grown by add(), tombstones present."""
+    from repro.core import MonaVec
+    idx = MonaVec.build(
+        _data(20, 16, 105), metric="cosine", seed=7,
+        meta={"price": np.arange(20, dtype=np.int64) * 3 - 10,
+              "score": np.arange(20, dtype=np.float64) / 4 - 2.0,
+              "cat": np.array(["red", "green", "blue", "red"] * 5)})
+    idx.add(_data(6, 16, 106),
+            meta={"price": np.arange(6, dtype=np.int64) + 100,
+                  "score": np.linspace(-1.0, 1.0, 6).astype(np.float64),
+                  "cat": np.array(["green", "violet"] * 3)})
+    idx.delete([3, 8, 22])
+    return idx
+
+
 FIXTURES = {
     "v6_bruteforce.mvec": build_v6_bruteforce,
     "v7_perm_bruteforce.mvec": build_v7_perm_bruteforce,
     "v8_segmented_ivf.mvec": build_v8_segmented_ivf,
+    "v9_meta_bruteforce.mvec": build_v9_meta_bruteforce,
 }
 
 

@@ -16,7 +16,9 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import Allowlist, MonaVec, SENTINEL_ID, TenantRegistry
+from repro.core import (Allowlist, And, Eq, HybridIndex, Lt, MonaVec,
+                        SENTINEL_ID, TenantRegistry)
+from repro.core import predicate as pred
 from tests.lifecycle_harness import assert_matches_oracle, build_index
 
 BUCKET = 8          # queries per full bucket in these tests
@@ -223,6 +225,96 @@ class TestPlanCache:
         assert int(i1[0, 0]) not in i2[0].tolist()
 
 
+def _meta_index(rng, n=60, mutated=False):
+    meta = {"cat": np.array(["a", "b", "c"])[np.arange(n) % 3],
+            "price": (rng.rand(n) * 100).astype(np.float64)}
+    idx = MonaVec.build(_vecs(rng, n), metric="cosine", meta=meta)
+    if mutated:
+        m = 9
+        idx.add(_vecs(rng, m),
+                meta={"cat": np.array(["a", "c", "b"] * 3),
+                      "price": (rng.rand(m) * 100).astype(np.float64)})
+        idx.delete(idx.ids[::7])
+    return idx
+
+
+class TestFilteredPlans:
+    """The predicate compiles into the plan as STRUCTURE: constants are
+    dynamic arguments, so repeated same-shape filtered queries are cache
+    hits with zero retraces (the ISSUE's acceptance criterion), and the
+    compiled mask stage is bit-identical to the host-evaluated mask."""
+
+    def test_same_structure_different_constants_zero_retrace(self):
+        rng = np.random.RandomState(51)
+        idx = _meta_index(rng)
+        q = _vecs(rng, 4)
+        cache = engine.plan_cache()
+        cache.clear()
+        idx.search(q, 5, use_kernel=False,
+                   where=And(Eq("cat", "a"), Lt("price", 10.0)))
+        warm = cache.stats.snapshot()
+        assert warm.misses == 1 and warm.traces > 0
+        constants = [("b", 25.0), ("c", 99.0), ("a", 42.5)]
+        for cat, cutoff in constants:
+            idx.search(q, 5, use_kernel=False,
+                       where=And(Eq("cat", cat), Lt("price", cutoff)))
+        d = cache.stats.since(warm)
+        assert d.misses == 0 and d.traces == 0 and d.hits == len(constants)
+
+    def test_different_structure_distinct_plans(self):
+        rng = np.random.RandomState(52)
+        idx = _meta_index(rng)
+        q = _vecs(rng, 4)
+        cache = engine.plan_cache()
+        cache.clear()
+        idx.search(q, 5, use_kernel=False, where=Eq("cat", "a"))
+        idx.search(q, 5, use_kernel=False, where=Lt("price", 10.0))
+        idx.search(q, 5, use_kernel=False)            # unfiltered: third plan
+        assert cache.stats.misses == 3 and cache.stats.hits == 0
+
+    @pytest.mark.parametrize("mutated", [False, True])
+    def test_compiled_mask_equals_host_mask(self, mutated):
+        """where= (compiled stage) vs where_mask= (host mask ANDed into
+        live): same rows, same scores, to the bit."""
+        rng = np.random.RandomState(53)
+        idx = _meta_index(rng, mutated=mutated)
+        q = _vecs(rng, 5)
+        p = And(Eq("cat", "a"), Lt("price", 60.0))
+        s1, i1 = idx.search(q, 6, use_kernel=False, where=p)
+        mask = pred.evaluate(p, idx.meta)
+        s2, i2 = engine.search_backend(idx.backend, idx.mut, q, 6,
+                                       use_kernel=False, where_mask=mask)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(s1, s2)
+
+    def test_filtered_prefix_identity(self):
+        """Bucketing bit-identity holds under a predicate: smaller batches
+        equal the full-bucket run's row prefix."""
+        rng = np.random.RandomState(54)
+        idx = _meta_index(rng)
+        q = _vecs(rng, BUCKET)
+        p = Eq("cat", "b")
+        s_full, i_full = idx.search(q, 5, use_kernel=False, where=p)
+        for b in (2, 5):
+            s, i = idx.search(q[:b], 5, use_kernel=False, where=p)
+            np.testing.assert_array_equal(i, i_full[:b])
+            np.testing.assert_array_equal(s, s_full[:b])
+
+    def test_filtered_searcher_zero_retrace_loop(self):
+        """The serving shape: a bound filtered searcher across a measured
+        loop reports zero retraces after warm-up."""
+        rng = np.random.RandomState(55)
+        idx = _meta_index(rng)
+        search = idx.searcher(k=4, where=Lt("price", 50.0), use_kernel=False)
+        search.warmup(4)
+        cache = engine.plan_cache()
+        before = cache.stats.snapshot()
+        for _ in range(5):
+            search(_vecs(rng, 4))
+        d = cache.stats.since(before)
+        assert d.traces == 0 and d.misses == 0 and d.hits == 5
+
+
 class TestMicroBatcher:
     def _registry(self, rng, corpora):
         reg = TenantRegistry()
@@ -306,6 +398,57 @@ class TestMicroBatcher:
         assert good.result()[1].shape == (2, 3)
         with pytest.raises(TypeError):
             bad.result()
+
+    def test_filtered_requests_coalesce_per_predicate(self):
+        """Identical predicates share one group/execution; same-structure
+        different-constant predicates form separate groups — and every
+        request still equals its direct filtered search bit for bit."""
+        rng = np.random.RandomState(47)
+        idx = _meta_index(rng)
+        reg = TenantRegistry()
+        reg.put("a", "docs", idx)
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        p1 = And(Eq("cat", "a"), Lt("price", 50.0))
+        p2 = And(Eq("cat", "b"), Lt("price", 80.0))
+        q = _vecs(rng, 6)
+        t1 = mb.submit("a", "docs", q[:2], k=4, where=p1)
+        t2 = mb.submit("a", "docs", q[2:4], k=4, where=p1)   # same group
+        t3 = mb.submit("a", "docs", q[4:6], k=4, where=p2)   # separate group
+        assert mb.flush() == 2
+        s_d, i_d = idx.search(q[:4], 4, use_kernel=False, where=p1)
+        np.testing.assert_array_equal(t1.result()[1], i_d[:2])
+        np.testing.assert_array_equal(t2.result()[1], i_d[2:])
+        np.testing.assert_array_equal(t1.result()[0], s_d[:2])
+        s3, i3 = idx.search(q[4:6], 4, use_kernel=False, where=p2)
+        np.testing.assert_array_equal(t3.result()[1], i3)
+        np.testing.assert_array_equal(t3.result()[0], s3)
+
+    def test_hybrid_text_requests_coalesce(self):
+        """text= routes the group through the hybrid path: coalesced
+        execution, per-request rows identical to the direct batched call."""
+        rng = np.random.RandomState(48)
+        x = _vecs(rng, 50)
+        docs = [f"doc {i} " + ("alpha" if i % 2 else "beta")
+                for i in range(50)]
+        hy = HybridIndex.build(x, docs, metric="cosine")
+        reg = TenantRegistry()
+        reg.put("a", "docs", hy)
+        mb = engine.MicroBatcher(reg, use_kernel=False)
+        q = _vecs(rng, 3)
+        t1 = mb.submit("a", "docs", q[:2], k=4, text=["alpha", "beta"])
+        t2 = mb.submit("a", "docs", q[2:3], k=4, text="alpha doc")
+        assert mb.flush() == 1                       # one hybrid execution
+        s_d, i_d = hy.search(q, ["alpha", "beta", "alpha doc"], 4)
+        np.testing.assert_array_equal(t1.result()[1], i_d[:2])
+        np.testing.assert_array_equal(t2.result()[1], i_d[2:])
+        np.testing.assert_array_equal(t2.result()[0], s_d[2:])
+        # hybrid and dense-only requests never share a group
+        ta = mb.submit("a", "docs", q[:1], k=4, text="alpha")
+        tb = mb.submit("a", "docs", q[:1], k=4)
+        assert mb.flush() == 2
+        ta.result()
+        with pytest.raises(TypeError):
+            tb.result()       # HybridIndex.search requires query_text
 
     def test_max_batch_splits_whole_requests(self):
         rng = np.random.RandomState(44)

@@ -186,8 +186,9 @@ class TestHybridAndBm25:
         docs = [f"doc {i} " + ("special keyword" if i == 42 else "ordinary text")
                 for i in range(len(corpus))]
         hy = HybridIndex.build(jnp.asarray(corpus), docs, metric="cosine")
-        _, ids = hy.search(jnp.asarray(corpus[7:8]), "special keyword", 10)
-        assert 42 in ids.tolist()
+        # [1, d] input follows the batched contract: [1, k] output rows.
+        _, ids = hy.search(jnp.asarray(corpus[7:8]), ["special keyword"], 10)
+        assert 42 in ids[0].tolist()
 
     def test_bm25_allowlist_prefilters_before_topk(self):
         """§3.5 on the sparse channel: a selective allowlist yields exactly
@@ -211,10 +212,103 @@ class TestHybridAndBm25:
         docs = [f"doc number {i} common text" for i in range(len(corpus))]
         hy = HybridIndex.build(jnp.asarray(corpus), docs, metric="cosine")
         allow = Allowlist.from_ids(range(0, 3000, 7), hy.dense.ids)
-        _, ids = hy.search(jnp.asarray(corpus[5:6]), "common text", 10,
+        _, ids = hy.search(jnp.asarray(corpus[5]), "common text", 10,
                            allow=allow)
         assert len(ids) == 10
         assert (ids.astype(np.int64) % 7 == 0).all()
+
+    def test_tokenize_unicode(self):
+        """Regression: the old `[a-z0-9]+` pattern silently dropped every
+        non-ASCII term; the Unicode word pattern keeps them and still
+        tokenizes lowered ASCII identically (splitting at `_`)."""
+        assert tokenize("Café au lait") == ["café", "au", "lait"]
+        assert tokenize("北京 naïve test_case Hello123") == \
+            ["北京", "naïve", "test", "case", "hello123"]
+        # ASCII behaviour unchanged vs the old pattern
+        assert tokenize("Alpha-Beta_gamma 42") == ["alpha", "beta", "gamma", "42"]
+
+    def test_bm25_non_ascii_docs_retrievable(self):
+        """Accented and CJK docs must score > 0 for their own terms — under
+        the old tokenizer their postings were empty and every query missed."""
+        docs = ["der schnelle braune Fuchs", "café und naïveté",
+                "北京 大学 图书馆", "plain ascii filler text"] * 3
+        idx = Bm25Index.build(docs)
+        for query, row in [("café", 1), ("北京 图书馆", 2), ("Fuchs", 0)]:
+            scores, rows = idx.search(query, 3)
+            assert scores[0] > 0.0, query
+            assert rows[0] % 4 == row, (query, rows)
+
+    def test_hybrid_batched_rows_independent(self, corpus):
+        """Regression: the old bypass fused `dense_ids[0]` for EVERY query
+        row, so any row past the first got row 0's dense channel.  Each
+        batched row must now equal its own solo search exactly."""
+        docs = [f"doc {i} " + ("needle term" if i % 11 == 0 else "hay stack")
+                for i in range(600)]
+        hy = HybridIndex.build(jnp.asarray(corpus[:600]), docs, metric="cosine")
+        q = np.asarray(corpus[40:44]) + 0.01
+        texts = ["needle term", "hay stack", "needle", "doc stack"]
+        vals, ids = hy.search(jnp.asarray(q), texts, 8)
+        assert ids.shape == (4, 8) and vals.shape == (4, 8)
+        rows = []
+        for i in range(4):
+            v1, i1 = hy.search(jnp.asarray(q[i]), texts[i], 8)
+            rows.append((v1, i1))
+            np.testing.assert_array_equal(ids[i, :len(i1)], i1)
+            np.testing.assert_array_equal(vals[i, :len(v1)], v1)
+            assert (ids[i, len(i1):].astype(np.int64) == -1).all()
+        # the rows genuinely differ (the old bug made them share a channel)
+        assert not np.array_equal(rows[0][1], rows[1][1])
+
+    def test_hybrid_single_query_contract(self, corpus):
+        """A 1-D query returns 1-D results (possibly < k when the fused pool
+        is small) — the pre-refactor calling convention, preserved."""
+        docs = [f"word{i} text" for i in range(100)]
+        hy = HybridIndex.build(jnp.asarray(corpus[:100]), docs, metric="cosine")
+        vals, ids = hy.search(jnp.asarray(corpus[3]), "word7 text", 5)
+        assert vals.ndim == 1 and ids.ndim == 1
+        assert len(vals) == len(ids) == 5
+        assert len(set(ids.tolist())) == 5
+
+    def test_hybrid_prerefactor_fixture(self):
+        """The engine-routed hybrid path reproduces the PRE-refactor
+        `HybridIndex.search` outputs exactly (scores and ids, bit for bit)
+        on the pinned fixture — the refactor's bit-identity contract."""
+        gold = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "golden")
+        data = np.load(os.path.join(gold, "hybrid_prerefactor.npz"))
+        docs = open(os.path.join(gold, "hybrid_prerefactor_docs.txt"),
+                    encoding="utf-8").read().splitlines()
+        texts = open(os.path.join(gold, "hybrid_prerefactor_texts.txt"),
+                     encoding="utf-8").read().splitlines()
+        hy = HybridIndex.build(jnp.asarray(data["vectors"]), docs,
+                               metric="cosine", seed=77)
+        allow = Allowlist.from_ids(np.asarray(hy.dense.ids)[::2],
+                                   hy.dense.ids)
+        for ci, (k, fk, rrf_k, use_allow) in enumerate(data["cases"]):
+            kw = dict(k=int(k), rrf_k=int(rrf_k),
+                      fetch_k=None if fk < 0 else int(fk),
+                      allow=allow if use_allow else None)
+            for qi in range(data["queries"].shape[0]):
+                vals, ids = hy.search(jnp.asarray(data["queries"][qi]),
+                                      texts[qi], **kw)
+                np.testing.assert_array_equal(
+                    ids, data[f"ids_{ci}_{qi}"], err_msg=f"case {ci} q {qi}")
+                np.testing.assert_array_equal(
+                    vals, data[f"vals_{ci}_{qi}"], err_msg=f"case {ci} q {qi}")
+
+    def test_hybrid_where_filters_both_channels(self, corpus):
+        """A metadata predicate pre-filters the dense AND sparse channels:
+        every fused result satisfies it."""
+        from repro.core import Eq
+        docs = [f"doc {i} shared term" for i in range(300)]
+        cat = np.array(["a", "b", "c"])[np.arange(300) % 3]
+        hy = HybridIndex.build(jnp.asarray(corpus[:300]), docs,
+                               metric="cosine", meta={"cat": cat})
+        vals, ids = hy.search(jnp.asarray(corpus[2:5]), ["shared term"] * 3,
+                              6, where=Eq("cat", "a"))
+        real = ids[ids.astype(np.int64) >= 0]
+        assert real.size > 0
+        assert (real.astype(np.int64) % 3 == 0).all()
 
 
 class TestMvecFormat:
@@ -254,12 +348,13 @@ class TestMvecFormat:
         with pytest.raises(ValueError):
             fmt.load(str(p))
 
-    @pytest.mark.parametrize("version", [1, 3, 5, 9])
+    @pytest.mark.parametrize("version", [1, 3, 5, 10])
     def test_rejects_unsupported_versions(self, version, corpus, tmp_path):
         """Versions 1-5 predate the v6 header layout (parsing them against it
         would misread every field) and future versions are unknown: all must
         be rejected with an error naming the version found.  (8 is the
-        segmented layout since DESIGN.md §6 — no longer rejected.)"""
+        segmented layout since DESIGN.md §6, 9 adds metadata columns per
+        DESIGN.md §8 — neither is rejected any more.)"""
         import struct
         from repro.core import mvec_format as fmt
         p = str(tmp_path / "v.mvec")

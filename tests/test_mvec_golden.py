@@ -63,6 +63,19 @@ class TestGoldenFixtures:
         assert open(os.path.join(GOLD, "v6_bruteforce.mvec"), "rb").read()[4] == 6
         assert open(os.path.join(GOLD, "v7_perm_bruteforce.mvec"), "rb").read()[4] == 7
         assert open(os.path.join(GOLD, "v8_segmented_ivf.mvec"), "rb").read()[4] == 8
+        assert open(os.path.join(GOLD, "v9_meta_bruteforce.mvec"), "rb").read()[4] == 9
+
+    def test_v9_meta_survives_roundtrip(self, tmp_path):
+        """The v9 fixture's columns load with exact values and survive a
+        search: the metadata block is data, not decoration."""
+        idx = MonaVec.load(os.path.join(GOLD, "v9_meta_bruteforce.mvec"))
+        assert idx.meta is not None
+        assert idx.meta.schema == (("price", "i64"), ("score", "f64"),
+                                   ("cat", "str"))
+        assert idx.meta.n_rows == idx.n_total == 26
+        np.testing.assert_array_equal(
+            idx.meta["price"].values[:3], np.array([-10, -7, -4]))
+        assert idx.meta["cat"].vocab == ["red", "green", "blue", "violet"]
 
 
 class TestSaveLoadFixedPoint:
@@ -95,7 +108,8 @@ class TestTruncationFuzz:
     short block at EVERY truncation offset, never an np.frombuffer misparse."""
 
     @pytest.mark.parametrize("name", ["v6_bruteforce.mvec",
-                                      "v8_segmented_ivf.mvec"])
+                                      "v8_segmented_ivf.mvec",
+                                      "v9_meta_bruteforce.mvec"])
     def test_every_truncation_offset_raises(self, name, tmp_path):
         raw = open(os.path.join(GOLD, name), "rb").read()
         p = str(tmp_path / "cut.mvec")

@@ -1,0 +1,370 @@
+"""Predicate compiler (DESIGN.md §8): the three views of one predicate —
+host numpy oracle, structure fingerprint, compiled u64-key stage — must
+agree exactly, and filtered search must equal the mask-to-NEG brute-force
+oracle.
+
+Layers:
+  * hand-checked semantics per operator (including the i64/f64 boundary
+    values the u64 key map exists for: int64 min/max, ±0.0, ±inf);
+  * seeded random-AST agreement between ``evaluate`` (host, exact values)
+    and ``build_stage_fn`` + ``flatten_args`` (device, key planes) — the
+    deterministic twin of tests/test_predicate_props.py;
+  * validation errors surface eagerly, named;
+  * filtered search vs ``oracle_search(allow_mask=evaluate(p))`` across
+    backend x metric x bits x {static, mutated, sharded} — exact for the
+    BruteForce scan (the search IS the oracle computation), admissible-set
+    for IVF/HNSW (gathered-scan tiling, same precedent as the lifecycle
+    suites).
+"""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import (Allowlist, And, Eq, Ge, Gt, In, Le, Lt, MonaVec, Ne,
+                        Not, Or, SENTINEL_ID)
+from repro.core import metadata as md
+from repro.core import predicate as pred
+from tests.lifecycle_harness import oracle_search
+
+DIM = 16
+
+I64_MIN, I64_MAX = np.iinfo(np.int64).min, np.iinfo(np.int64).max
+
+
+def _store(n: int, seed: int) -> md.MetaStore:
+    rng = np.random.RandomState(seed)
+    i64 = rng.randint(-1000, 1000, n).astype(np.int64)
+    i64[:4] = [I64_MIN, I64_MAX, -1, 0]
+    f64 = rng.randn(n) * 10.0
+    f64[:4] = [-0.0, 0.0, np.inf, -np.inf]
+    strs = np.array(["red", "green", "blue", "cyan"])[rng.randint(0, 4, n)]
+    return md.MetaStore.build({"i": i64, "f": f64, "s": strs}, n)
+
+
+def _device_mask(p: pred.Predicate, store: md.MetaStore) -> np.ndarray:
+    """Run the compiled stage exactly as the plan does: key-plane args."""
+    fn = pred.build_stage_fn(p)
+    args = tuple(jnp.asarray(a) for a in pred.flatten_args(p, store))
+    live = jnp.ones(store.n_rows, dtype=bool)
+    return np.asarray(fn(live, *args))
+
+
+def _assert_agree(p: pred.Predicate, store: md.MetaStore) -> None:
+    host = pred.evaluate(p, store)
+    dev = _device_mask(p, store)
+    np.testing.assert_array_equal(dev, host, err_msg=str(p))
+
+
+class TestHostSemantics:
+    """evaluate() against hand-computed numpy masks."""
+
+    def test_comparisons_i64(self):
+        store = md.MetaStore.build(
+            {"x": np.array([-3, 0, 5, 5, 9], dtype=np.int64)}, 5)
+        x = store["x"].values
+        for P, op in [(Eq, np.equal), (Ne, np.not_equal), (Lt, np.less),
+                      (Le, np.less_equal), (Gt, np.greater),
+                      (Ge, np.greater_equal)]:
+            np.testing.assert_array_equal(
+                pred.evaluate(P("x", 5), store), op(x, 5))
+
+    def test_in_and_boolean_algebra(self):
+        store = _store(32, 3)
+        i = store["i"].values
+        np.testing.assert_array_equal(
+            pred.evaluate(In("i", (0, -1)), store), np.isin(i, [0, -1]))
+        p = And(Ge("i", 0), Not(Eq("s", "red")))
+        want = (i >= 0) & ~(store["s"].decoded() == "red")
+        np.testing.assert_array_equal(pred.evaluate(p, store),
+                                      want.astype(bool))
+        # operator sugar builds the same AST
+        assert (Ge("i", 0) & ~Eq("s", "red")) == p
+        assert (Lt("i", 2) | Eq("s", "blue")) == Or(Lt("i", 2),
+                                                    Eq("s", "blue"))
+
+    def test_str_out_of_vocab(self):
+        store = _store(16, 4)
+        assert not pred.evaluate(Eq("s", "missing"), store).any()
+        assert pred.evaluate(Ne("s", "missing"), store).all()
+        _assert_agree(Eq("s", "missing"), store)
+        _assert_agree(Ne("s", "missing"), store)
+
+
+class TestKeyLowering:
+    """The u64 key map preserves order/equality at exactly the values where
+    a naive x64-disabled lowering would truncate or flip."""
+
+    def test_i64_extremes(self):
+        store = _store(24, 5)
+        for c in (I64_MIN, I64_MIN + 1, -1, 0, 1, I64_MAX - 1, I64_MAX):
+            for P in (Eq, Ne, Lt, Le, Gt, Ge):
+                _assert_agree(P("i", int(c)), store)
+
+    def test_f64_total_order(self):
+        store = _store(24, 6)
+        for c in (-np.inf, -1e300, -1.5, -0.0, 0.0, 1e-300, 2.5, np.inf):
+            for P in (Eq, Ne, Lt, Le, Gt, Ge):
+                _assert_agree(P("f", float(c)), store)
+        # -0.0 and +0.0 are ONE key: equality and ordering are total
+        z = md.MetaStore.build({"f": np.array([-0.0, 0.0, 1.0])}, 3)
+        np.testing.assert_array_equal(pred.evaluate(Eq("f", -0.0), z),
+                                      [True, True, False])
+        _assert_agree(Eq("f", -0.0), z)
+        _assert_agree(Lt("f", 0.0), z)
+
+    def test_in_on_every_kind(self):
+        store = _store(24, 7)
+        for p in (In("i", (I64_MIN, 0, 77)),
+                  In("f", (0.0, -np.inf, 3.25)),
+                  In("s", ("red", "missing", "cyan"))):
+            _assert_agree(p, store)
+
+    def test_random_asts_agree(self):
+        """Seeded random predicate trees: host oracle == compiled stage.
+        (The hypothesis twin shrinks counterexamples; this one always runs.)"""
+        for seed in range(40):
+            rng = np.random.RandomState(1000 + seed)
+            store = _store(48, seed)
+            p = _random_pred(rng, store)
+            _assert_agree(p, store)
+
+
+def _random_pred(rng, store, depth: int = 0) -> pred.Predicate:
+    if depth < 3 and rng.rand() < 0.45:
+        c = rng.randint(3)
+        if c == 0:
+            return And(_random_pred(rng, store, depth + 1),
+                       _random_pred(rng, store, depth + 1))
+        if c == 1:
+            return Or(_random_pred(rng, store, depth + 1),
+                      _random_pred(rng, store, depth + 1))
+        return Not(_random_pred(rng, store, depth + 1))
+    col = ("i", "f", "s")[rng.randint(3)]
+    kind = store[col].kind
+
+    def const():
+        if kind == "i64":
+            pool = [int(v) for v in store["i"].values[:6]] + \
+                [I64_MIN, I64_MAX, -7, 0, 1 << 62]
+        elif kind == "f64":
+            pool = [float(v) for v in store["f"].values[:6]] + \
+                [0.0, -0.0, 2.5, -np.inf, np.inf]
+        else:
+            pool = ["red", "green", "blue", "cyan", "missing"]
+        return pool[rng.randint(len(pool))]
+
+    if rng.rand() < 0.25:
+        return In(col, tuple(const() for _ in range(rng.randint(1, 4))))
+    ops = (Eq, Ne) if kind == "str" else (Eq, Ne, Lt, Le, Gt, Ge)
+    return ops[rng.randint(len(ops))](col, const())
+
+
+class TestValidation:
+    def test_errors_are_eager_and_named(self):
+        store = _store(8, 8)
+        with pytest.raises(KeyError, match="nope"):
+            pred.validate(Eq("nope", 1), store)
+        with pytest.raises(TypeError, match="ordering.*str"):
+            pred.validate(Lt("s", "red"), store)
+        with pytest.raises(TypeError, match="i64.*int"):
+            pred.validate(Eq("i", "red"), store)
+        with pytest.raises(TypeError, match="NaN"):
+            pred.validate(Eq("f", float("nan")), store)
+        with pytest.raises(TypeError, match="string"):
+            pred.validate(Eq("s", 3), store)
+        with pytest.raises(ValueError, match="at least one"):
+            In("i", ())
+
+    def test_search_without_meta_rejected(self):
+        rng = np.random.RandomState(9)
+        idx = MonaVec.build(rng.randn(12, DIM).astype(np.float32),
+                            metric="cosine")
+        with pytest.raises(ValueError, match="metadata"):
+            idx.search(rng.randn(1, DIM).astype(np.float32), 3,
+                       where=Eq("x", 1))
+
+
+class TestStructureSharing:
+    def test_constants_are_not_structure(self):
+        store = _store(8, 10)
+        a = And(Eq("s", "red"), Lt("f", 1.0))
+        b = And(Eq("s", "blue"), Lt("f", -99.0))
+        assert pred.structure(a, store) == pred.structure(b, store)
+
+    def test_shape_changes_are_structure(self):
+        store = _store(8, 11)
+        base = pred.structure(Eq("i", 1), store)
+        assert pred.structure(Ne("i", 1), store) != base        # op
+        assert pred.structure(Eq("f", 1.0), store) != base      # column
+        assert pred.structure(In("i", (1,)), store) != base     # node type
+        # In-set size is a traced shape, hence structure
+        assert pred.structure(In("i", (1, 2)), store) != \
+            pred.structure(In("i", (1, 2, 3)), store)
+        assert pred.structure(In("i", (4, 5)), store) == \
+            pred.structure(In("i", (8, 9)), store)
+
+
+# ---------------------------------------------------------------------------
+# Filtered search vs the mask-to-NEG oracle.
+# ---------------------------------------------------------------------------
+
+def _meta_for(n: int, rng) -> dict:
+    return {"attr": rng.randint(0, 100, n).astype(np.int64),
+            "tag": np.array(["x", "y", "z"])[rng.randint(0, 3, n)]}
+
+
+def _build(kind: str, n: int, rng, metric="cosine", bits=4):
+    kw = {"nlist": 3, "train_iters": 5} if kind == "ivf" else (
+        {"m": 4, "ef_construction": 32} if kind == "hnsw" else {})
+    return MonaVec.build(rng.randn(n, DIM).astype(np.float32), metric=metric,
+                         index=kind, bits=bits, meta=_meta_for(n, rng), **kw)
+
+
+def _mutate(idx, rng, n_add=7):
+    idx.add(rng.randn(n_add, DIM).astype(np.float32),
+            meta=_meta_for(n_add, rng))
+    idx.delete(idx.ids[::5])
+
+
+def _live_mask(idx) -> np.ndarray:
+    return np.concatenate([~idx.mut.base_tombs]
+                          + [~s.tombs for s in idx.mut.extras])
+
+
+PRED = And(Lt("attr", 55), Ne("tag", "z"))
+
+
+class TestFilteredSearchOracle:
+    @pytest.mark.parametrize("metric", ["cosine", "dot", "l2"])
+    @pytest.mark.parametrize("bits", [4, 2])
+    @pytest.mark.parametrize("mutated", [False, True])
+    def test_bruteforce_exact(self, metric, bits, mutated):
+        rng = np.random.RandomState(20)
+        idx = _build("bruteforce", 40, rng, metric=metric, bits=bits)
+        if mutated:
+            _mutate(idx, rng)
+        q = rng.randn(3, DIM).astype(np.float32)
+        mask = pred.evaluate(PRED, idx.meta)
+        got_s, got_i = idx.search(q, 8, use_kernel=False, where=PRED)
+        want_s, want_i = oracle_search(idx, q, 8, allow_mask=mask)
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_s, want_s)    # bit-identical
+
+    @pytest.mark.parametrize("kind", ["ivf", "hnsw"])
+    @pytest.mark.parametrize("mutated", [False, True])
+    def test_candidate_backends_admissible(self, kind, mutated):
+        """Full-beam IVF/HNSW under a predicate: exactly min(k, n_matching)
+        distinct real results, all admissible vs the masked oracle."""
+        rng = np.random.RandomState(21)
+        idx = _build(kind, 40, rng)
+        if mutated:
+            _mutate(idx, rng)
+        q = rng.randn(2, DIM).astype(np.float32)
+        mask = pred.evaluate(PRED, idx.meta)
+        skw = {"nprobe": idx.backend.nlist} if kind == "ivf" else \
+            {"ef": max(idx.n_total, 8)}
+        got_s, got_i = idx.search(q, 8, use_kernel=False, where=PRED, **skw)
+        want_s, want_i = oracle_search(idx, q, idx.n_total, allow_mask=mask)
+        r = min(8, int((_live_mask(idx) & mask).sum()))
+        tol = 1e-4
+        for row in range(got_i.shape[0]):
+            real = got_i[row][got_i[row] != SENTINEL_ID]
+            assert real.shape[0] == r
+            assert len(set(real.tolist())) == r
+            kth = want_s[row][r - 1]
+            admissible = set(want_i[row][want_s[row] >= kth - tol].tolist())
+            assert set(real.tolist()) <= admissible
+            np.testing.assert_allclose(np.sort(got_s[row][:r]),
+                                       np.sort(want_s[row][:r]),
+                                       rtol=2e-5, atol=tol)
+
+    def test_sharded_matches_single_device(self):
+        """Sharded filtered scan == single-device filtered engine result
+        (ids exact, scores to merge tolerance) == masked oracle ids."""
+        rng = np.random.RandomState(22)
+        idx = _build("bruteforce", 48, rng)
+        q = rng.randn(4, DIM).astype(np.float32)
+        s1, i1 = idx.search(q, 6, use_kernel=False, where=PRED)
+        sharded = idx.shard()
+        s2, i2 = sharded.search(q, 6, where=PRED)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_allclose(s1, s2, rtol=1e-6)
+        mask = pred.evaluate(PRED, idx.meta)
+        _, want_i = oracle_search(idx, q, 6, allow_mask=mask)
+        np.testing.assert_array_equal(i2, want_i)
+
+    def test_allowlist_and_predicate_compose(self):
+        """where= fuses with the §3.5 allowlist: results satisfy BOTH, and
+        equal the oracle over the conjunction of the masks."""
+        rng = np.random.RandomState(23)
+        idx = _build("bruteforce", 40, rng)
+        ids = np.asarray(idx.ids)
+        allow = Allowlist.from_ids(ids[::2], idx.ids)
+        q = rng.randn(2, DIM).astype(np.float32)
+        got_s, got_i = idx.search(q, 6, use_kernel=False, where=PRED,
+                                  allow=allow)
+        mask = pred.evaluate(PRED, idx.meta)
+        amask = np.zeros(len(ids), dtype=bool)
+        amask[::2] = True
+        want_s, want_i = oracle_search(idx, q, 6, allow_mask=mask & amask)
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_s, want_s)
+
+    def test_no_matching_rows_all_sentinels(self):
+        rng = np.random.RandomState(24)
+        idx = _build("bruteforce", 20, rng)
+        q = rng.randn(2, DIM).astype(np.float32)
+        _, i = idx.search(q, 4, use_kernel=False, where=Eq("tag", "missing"))
+        assert (i == SENTINEL_ID).all()
+
+    def test_filtered_results_survive_roundtrip(self):
+        """save -> load (v9) preserves columns, vocab, and the exact
+        filtered results."""
+        rng = np.random.RandomState(25)
+        idx = _build("bruteforce", 30, rng)
+        _mutate(idx, rng)
+        q = rng.randn(3, DIM).astype(np.float32)
+        s1, i1 = idx.search(q, 5, use_kernel=False, where=PRED)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "m.mvec")
+            idx.save(p)
+            assert open(p, "rb").read()[4] == 9
+            idx2 = MonaVec.load(p)
+        assert idx2.meta.schema == idx.meta.schema
+        np.testing.assert_array_equal(idx2.meta["attr"].values,
+                                      idx.meta["attr"].values)
+        assert idx2.meta["tag"].vocab == idx.meta["tag"].vocab
+        s2, i2 = idx2.search(q, 5, use_kernel=False, where=PRED)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(s1, s2)
+
+    def test_compact_carries_columns(self):
+        """compact() gathers the live rows' metadata: same filtered results
+        before and after (modulo the rows that were tombstoned)."""
+        rng = np.random.RandomState(26)
+        idx = _build("bruteforce", 30, rng)
+        _mutate(idx, rng)
+        q = rng.randn(2, DIM).astype(np.float32)
+        s1, i1 = idx.search(q, 5, use_kernel=False, where=PRED)
+        idx.compact()
+        assert idx.meta.n_rows == idx.n_total == idx.n_live
+        s2, i2 = idx.search(q, 5, use_kernel=False, where=PRED)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(s1, s2)
+
+    def test_add_schema_enforced(self):
+        rng = np.random.RandomState(27)
+        idx = _build("bruteforce", 16, rng)
+        v = rng.randn(3, DIM).astype(np.float32)
+        with pytest.raises(ValueError, match="meta"):
+            idx.add(v)                              # schema requires meta
+        with pytest.raises(ValueError, match="do not match"):
+            idx.add(v, meta={"attr": np.zeros(3, np.int64)})   # missing col
+        plain = MonaVec.build(v, metric="cosine")
+        with pytest.raises(ValueError, match="without metadata"):
+            plain.add(v, meta={"attr": np.zeros(3, np.int64)})

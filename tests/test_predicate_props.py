@@ -1,0 +1,146 @@
+"""Hypothesis property suite for the predicate compiler (DESIGN.md §8).
+
+Random predicate ASTs over random typed columns:
+  * the compiled u64-key stage (``build_stage_fn`` + ``flatten_args``) must
+    reproduce the host numpy oracle (``evaluate``) on every row — the core
+    exactness contract of the metadata lowering (x64 is disabled in the
+    trace, so only the key planes stand between us and silent truncation);
+  * filtered BruteForce search must equal the mask-to-NEG oracle bit for
+    bit, for any predicate, after any add/delete interleaving.
+
+ASTs are generated as abstract tokens (op kinds + pool indices) and
+materialized deterministically, so hypothesis shrinking stays cheap and
+every example is replayable.  The deterministic twin (tests/
+test_predicate.py) covers the same properties with pinned seeds where
+hypothesis is unavailable.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                                         "(pip install -r requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (And, Eq, Ge, Gt, In, Le, Lt, MonaVec, Ne, Not,  # noqa: E402
+                        Or)
+from repro.core import metadata as md  # noqa: E402
+from repro.core import predicate as pred  # noqa: E402
+from tests.lifecycle_harness import oracle_search  # noqa: E402
+
+DIM = 8
+
+I64_POOL = [np.iinfo(np.int64).min, np.iinfo(np.int64).max, -1, 0, 1,
+            -7, 42, 1 << 62]
+F64_POOL = [0.0, -0.0, 1.5, -2.25, 1e300, -1e300, 1e-300, float("inf"),
+            float("-inf")]
+STR_POOL = ["red", "green", "blue", "cyan", "missing", ""]
+
+_cmp = st.tuples(st.sampled_from(["eq", "ne", "lt", "le", "gt", "ge"]),
+                 st.sampled_from(["i", "f", "s"]),
+                 st.integers(0, 8))
+_in = st.tuples(st.just("in"), st.sampled_from(["i", "f", "s"]),
+                st.lists(st.integers(0, 8), min_size=1, max_size=3))
+leaf_tokens = st.one_of(_cmp, _in)
+ast_tokens = st.recursive(
+    leaf_tokens,
+    lambda inner: st.one_of(
+        st.tuples(st.just("and"), inner, inner),
+        st.tuples(st.just("or"), inner, inner),
+        st.tuples(st.just("not"), inner)),
+    max_leaves=6)
+
+_OPS = {"eq": Eq, "ne": Ne, "lt": Lt, "le": Le, "gt": Gt, "ge": Ge}
+
+
+def _const(col: str, idx: int, store: md.MetaStore):
+    if col == "i":
+        pool = I64_POOL + [int(v) for v in store["i"].values[:4]]
+        return int(pool[idx % len(pool)])
+    if col == "f":
+        pool = F64_POOL + [float(v) for v in store["f"].values[:4]]
+        return float(pool[idx % len(pool)])
+    return STR_POOL[idx % len(STR_POOL)]
+
+
+def _materialize(tok, store: md.MetaStore) -> pred.Predicate:
+    if tok[0] == "and":
+        return And(_materialize(tok[1], store), _materialize(tok[2], store))
+    if tok[0] == "or":
+        return Or(_materialize(tok[1], store), _materialize(tok[2], store))
+    if tok[0] == "not":
+        return Not(_materialize(tok[1], store))
+    if tok[0] == "in":
+        _, col, idxs = tok
+        return In(col, tuple(_const(col, i, store) for i in idxs))
+    op, col, idx = tok
+    if col == "s" and op in ("lt", "le", "gt", "ge"):
+        op = "eq"                     # ordering on str is rejected by design
+    return _OPS[op](col, _const(col, idx, store))
+
+
+def _store(seed: int, n: int = 32) -> md.MetaStore:
+    rng = np.random.RandomState(seed)
+    i64 = rng.randint(-50, 50, n).astype(np.int64)
+    i64[: min(4, n)] = I64_POOL[: min(4, n)]
+    f64 = rng.randn(n) * 5.0
+    f64[: min(4, n)] = F64_POOL[: min(4, n)]
+    strs = np.array(STR_POOL[:4])[rng.randint(0, 4, n)]
+    return md.MetaStore.build({"i": i64, "f": f64, "s": strs}, n)
+
+
+COMMON = dict(deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+class TestStageOracleAgreement:
+    @settings(max_examples=60, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**16))
+    def test_compiled_stage_equals_host_oracle(self, tok, seed):
+        store = _store(seed)
+        p = _materialize(tok, store)
+        host = pred.evaluate(p, store)
+        fn = pred.build_stage_fn(p)
+        args = tuple(jnp.asarray(a) for a in pred.flatten_args(p, store))
+        dev = np.asarray(fn(jnp.ones(store.n_rows, dtype=bool), *args))
+        np.testing.assert_array_equal(dev, host, err_msg=str(tok))
+
+    @settings(max_examples=20, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**16))
+    def test_structure_is_constant_free(self, tok, seed):
+        """Re-materializing the same token tree against a different store
+        only shifts constants — the structure fingerprint must not move."""
+        s1, s2 = _store(seed), _store(seed + 1)
+        assert pred.structure(_materialize(tok, s1), s1) == \
+            pred.structure(_materialize(tok, s2), s2)
+
+
+class TestFilteredSearchProperty:
+    @settings(max_examples=15, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**10),
+           mutate=st.booleans())
+    def test_bruteforce_filtered_equals_masked_oracle(self, tok, seed,
+                                                      mutate):
+        rng = np.random.RandomState(seed)
+        n = 20
+        idx = MonaVec.build(
+            rng.randn(n, DIM).astype(np.float32), metric="cosine",
+            meta={"i": _store(seed, n)["i"].values,
+                  "f": _store(seed, n)["f"].values,
+                  "s": _store(seed, n)["s"].decoded().astype(str)})
+        if mutate:
+            m = 5
+            idx.add(rng.randn(m, DIM).astype(np.float32),
+                    meta={"i": _store(seed + 2, m)["i"].values,
+                          "f": _store(seed + 2, m)["f"].values,
+                          "s": _store(seed + 2, m)["s"].decoded().astype(str)})
+            idx.delete(idx.ids[::6])
+        p = _materialize(tok, idx.meta)
+        q = rng.randn(2, DIM).astype(np.float32)
+        got_s, got_i = idx.search(q, 6, use_kernel=False, where=p)
+        mask = pred.evaluate(p, idx.meta)
+        want_s, want_i = oracle_search(idx, q, 6, allow_mask=mask)
+        np.testing.assert_array_equal(got_i, want_i, err_msg=str(tok))
+        np.testing.assert_array_equal(got_s, want_s)
