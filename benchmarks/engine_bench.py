@@ -31,7 +31,7 @@ from repro import engine
 from repro.core import MonaVec, TenantRegistry
 from repro.data.synthetic import embedding_corpus, queries_from_corpus
 
-from .common import emit, time_fn
+from .common import emit, record, time_fn
 
 
 def _batches(corpus, batch_q: int, count: int):
@@ -72,6 +72,9 @@ def bench_engine(n: int = 16_000, dim: int = 512, batch_q: int = 16,
     assert d.misses == 0, f"cached plan missed {d.misses}x"
     emit("engine/cached", us_cached,
          f"hits={d.hits} retraces=0 speedup={us_per_call / us_cached:.1f}x")
+    record(path="cached", backend="BruteForceIndex", n=n, dim=dim,
+           batch_q=batch_q, k=k, retraces=0,
+           qps=batch_q / (us_cached / 1e6))
 
     # --- bucket wobble: ragged batch sizes, one bucket, zero retraces. -----
     sizes = [batch_q, batch_q - 1, batch_q // 2 + 1, batch_q - 3]

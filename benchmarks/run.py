@@ -10,7 +10,11 @@ Besides the CSV on stdout, every executed benchmark writes a machine-
 readable ``BENCH_<name>.json`` next to the working directory (or under
 ``--json-dir``): the csv rows it printed plus any structured records it
 appended via ``common.record`` (QPS / recall / bytes-per-vector per
-backend and shape).  CI uploads ``BENCH_*.json`` as workflow artifacts.
+backend and shape).  The sweep also dumps the process-wide metrics
+registry (``repro.obs``) as ``METRICS_SNAPSHOT.json`` in the same
+directory — plan-cache counters and per-stage latency histograms for the
+whole run.  CI uploads both as workflow artifacts and gates the records
+against ``benchmarks/baselines/`` via ``benchmarks.trajectory``.
 """
 
 from __future__ import annotations
@@ -103,6 +107,15 @@ def main() -> None:
             traceback.print_exc()
         _write_json(args.json_dir, name, status, args.smoke,
                     common.ROWS[rows_at:], common.RECORDS[recs_at:])
+
+    # The whole sweep ran through the instrumented engine; snapshot the
+    # registry next to the BENCH files (deterministic bucket edges make the
+    # histogram SHAPE diffable across runs even though counts are timing).
+    from repro import obs
+    os.makedirs(args.json_dir, exist_ok=True)
+    with open(os.path.join(args.json_dir, "METRICS_SNAPSHOT.json"), "w") as f:
+        f.write(obs.registry().snapshot_json())
+        f.write("\n")
     sys.exit(1 if failed else 0)
 
 

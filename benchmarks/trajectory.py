@@ -1,0 +1,194 @@
+"""Perf-trajectory gate: diff BENCH_*.json against committed baselines.
+
+The smoke sweep (``benchmarks.run --smoke``) writes one machine-readable
+``BENCH_<name>.json`` per benchmark, each carrying the structured records
+appended via ``common.record`` — QPS / recall@10 / bytes-per-vector per
+backend and shape.  This module compares a fresh run directory against the
+committed ``benchmarks/baselines/`` and fails loudly when the trajectory
+bends the wrong way:
+
+  * ``qps``              — lower is a regression; gated by ``--qps-tol R``
+                           (current must be >= R x baseline).  QPS is
+                           machine-dependent, so CI runs with a lenient R.
+  * ``recall_at_10``     — lower is a regression; gated by ``--recall-tol D``
+                           (absolute drop > D fails).  The smoke shapes are
+                           seeded and deterministic, so the default is strict.
+  * ``bytes_per_vector`` — higher is a regression; gated by ``--bytes-tol R``
+                           (current must be <= R x baseline).  Memory layout
+                           is machine-independent, so the default is exact.
+
+Records are matched by their identity fields — every field that is not a
+metric (bench, backend, n, dim, batch_q, k, selectivity, ...).  A baseline
+record with no matching current record is a coverage regression (a benchmark
+silently stopped reporting); a current record absent from the baseline is
+new coverage and only noted.  ``--write-baseline`` re-seeds the baseline
+directory from the run directory instead of gating.
+
+CLI (also callable as ``run(argv) -> int`` for tests):
+
+    PYTHONPATH=src python -m benchmarks.trajectory --run-dir bench-json
+    PYTHONPATH=src python -m benchmarks.trajectory --run-dir bench-json \
+        --write-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# Everything else in a record is identity.  ``us_per_call`` is raw wall time
+# with no stable cross-machine meaning, so it is excluded from identity but
+# never gated — qps already covers throughput with an explicit tolerance.
+METRIC_FIELDS = ("qps", "recall_at_10", "bytes_per_vector", "us_per_call")
+GATED_METRICS = ("qps", "recall_at_10", "bytes_per_vector")
+
+_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def _identity(bench: str, rec: Dict[str, object]) -> Tuple:
+    items = tuple(sorted((k, v) for k, v in rec.items()
+                         if k not in METRIC_FIELDS))
+    return (bench,) + items
+
+
+def load_records(json_dir: str) -> Dict[Tuple, Dict[str, float]]:
+    """{identity key: {metric: value}} over every BENCH_*.json in the dir.
+
+    Records with no metric fields (pure-timing benchmarks) carry nothing the
+    gate can compare and are skipped.
+    """
+    out: Dict[Tuple, Dict[str, float]] = {}
+    for path in sorted(glob.glob(os.path.join(json_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        for rec in payload.get("records", []):
+            metrics = {k: float(rec[k]) for k in METRIC_FIELDS if k in rec}
+            if not metrics:
+                continue
+            out[_identity(payload["bench"], rec)] = metrics
+    return out
+
+
+def _fmt_id(key: Tuple) -> str:
+    bench, items = key[0], key[1:]
+    return bench + "[" + " ".join(f"{k}={v}" for k, v in items) + "]"
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def compare(current: Dict[Tuple, Dict[str, float]],
+            baseline: Dict[Tuple, Dict[str, float]],
+            *, qps_tol: float, recall_tol: float, bytes_tol: float,
+            ) -> Tuple[List[str], List[str]]:
+    """(table rows, failure messages) for the current-vs-baseline diff."""
+    rows: List[str] = []
+    failures: List[str] = []
+    for key in sorted(baseline, key=_fmt_id):
+        name = _fmt_id(key)
+        if key not in current:
+            failures.append(f"{name}: record missing from current run "
+                            "(benchmark stopped reporting)")
+            rows.append(f"  FAIL {name:<58} -- record missing")
+            continue
+        cur, base = current[key], baseline[key]
+        for metric in GATED_METRICS:
+            if metric not in base or metric not in cur:
+                continue
+            b, c = base[metric], cur[metric]
+            if metric == "qps":
+                ok = c >= qps_tol * b
+                why = f"{_fmt(c)} < {qps_tol:g} x {_fmt(b)}"
+            elif metric == "recall_at_10":
+                ok = c >= b - recall_tol
+                why = f"{_fmt(c)} < {_fmt(b)} - {recall_tol:g}"
+            else:  # bytes_per_vector
+                ok = c <= bytes_tol * b
+                why = f"{_fmt(c)} > {bytes_tol:g} x {_fmt(b)}"
+            mark = "ok  " if ok else "FAIL"
+            rows.append(f"  {mark} {name:<58} {metric:<16} "
+                        f"base={_fmt(b):>10} cur={_fmt(c):>10}")
+            if not ok:
+                failures.append(f"{name}: {metric} regressed ({why})")
+    for key in sorted(set(current) - set(baseline), key=_fmt_id):
+        rows.append(f"  new  {_fmt_id(key):<58} -- no baseline (noted only)")
+    return rows, failures
+
+
+def write_baseline(run_dir: str, baseline_dir: str) -> int:
+    """Re-seed baseline_dir with the records from run_dir's BENCH files.
+
+    Only the structured records survive — csv timing rows are machine noise
+    the gate never reads, and dropping them keeps the committed baselines
+    reviewable."""
+    os.makedirs(baseline_dir, exist_ok=True)
+    n = 0
+    for path in sorted(glob.glob(os.path.join(run_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        if not payload.get("records"):
+            continue
+        out = {"bench": payload["bench"], "smoke": payload.get("smoke", False),
+               "records": payload["records"]}
+        dst = os.path.join(baseline_dir, os.path.basename(path))
+        with open(dst, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        n += 1
+    print(f"[trajectory] wrote {n} baseline file(s) to {baseline_dir}")
+    return 0
+
+
+def run(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate BENCH_*.json against committed perf baselines")
+    ap.add_argument("--run-dir", required=True,
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--baseline-dir", default=_BASELINE_DIR)
+    ap.add_argument("--qps-tol", type=float, default=0.85,
+                    help="current qps must be >= TOL x baseline (ratio)")
+    ap.add_argument("--recall-tol", type=float, default=0.0,
+                    help="max allowed absolute recall_at_10 drop")
+    ap.add_argument("--bytes-tol", type=float, default=1.0,
+                    help="current bytes_per_vector must be <= TOL x baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="re-seed --baseline-dir from --run-dir and exit")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        return write_baseline(args.run_dir, args.baseline_dir)
+
+    baseline = load_records(args.baseline_dir)
+    current = load_records(args.run_dir)
+    if not baseline:
+        print(f"[trajectory] no baselines under {args.baseline_dir}; "
+              "seed them with --write-baseline", file=sys.stderr)
+        return 2
+    rows, failures = compare(
+        current, baseline, qps_tol=args.qps_tol,
+        recall_tol=args.recall_tol, bytes_tol=args.bytes_tol)
+    print(f"[trajectory] {len(baseline)} baseline record(s) vs "
+          f"{len(current)} current (qps-tol={args.qps_tol:g} "
+          f"recall-tol={args.recall_tol:g} bytes-tol={args.bytes_tol:g})")
+    for row in rows:
+        print(row)
+    if failures:
+        print(f"[trajectory] {len(failures)} regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("[trajectory] trajectory holds: no regressions")
+    return 0
+
+
+def main() -> None:
+    sys.exit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, Optional, Tuple
 
+from repro import obs
+
 from .api import MonaVec
 
 PUBLIC_NAMESPACE = "__public__"
@@ -57,22 +59,32 @@ class TenantRegistry:
     def put(self, token: Optional[str], name: str, index: MonaVec) -> str:
         ns = self.resolve_namespace(token)
         if ns is None:
+            obs.inc("tenancy.errors", kind="401")
             raise PermissionError("401: token rejected")
         self._spaces.setdefault(ns, {})[name] = index
         return ns
 
     def get(self, token: Optional[str], name: str) -> MonaVec:
+        """Resolve + fetch; every successful call counts as one request
+        under its ``{namespace, collection}`` labels (DESIGN.md §9) — the
+        per-namespace request counter the metrics snapshot exposes."""
         ns = self.resolve_namespace(token)
         if ns is None:
+            obs.inc("tenancy.errors", kind="401")
             raise PermissionError("401: token rejected")
         try:
-            return self._spaces[ns][name]
+            index = self._spaces[ns][name]
         except KeyError:
+            obs.inc("tenancy.errors", kind="missing_collection",
+                    **{"namespace": ns})
             raise KeyError(f"collection {name!r} not found in namespace {ns!r}") from None
+        obs.inc("tenancy.requests", **{"namespace": ns, "collection": name})
+        return index
 
     def collections(self, token: Optional[str]):
         ns = self.resolve_namespace(token)
         if ns is None:
+            obs.inc("tenancy.errors", kind="401")
             raise PermissionError("401: token rejected")
         return sorted(self._spaces.get(ns, {}).keys())
 
@@ -88,10 +100,16 @@ class TenantRegistry:
         the handle the serving loop keeps per (tenant, collection) so every
         request is a plan-cache hit, with the same 401 semantics as get().
         ``where=`` binds a metadata predicate (DESIGN.md §8) into every call
-        — per-namespace filtered serving."""
+        — per-namespace filtered serving.  The returned Searcher carries
+        ``{namespace, collection}`` metric labels, so each call lands in the
+        per-namespace ``tenancy.search_us`` latency histogram (DESIGN.md
+        §9)."""
         if where is not None:
             knobs["where"] = where
-        return self.get(token, name).searcher(k=k, **knobs)
+        ns = self.resolve_namespace(token)   # get() below re-checks + counts
+        searcher = self.get(token, name).searcher(k=k, **knobs)
+        searcher.labels = (("namespace", ns), ("collection", name))
+        return searcher
 
     def add(self, token: Optional[str], name: str, vectors, ids=None,
             meta=None):

@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import predicate as pred
 from repro.core import quantize as qz
 from repro.core.bruteforce import BruteForceIndex
@@ -90,19 +91,46 @@ class ShardedMonaVec:
         every local top-k.  ``where_mask=`` passes a precomputed [n] mask
         directly; both compose (AND)."""
         from repro import engine
-        mask = None if where_mask is None else np.asarray(where_mask, bool)
-        if where is not None:
-            if self.meta is None or not self.meta:
-                raise ValueError(
-                    "where= requires an index built with metadata columns")
-            if self.meta.n_rows != self.n:
-                raise ValueError(
-                    f"metadata has {self.meta.n_rows} rows but the index "
-                    f"has {self.n}")
-            pred.validate(where, self.meta)
-            pm = pred.evaluate(where, self.meta)
-            mask = pm if mask is None else mask & pm
-        return engine.search_sharded(self, queries, k, where_mask=mask)
+        n_shards = int(getattr(self.mesh, "size", 1))
+        obs.inc("dist.requests", **{"shards": n_shards})
+        with obs.timed_span("sharded_search", histogram="dist.search_us",
+                            labels={"shards": n_shards},
+                            attrs={"shards": n_shards, "n": self.n}):
+            mask = None if where_mask is None else np.asarray(where_mask, bool)
+            if where is not None:
+                if self.meta is None or not self.meta:
+                    raise ValueError(
+                        "where= requires an index built with metadata columns")
+                if self.meta.n_rows != self.n:
+                    raise ValueError(
+                        f"metadata has {self.meta.n_rows} rows but the index "
+                        f"has {self.n}")
+                with obs.timed_span("predicate_eval",
+                                    histogram="dist.predicate_us"):
+                    pred.validate(where, self.meta)
+                    pm = pred.evaluate(where, self.meta)
+                mask = pm if mask is None else mask & pm
+            self._trace_shards(n_shards)
+            return engine.search_sharded(self, queries, k, where_mask=mask)
+
+    def _trace_shards(self, n_shards: int) -> None:
+        """Under an active QueryTrace, record one structural span per shard
+        (row range + device).  shard_map executes every shard in lockstep
+        inside ONE device program, so these spans carry placement metadata,
+        not isolated per-device wall time (DESIGN.md §9)."""
+        tr = obs.current_trace()
+        if tr is None:
+            return
+        pad_rows = int(self.enc.packed.shape[0])
+        per_shard = pad_rows // max(n_shards, 1)
+        devices = list(np.asarray(self.mesh.devices).flat) \
+            if hasattr(self.mesh, "devices") else [None] * n_shards
+        for i in range(n_shards):
+            lo = i * per_shard
+            hi = min(self.n, lo + per_shard)
+            sp = tr.push(f"shard:{i}", rows=max(0, hi - lo),
+                         device=str(devices[i]) if devices[i] else "?")
+            tr.pop(sp)
 
     def searcher(self, k: int = 10, *,
                  where: Optional[pred.Predicate] = None):

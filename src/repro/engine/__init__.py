@@ -7,14 +7,18 @@
 # abstraction over many backends" (Faiss-style) is also one COMPILED
 # abstraction: same keying, same bucketing, same hit/miss/trace accounting.
 
+from repro.obs import DeltaStats  # noqa: F401 — back-compat re-export: the
+#   shared snapshot/since mixin PlanStats and BatcherStats now inherit.
+
 from .batcher import BatcherStats, MicroBatcher, Ticket
-from .fusion import search_hybrid
 from .plan import (PlanCache, PlanKey, PlanStats, SearchPlan, Searcher,
-                   plan_cache, search_backend, search_sharded, shape_bucket)
+                   plan_cache, plan_key_digest, search_backend,
+                   search_sharded, shape_bucket)
+from .fusion import search_hybrid
 
 __all__ = [
-    "BatcherStats", "MicroBatcher", "Ticket",
+    "BatcherStats", "DeltaStats", "MicroBatcher", "Ticket",
     "PlanCache", "PlanKey", "PlanStats", "SearchPlan", "Searcher",
-    "plan_cache", "search_backend", "search_hybrid", "search_sharded",
-    "shape_bucket",
+    "plan_cache", "plan_key_digest", "search_backend", "search_hybrid",
+    "search_sharded", "shape_bucket",
 ]

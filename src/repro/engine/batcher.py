@@ -30,22 +30,18 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass
-class BatcherStats:
+class BatcherStats(obs.DeltaStats):
+    """``snapshot``/``since`` come from the shared obs.DeltaStats mixin;
+    the same counts also land in the metrics registry (``batcher.*``)."""
+
     requests: int = 0      # submit() calls accepted
     rows: int = 0          # total query rows submitted
     executions: int = 0    # plan executions issued by flush()
     flushes: int = 0
-
-    def snapshot(self) -> "BatcherStats":
-        return dataclasses.replace(self)
-
-    def since(self, before: "BatcherStats") -> "BatcherStats":
-        return BatcherStats(requests=self.requests - before.requests,
-                            rows=self.rows - before.rows,
-                            executions=self.executions - before.executions,
-                            flushes=self.flushes - before.flushes)
 
 
 class Ticket:
@@ -79,6 +75,7 @@ class _Group:
     """One coalescible (namespace, collection, k, where, knobs) stream."""
 
     token: Optional[str]          # any token resolving to this namespace
+    namespace: str                # resolved at submit — metric label only
     collection: str
     k: int
     knobs: tuple
@@ -155,7 +152,7 @@ class MicroBatcher:
         group = self._groups.get(key)
         if group is None:
             group = self._groups[key] = _Group(
-                token=token, collection=collection, k=k,
+                token=token, namespace=ns, collection=collection, k=k,
                 knobs=tuple(sorted(knobs.items())), where=where,
                 texts=[] if texts is not None else None)
         ticket = Ticket(self)
@@ -165,11 +162,20 @@ class MicroBatcher:
         group.tickets.append(ticket)
         self.stats.requests += 1
         self.stats.rows += int(q.shape[0])
+        obs.inc("batcher.requests", **{"namespace": ns})
+        obs.inc("batcher.rows", int(q.shape[0]), **{"namespace": ns})
+        obs.set_gauge("batcher.queue_depth", self.pending)
+        obs.set_gauge("batcher.queued_rows", self.pending_rows)
         return ticket
 
     @property
     def pending(self) -> int:
         return sum(len(g.tickets) for g in self._groups.values())
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(int(q.shape[0]) for g in self._groups.values()
+                   for q in g.queries)
 
     # -- drain -------------------------------------------------------------
 
@@ -179,31 +185,46 @@ class MicroBatcher:
         """Run one coalesced chunk; a failure (stale collection, knobs the
         collection's backend rejects, ...) is delivered to THIS chunk's
         tickets — other groups and chunks are isolated and still execute."""
-        try:
-            index = self.registry.get(group.token, group.collection)
-            kw = dict(group.knobs)
-            if self.use_kernel is not None:
-                kw["use_kernel"] = self.use_kernel
-            if self.interpret is not None:
-                kw["interpret"] = self.interpret
-            if group.where is not None:
-                kw["where"] = group.where
-            qcat = queries[0] if len(queries) == 1 else np.concatenate(queries)
-            if texts is not None:
-                tcat = [t for ts in texts for t in ts]
-                scores, ids = index.search(qcat, tcat, k=group.k, **kw)
-            else:
-                scores, ids = index.search(qcat, k=group.k, **kw)
-        except Exception as e:  # noqa: BLE001 — re-raised at ticket.result()
-            for t in tickets:
-                t._error = e
-            return
-        self.stats.executions += 1
-        off = 0
-        for q, t in zip(queries, tickets):
-            m = q.shape[0]
-            t._result = (scores[off: off + m], ids[off: off + m])
-            off += m
+        labels = {"namespace": group.namespace}
+        rows = sum(int(q.shape[0]) for q in queries)
+        with obs.timed_span("batcher.execute", histogram="batcher.flush_us",
+                            labels=labels,
+                            attrs={"namespace": group.namespace,
+                                   "collection": group.collection,
+                                   "requests": len(tickets), "rows": rows}):
+            # Coalescing factor: requests folded into this one plan call.
+            obs.observe("batcher.coalesced_requests", len(tickets),
+                        edges=obs.DEFAULT_COUNT_EDGES, **labels)
+            try:
+                index = self.registry.get(group.token, group.collection)
+                kw = dict(group.knobs)
+                if self.use_kernel is not None:
+                    kw["use_kernel"] = self.use_kernel
+                if self.interpret is not None:
+                    kw["interpret"] = self.interpret
+                if group.where is not None:
+                    kw["where"] = group.where
+                qcat = queries[0] if len(queries) == 1 \
+                    else np.concatenate(queries)
+                if texts is not None:
+                    tcat = [t for ts in texts for t in ts]
+                    scores, ids = index.search(qcat, tcat, k=group.k, **kw)
+                else:
+                    scores, ids = index.search(qcat, k=group.k, **kw)
+            except Exception as e:  # noqa: BLE001 — re-raised at result()
+                obs.inc("batcher.errors", **labels)
+                for t in tickets:
+                    t._error = e
+                return
+            self.stats.executions += 1
+            obs.inc("batcher.executions", **labels)
+            with obs.timed_span("batcher.scatter",
+                                attrs={"requests": len(tickets)}):
+                off = 0
+                for q, t in zip(queries, tickets):
+                    m = q.shape[0]
+                    t._result = (scores[off: off + m], ids[off: off + m])
+                    off += m
 
     def flush(self) -> int:
         """Execute every pending group; returns the number of plan
@@ -234,4 +255,7 @@ class MicroBatcher:
                 executions += 1
         if executions:
             self.stats.flushes += 1
+            obs.inc("batcher.flushes")
+        obs.set_gauge("batcher.queue_depth", self.pending)
+        obs.set_gauge("batcher.queued_rows", self.pending_rows)
         return executions

@@ -30,6 +30,7 @@ from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import predicate as pred
 from repro.core.allowlist import Allowlist
 from repro.core.rrf import rrf_fuse
@@ -88,6 +89,7 @@ def search_hybrid(
         if not isinstance(t, str):
             raise TypeError(f"query text must be a string, got {t!r}")
 
+    obs.inc("engine.hybrid_searches")
     # Dense channel: ONE bucketed plan execution for the whole batch, the
     # predicate compiled into the plan's mask stage (plan.py).
     _, dense_ids = search_backend(
@@ -95,6 +97,16 @@ def search_hybrid(
         meta=index.meta, use_kernel=use_kernel, interpret=interpret,
     )
 
+    with obs.timed_span("hybrid.sparse_fuse", histogram="engine.stage_us",
+                        labels={"backend": "HybridIndex",
+                                "stage": "sparse_fuse"},
+                        attrs={"rows": b}):
+        return _fuse_rows(index, texts, dense_ids, allow, where,
+                          fetch_k, rrf_k, k, b, single)
+
+
+def _fuse_rows(index, texts, dense_ids, allow, where, fetch_k, rrf_k, k,
+               b, single):
     mask = _sparse_mask(index, allow, where)
     corpus_ids = np.asarray(index.dense.ids)
 

@@ -38,12 +38,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
+import logging
 from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import hnsw as hnsw_mod
 from repro.core import ivf as ivf_mod
 from repro.core import predicate as pred
@@ -55,6 +58,8 @@ from repro.core.rhdh import rhdh_apply
 from repro.core.scoring import adjust_scores, topk
 from repro.core.standardize import DOT, prepare
 from repro.kernels import ops
+
+_LOG = logging.getLogger("repro.engine.plan")
 
 
 def shape_bucket(b: int) -> int:
@@ -85,22 +90,18 @@ class PlanKey:
 
 
 @dataclasses.dataclass
-class PlanStats:
+class PlanStats(obs.DeltaStats):
     """Counters for the serving loop: cache hits/misses and actual jit
     traces (a trace == one XLA compile; the acceptance criterion 'repeated
-    same-bucket searches incur zero retraces' is asserted on ``traces``)."""
+    same-bucket searches incur zero retraces' is asserted on ``traces``).
+    ``snapshot``/``since`` come from the shared obs.DeltaStats mixin; the
+    same counts also flow into the process-wide metrics registry as
+    ``plan_cache.{hits,misses,traces,evictions}``."""
 
     hits: int = 0
     misses: int = 0
     traces: int = 0
-
-    def snapshot(self) -> "PlanStats":
-        return dataclasses.replace(self)
-
-    def since(self, before: "PlanStats") -> "PlanStats":
-        return PlanStats(hits=self.hits - before.hits,
-                         misses=self.misses - before.misses,
-                         traces=self.traces - before.traces)
+    evictions: int = 0
 
 
 @dataclasses.dataclass
@@ -111,14 +112,25 @@ class SearchPlan:
     fn: Callable   # (q_pad, q_valid, live, perm, where_args, *arrays) -> (vals, pos)
 
 
+def plan_key_digest(key: PlanKey) -> str:
+    """Short stable fingerprint of a PlanKey (debug logs, trace attrs)."""
+    return hashlib.sha256(repr(key).encode()).hexdigest()[:12]
+
+
 class PlanCache:
-    """PlanKey -> SearchPlan: LRU with hit/miss/trace accounting.
+    """PlanKey -> SearchPlan: LRU with hit/miss/trace/eviction accounting.
 
     Bounded because mutation churn mints new fingerprints (every add() or
     compact() changes the segment signature, DESIGN.md §7), so a long-lived
     serving process would otherwise accumulate superseded plans — and their
     compiled executables — forever.  ``maxsize`` plans is far above any
     steady-state working set (tenants × buckets × k values × knobs).
+
+    Every event lands twice: in ``stats`` (the cheap in-object PlanStats
+    serving windows diff against) and in the process-wide metrics registry
+    (``plan_cache.*`` counters + size/capacity gauges, DESIGN.md §9).
+    Evictions are no longer silent: each one counts, updates the size
+    gauge, and logs the evicted key's fingerprint at DEBUG.
     """
 
     def __init__(self, maxsize: int = 256) -> None:
@@ -126,23 +138,42 @@ class PlanCache:
             collections.OrderedDict()
         self.maxsize = maxsize
         self.stats = PlanStats()
+        self._publish_gauges()
+
+    def _publish_gauges(self) -> None:
+        obs.set_gauge("plan_cache.size", len(self._plans))
+        obs.set_gauge("plan_cache.capacity", self.maxsize)
+        for c in ("hits", "misses", "traces", "evictions"):
+            obs.inc(f"plan_cache.{c}", 0)   # pre-register: snapshots always
+            #   carry the full counter family, even all-zero
 
     def get_or_build(self, key: PlanKey, builder: Callable[[], SearchPlan]) -> SearchPlan:
         plan = self._plans.get(key)
         if plan is not None:
             self._plans.move_to_end(key)
             self.stats.hits += 1
+            obs.inc("plan_cache.hits")
             return plan
         self.stats.misses += 1
+        obs.inc("plan_cache.misses")
         plan = builder()
         self._plans[key] = plan
         while len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)      # evict least-recently-used
+            old_key, _ = self._plans.popitem(last=False)   # least-recently-used
+            self.stats.evictions += 1
+            obs.inc("plan_cache.evictions")
+            if _LOG.isEnabledFor(logging.DEBUG):
+                _LOG.debug(
+                    "plan cache evicted %s (bucket=%d k=%d knobs=%s)",
+                    plan_key_digest(old_key), old_key.bucket, old_key.k,
+                    dict(old_key.knobs))
+        self._publish_gauges()
         return plan
 
     def clear(self) -> None:
         self._plans.clear()
         self.stats = PlanStats()
+        self._publish_gauges()
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -255,8 +286,24 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
         """jit(fn) with the trace counter attached (runs once per trace)."""
         def wrapper(*args):
             stats.traces += 1
+            obs.inc("plan_cache.traces")
             return fn(*args)
         return jax.jit(wrapper)
+
+    def staged(stage, fn):
+        """Host-side per-stage timer (DESIGN.md §9): wraps the CALL to a
+        compiled stage — the timer never enters the traced function, so
+        instrumentation cannot perturb the compiled program.  Records into
+        the ``engine.stage_us{backend,stage}`` histogram and, under an
+        active QueryTrace, as a nested span."""
+        span_name = f"stage:{stage}"
+        labels = {"backend": kind, "stage": stage}
+
+        def run(*args):
+            with obs.timed_span(span_name, histogram="engine.stage_us",
+                                labels=labels):
+                return fn(*args)
+        return run
 
     def make_rot(seed):
         return marked(lambda q, perm: _rotate(q, metric=metric, std=std,
@@ -267,7 +314,8 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
     # no float arithmetic, so exact under any fusion.  The stage function
     # depends only on the predicate STRUCTURE (which is in the plan key),
     # never on its constants, so plans are shared across constant values.
-    where_stage = None if where is None else marked(pred.build_stage_fn(where))
+    where_stage = None if where is None else staged(
+        "predicate_mask", marked(pred.build_stage_fn(where)))
 
     def masked_live(live, where_args):
         return live if where_stage is None else where_stage(live, *where_args)
@@ -286,10 +334,10 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
         return lambda q_rot, packed, qnorms: adjust_scores(
             raw_fn(q_rot, packed), qnorms, metric)
 
-    rot_stages = [make_rot(s) for s in seeds]
+    rot_stages = [staged("rotate", make_rot(s)) for s in seeds]
 
     if kind == "BruteForceIndex":
-        scan_stages = [make_scan() for _ in seeds]
+        scan_stages = [staged("scan", make_scan()) for _ in seeds]
 
         def fin(q_valid, live, *cols):
             scores = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
@@ -300,7 +348,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
                                  constant_values=NEG)
             vals, pos = topk(scores, k)
             return vals, jnp.where(vals > NEG, pos, -1)
-        finalize = marked(fin)
+        finalize = staged("finalize", marked(fin))
 
         def fn(q, q_valid, live, perm, where_args, *seg_arrays):
             live = masked_live(live, where_args)
@@ -317,22 +365,24 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
     if kind == "IvfFlatIndex":
         nprobe = knobs["nprobe"]
         max_cand = backend.max_candidates(nprobe)
-        main = marked(lambda q_rot, centroids, order, offsets, packed, qnorms,
-                      live0: ivf_mod.search_stage(
-                          q_rot, centroids, order, offsets, packed, qnorms,
-                          live0, k=k, nprobe=nprobe, max_cand=max_cand,
-                          metric=metric, bits=bits, n4_dims=n4,
-                          use_kernel=use_kernel, interpret=interpret))
+        main = staged("main", marked(
+            lambda q_rot, centroids, order, offsets, packed, qnorms,
+            live0: ivf_mod.search_stage(
+                q_rot, centroids, order, offsets, packed, qnorms,
+                live0, k=k, nprobe=nprobe, max_cand=max_cand,
+                metric=metric, bits=bits, n4_dims=n4,
+                use_kernel=use_kernel, interpret=interpret)))
         n_head = 3
     elif kind == "HnswIndex":
         ef = knobs["ef"]
         entry, max_level = backend.entry_point, backend.max_level
-        main = marked(lambda q_rot, nbr0, nbr_hi, packed, qnorms, live0:
-                      hnsw_mod.search_stage(
-                          q_rot, packed, qnorms, nbr0, nbr_hi, live0,
-                          entry=entry, ef=ef, k=k, metric=metric, bits=bits,
-                          n4_dims=n4, max_level=max_level,
-                          use_kernel=use_kernel, interpret=interpret))
+        main = staged("main", marked(
+            lambda q_rot, nbr0, nbr_hi, packed, qnorms, live0:
+            hnsw_mod.search_stage(
+                q_rot, packed, qnorms, nbr0, nbr_hi, live0,
+                entry=entry, ef=ef, k=k, metric=metric, bits=bits,
+                n4_dims=n4, max_level=max_level,
+                use_kernel=use_kernel, interpret=interpret)))
         n_head = 2
     else:
         raise TypeError(f"no plan builder for backend {kind}")
@@ -340,7 +390,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
     # Closures capture COUNTS, never the Segment objects: a superseded plan
     # sitting in the LRU must not pin old segments' quantized arrays.
     n_extras = len(extras)
-    scan_stages = [make_scan() for _ in range(n_extras)]
+    scan_stages = [staged("scan", make_scan()) for _ in range(n_extras)]
 
     def merge(q_valid, live, main_vals, main_pos, *side_cols):
         if side_cols:
@@ -354,7 +404,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
                 main_vals, main_pos, side, base_n, k)
         vals = jnp.where(q_valid[:, None], main_vals, NEG)
         return vals, jnp.where(vals > NEG, main_pos, -1)
-    finalize = marked(merge)
+    finalize = staged("merge", marked(merge))
 
     def fn(q, q_valid, live, perm, where_args, *arrays):
         live = masked_live(live, where_args)
@@ -425,10 +475,13 @@ def search_backend(
     knobs = _normalize_knobs(backend, kwargs, k)
     use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
     extras = state.extras if state is not None else []
+    kind = type(backend).__name__
 
     q = jnp.atleast_2d(jnp.asarray(queries))
     b = int(q.shape[0])
     bucket = shape_bucket(b)
+    obs.inc("engine.searches", **{"backend": kind})
+    obs.inc("engine.query_rows", b, **{"backend": kind})
 
     base_n = backend.enc.n
     n_total = int(base_n + sum(s.enc.n for s in extras))
@@ -474,18 +527,31 @@ def search_backend(
         bucket=bucket, k=k, dispatch=(use_kernel, interpret),
         knobs=tuple(sorted(knobs.items())),
     )
-    plan = _CACHE.get_or_build(
-        key, lambda: _build_plan(backend, extras, key=key, knobs=knobs,
-                                 cache=_CACHE, where=where))
+    with obs.timed_span("plan_lookup", histogram="engine.stage_us",
+                        labels={"backend": kind, "stage": "plan_lookup"}) as sp:
+        misses_before = _CACHE.stats.misses
+        plan = _CACHE.get_or_build(
+            key, lambda: _build_plan(backend, extras, key=key, knobs=knobs,
+                                     cache=_CACHE, where=where))
+        if sp is not None:
+            sp.attrs.update(plan=plan_key_digest(key), bucket=bucket, k=k,
+                            hit=_CACHE.stats.misses == misses_before)
 
     if bucket != b:
         q = jnp.pad(q, ((0, bucket - b), (0, 0)))
     q_valid = jnp.asarray(np.arange(bucket) < b)
     perm = None if backend.enc.perm is None else jnp.asarray(backend.enc.perm)
-    vals, pos = plan.fn(q, q_valid, jnp.asarray(live), perm, where_args,
-                        *_bind_arrays(backend, extras))
-    vals = np.asarray(vals)[:b]
-    pos = np.asarray(pos)[:b]
+    with obs.timed_span("execute", histogram="engine.stage_us",
+                        labels={"backend": kind, "stage": "execute"},
+                        attrs={"backend": kind, "rows": b, "bucket": bucket}):
+        vals, pos = plan.fn(q, q_valid, jnp.asarray(live), perm, where_args,
+                            *_bind_arrays(backend, extras))
+    # The device->host transfer is where outstanding async device work
+    # completes: this span/histogram carries the actual device latency.
+    with obs.timed_span("sync", histogram="engine.stage_us",
+                        labels={"backend": kind, "stage": "sync"}):
+        vals = np.asarray(vals)[:b]
+        pos = np.asarray(pos)[:b]
     ids = (backend.ids if not extras else
            np.concatenate([backend.ids] + [s.ids for s in extras]))
     return vals, seg.rows_to_ids(pos, ids)
@@ -528,6 +594,7 @@ def search_sharded(index, queries, k: int, *, where_mask=None,
 
         def on_trace() -> None:
             stats.traces += 1
+            obs.inc("plan_cache.traces")
 
         mesh = index.mesh
         metric, std, seed = enc.metric, enc.std, enc.seed
@@ -547,14 +614,29 @@ def search_sharded(index, queries, k: int, *, where_mask=None,
 
         return SearchPlan(key=key, fn=raw)
 
-    plan = _CACHE.get_or_build(key, build)
+    n_shards = int(getattr(index.mesh, "size", 1))
+    obs.inc("engine.searches", **{"backend": "ShardedMonaVec"})
+    obs.inc("engine.query_rows", b, **{"backend": "ShardedMonaVec"})
+    with obs.timed_span("plan_lookup", histogram="engine.stage_us",
+                        labels={"backend": "ShardedMonaVec",
+                                "stage": "plan_lookup"}) as sp:
+        plan = _CACHE.get_or_build(key, build)
+        if sp is not None:
+            sp.attrs.update(plan=plan_key_digest(key), shards=n_shards)
     if bucket != b:
         q = jnp.pad(q, ((0, bucket - b), (0, 0)))
     perm = None if enc.perm is None else jnp.asarray(enc.perm)
-    vals, gidx = plan.fn(q, enc.packed, enc.qnorms, perm,
-                         jnp.asarray(where_mask) if masked else None)
-    vals = np.asarray(vals)[:b]
-    ids = index.ids[np.asarray(gidx)[:b]]
+    with obs.timed_span("shard_scan", histogram="engine.stage_us",
+                        labels={"backend": "ShardedMonaVec",
+                                "stage": "shard_scan"},
+                        attrs={"shards": n_shards, "rows": b}):
+        vals, gidx = plan.fn(q, enc.packed, enc.qnorms, perm,
+                             jnp.asarray(where_mask) if masked else None)
+    with obs.timed_span("sync", histogram="engine.stage_us",
+                        labels={"backend": "ShardedMonaVec", "stage": "sync"}):
+        vals = np.asarray(vals)[:b]
+        gidx = np.asarray(gidx)
+    ids = index.ids[gidx[:b]]
     if masked:
         # Filtered shards surface inadmissible slots as -inf; convert to the
         # engine-wide sentinel contract (NEG score, SENTINEL_ID id).
@@ -590,6 +672,12 @@ class Searcher:
     interpret: Optional[bool] = None
     knobs: dict = dataclasses.field(default_factory=dict)
     where: Optional[pred.Predicate] = None
+    # Extra metric labels, e.g. (("namespace", ns), ("collection", name))
+    # from TenantRegistry.searcher: when set, every call counts one
+    # ``tenancy.requests`` and lands in the ``tenancy.search_us`` histogram /
+    # ``tenancy.errors`` counter under those labels (per-namespace serving
+    # metrics, DESIGN.md §9).
+    labels: tuple = ()
 
     def __call__(self, queries, *, allow: Optional[Allowlist] = None):
         kw = dict(self.knobs)
@@ -601,7 +689,17 @@ class Searcher:
             kw["allow"] = allow
         if self.where is not None:
             kw["where"] = self.where
-        return self.index.search(queries, self.k, **kw)
+        if not self.labels:
+            return self.index.search(queries, self.k, **kw)
+        labels = dict(self.labels)
+        obs.inc("tenancy.requests", **labels)
+        try:
+            with obs.timed_span("tenant_search",
+                                histogram="tenancy.search_us", labels=labels):
+                return self.index.search(queries, self.k, **kw)
+        except Exception:
+            obs.inc("tenancy.errors", kind="search", **labels)
+            raise
 
     def warmup(self, batch_size: int = 1) -> "Searcher":
         enc = self.index.enc if hasattr(self.index, "enc") else \

@@ -43,16 +43,29 @@ time and serves an extra phase with ``where=Eq("bucket", 0)`` (selectivity
 the filtered phase hitting the SAME plan cache — the predicate mask is a
 fused stage, not a separate pass, so repeat filtered batches are zero-
 retrace just like unfiltered ones.
+
+Observability (DESIGN.md §9): every phase report is read back out of the
+process-wide metrics registry (plan-cache counters, per-stage latency
+histograms, per-namespace request counts) rather than ad-hoc counters;
+
+--metrics-json PATH   write the full registry snapshot (counters, gauges,
+                      per-stage latency histograms with their deterministic
+                      bucket edges) as JSON on exit;
+--metrics-prom PATH   the same snapshot in Prometheus text exposition;
+--trace-sample N      trace every Nth served batch end to end (plan lookup
+                      -> per-stage dispatch -> merge/top-k -> batcher
+                      scatter-back) and dump the span trees per phase.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
-from repro import engine
+from repro import engine, obs
 from repro.core import Eq, MonaVec, TenantRegistry
 from repro.data.synthetic import embedding_corpus, queries_from_corpus
 
@@ -86,6 +99,15 @@ def main() -> None:
                          "filtered phase with where=Eq('bucket', 0) — "
                          "selectivity 1/N through the compiled predicate "
                          "stage (DESIGN.md §8)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot (DESIGN.md §9) "
+                         "as JSON on exit")
+    ap.add_argument("--metrics-prom", default=None, metavar="PATH",
+                    help="write the metrics snapshot in Prometheus text "
+                         "exposition format on exit")
+    ap.add_argument("--trace-sample", type=int, default=0, metavar="N",
+                    help="trace every Nth served batch and dump its span "
+                         "tree (0 = off)")
     ap.add_argument("--micro-batch", type=int, default=0, metavar="R",
                     help="serve each batch as R coalesced requests through "
                          "the engine MicroBatcher (0 = direct searcher)")
@@ -171,6 +193,7 @@ def main() -> None:
     batcher = (engine.MicroBatcher(reg, use_kernel=use_kernel,
                                    interpret=interpret)
                if args.micro_batch else None)
+    tracer = obs.Tracer(sample_every=args.trace_sample)
 
     def phase_queries(b: int) -> np.ndarray:
         if corpus is not None:
@@ -206,24 +229,38 @@ def main() -> None:
         # compile; measured QPS must not include it (at small --batches the
         # old numbers were dominated by compile time).
         serve_batch(search, phase_queries(0), where)
-        before = engine.plan_cache().stats.snapshot()
-        mb_before = batcher.stats.snapshot() if batcher is not None else None
+        # The phase report reads the shared metrics registry (DESIGN.md §9):
+        # plan-cache counters and batcher coalescing, diffed over the
+        # measured window — the same numbers --metrics-json exports.
+        before = obs.registry().snapshot()
         total, t0 = 0, time.time()
         for b in range(args.batches):
             q = phase_queries(b)
-            serve_batch(search, q, where)
+            with tracer.maybe(f"batch:{label}", phase=label, batch=b,
+                              rows=len(q)):
+                serve_batch(search, q, where)
             total += len(q)
         dt = time.time() - t0
-        d = engine.plan_cache().stats.since(before)
+        d = obs.counter_deltas(obs.registry().snapshot(), before)
         print(f"[serve] {label}: {total} queries in {dt:.2f}s -> "
               f"{total / dt:.0f} QPS "
               f"(deterministic: rerun reproduces identical ids)")
-        mb = batcher.stats.since(mb_before) if batcher is not None else None
-        print(f"[serve] {label}: plan cache hits={d.hits} misses={d.misses} "
-              f"retraces={d.traces} (measured window, post-warm-up)"
-              + (f"; micro-batch: {mb.requests} requests -> "
-                 f"{mb.executions} plan executions"
-                 if mb is not None else ""))
+        line = (f"[serve] {label}: plan cache "
+                f"hits={obs.counter_total(d, 'plan_cache.hits')} "
+                f"misses={obs.counter_total(d, 'plan_cache.misses')} "
+                f"retraces={obs.counter_total(d, 'plan_cache.traces')} "
+                f"evictions={obs.counter_total(d, 'plan_cache.evictions')} "
+                f"(measured window, post-warm-up)")
+        if batcher is not None:
+            line += (f"; micro-batch: "
+                     f"{obs.counter_total(d, 'batcher.requests')} requests "
+                     f"-> {obs.counter_total(d, 'batcher.executions')} "
+                     f"plan executions")
+        print(line)
+        for tr in tracer.drain():
+            print(f"[trace] sampled span tree ({label}):")
+            for ln in tr.render().splitlines():
+                print(f"[trace]   {ln}")
 
     run_phase("static")
 
@@ -267,6 +304,20 @@ def main() -> None:
             print(f"[serve] saved mutated index to {args.save} "
                   f"(multi-segment layout)" if not live.mut.is_static
                   else f"[serve] saved {args.save}")
+
+    # Final observability export (DESIGN.md §9): the whole run's registry —
+    # per-stage latency histograms with their deterministic bucket edges,
+    # plan-cache hit/miss/trace/eviction counters, per-namespace request
+    # counts, batcher coalescing — as JSON and/or Prometheus text.
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(obs.registry().snapshot(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[serve] wrote metrics snapshot to {args.metrics_json}")
+    if args.metrics_prom:
+        with open(args.metrics_prom, "w") as f:
+            f.write(obs.registry().to_prometheus())
+        print(f"[serve] wrote Prometheus exposition to {args.metrics_prom}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,181 @@
+"""benchmarks.trajectory: the perf-trajectory gate.
+
+Synthetic BENCH_*.json run/baseline directories drive every branch of the
+gate: clean pass, each metric's regression direction (qps down, recall
+down, bytes up), tolerance behavior, coverage regressions (a baseline
+record the current run stopped reporting), new-coverage records, and
+--write-baseline re-seeding.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import trajectory
+
+
+def _write_bench(dirpath, bench, records, status="ok"):
+    payload = {"bench": bench, "status": status, "smoke": True,
+               "csv_rows": [{"name": f"{bench}/x", "us_per_call": 1.0,
+                             "derived": "noise"}],
+               "records": records}
+    path = dirpath / f"BENCH_{bench}.json"
+    path.write_text(json.dumps(payload))
+    return path
+
+
+def _rec(qps=1000.0, recall=0.9, bpv=32, **identity):
+    base = {"backend": "bruteforce", "n": 2048, "k": 10}
+    base.update(identity)
+    base.update(qps=qps, recall_at_10=recall, bytes_per_vector=bpv)
+    return base
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    run = tmp_path / "run"
+    base = tmp_path / "base"
+    run.mkdir()
+    base.mkdir()
+    return run, base
+
+
+def _gate(run, base, *extra):
+    return trajectory.run(["--run-dir", str(run),
+                           "--baseline-dir", str(base), *extra])
+
+
+class TestGate:
+    def test_identical_run_passes(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(run, "filtered", [_rec(), _rec(n=4096)])
+        _write_bench(base, "filtered", [_rec(), _rec(n=4096)])
+        assert _gate(run, base) == 0
+        assert "no regressions" in capsys.readouterr().out
+
+    def test_qps_regression_fails(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(qps=1000)])
+        _write_bench(run, "filtered", [_rec(qps=500)])
+        assert _gate(run, base, "--qps-tol", "0.85") == 1
+        assert "qps regressed" in capsys.readouterr().err
+
+    def test_qps_tolerance_absorbs_noise(self, dirs):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(qps=1000)])
+        _write_bench(run, "filtered", [_rec(qps=900)])
+        assert _gate(run, base, "--qps-tol", "0.85") == 0
+        assert _gate(run, base, "--qps-tol", "0.95") == 1
+
+    def test_qps_improvement_passes(self, dirs):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(qps=1000)])
+        _write_bench(run, "filtered", [_rec(qps=5000)])
+        assert _gate(run, base) == 0
+
+    def test_any_recall_drop_fails_by_default(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(recall=0.925)])
+        _write_bench(run, "filtered", [_rec(recall=0.924)])
+        assert _gate(run, base) == 1
+        assert "recall_at_10 regressed" in capsys.readouterr().err
+
+    def test_recall_tol_allows_epsilon(self, dirs):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(recall=0.925)])
+        _write_bench(run, "filtered", [_rec(recall=0.920)])
+        assert _gate(run, base, "--recall-tol", "0.01") == 0
+
+    def test_bytes_increase_fails(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(bpv=32)])
+        _write_bench(run, "filtered", [_rec(bpv=33)])
+        assert _gate(run, base) == 1
+        assert "bytes_per_vector regressed" in capsys.readouterr().err
+
+    def test_bytes_decrease_passes(self, dirs):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(bpv=32)])
+        _write_bench(run, "filtered", [_rec(bpv=16)])
+        assert _gate(run, base) == 0
+
+    def test_missing_record_is_coverage_regression(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(), _rec(n=4096)])
+        _write_bench(run, "filtered", [_rec()])
+        assert _gate(run, base) == 1
+        assert "record missing" in capsys.readouterr().err
+
+    def test_new_record_is_noted_not_gated(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec()])
+        _write_bench(run, "filtered", [_rec(), _rec(n=4096, qps=1.0)])
+        assert _gate(run, base) == 0
+        assert "no baseline" in capsys.readouterr().out
+
+    def test_empty_baseline_dir_is_setup_error(self, dirs, capsys):
+        run, base = dirs
+        _write_bench(run, "filtered", [_rec()])
+        assert _gate(run, base) == 2
+        assert "--write-baseline" in capsys.readouterr().err
+
+
+class TestMatching:
+    def test_identity_excludes_metric_fields(self, dirs):
+        """Same identity, different metric values -> matched and compared
+        (not treated as a new record)."""
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(qps=1000)])
+        _write_bench(run, "filtered", [_rec(qps=999)])
+        assert _gate(run, base, "--qps-tol", "0.99") == 0
+
+    def test_different_identity_not_matched(self, dirs):
+        run, base = dirs
+        _write_bench(base, "filtered", [_rec(n=2048)])
+        _write_bench(run, "filtered", [_rec(n=4096)])
+        assert _gate(run, base) == 1   # baseline n=2048 went missing
+
+    def test_us_per_call_never_gated(self, dirs):
+        """Raw wall time is machine noise: 100x slower must still pass."""
+        run, base = dirs
+        _write_bench(base, "filtered",
+                     [dict(_rec(), us_per_call=100.0)])
+        _write_bench(run, "filtered",
+                     [dict(_rec(), us_per_call=10_000.0)])
+        assert _gate(run, base) == 0
+
+    def test_records_without_metrics_skipped(self, dirs):
+        run, base = dirs
+        _write_bench(base, "engine", [{"backend": "b", "note": "no metrics"}])
+        _write_bench(run, "engine", [])
+        # The baseline record carried nothing gateable -> empty baseline.
+        assert _gate(run, base) == 2
+
+
+class TestWriteBaseline:
+    def test_seeds_records_only(self, dirs):
+        run, base = dirs
+        _write_bench(run, "filtered", [_rec()])
+        _write_bench(run, "empty", [])   # record-less files are not seeded
+        assert _gate(run, base, "--write-baseline") == 0
+        files = sorted(p.name for p in base.iterdir())
+        assert files == ["BENCH_filtered.json"]
+        payload = json.loads((base / "BENCH_filtered.json").read_text())
+        assert payload["records"] == [_rec()]
+        assert "csv_rows" not in payload   # timing noise stays out of git
+
+    def test_reseeded_baseline_gates_clean(self, dirs):
+        run, base = dirs
+        _write_bench(run, "filtered", [_rec(), _rec(n=4096)])
+        assert _gate(run, base, "--write-baseline") == 0
+        assert _gate(run, base) == 0
+
+
+class TestCommittedBaselines:
+    def test_repo_baselines_exist_and_parse(self):
+        """The committed benchmarks/baselines/ seed is non-empty and every
+        record carries at least one gateable metric."""
+        records = trajectory.load_records(trajectory._BASELINE_DIR)
+        assert records, "benchmarks/baselines/ must be seeded"
+        for key, metrics in records.items():
+            assert any(m in metrics for m in trajectory.GATED_METRICS), key
