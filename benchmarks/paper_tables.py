@@ -3,14 +3,13 @@ scale factors documented inline and in EXPERIMENTS.md)."""
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (BruteForceIndex, GlobalStd, HnswIndex, IvfFlatIndex,
-                        MonaVec)
+from repro.core import (BruteForceIndex, GlobalStd, HnswIndex,
+                        IvfFlatIndex)
 from repro.core import lloydmax, quantize as qz, scoring
 from repro.core.standardize import PerDimWhiten
 from repro.data import synthetic as syn

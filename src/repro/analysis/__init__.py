@@ -1,0 +1,28 @@
+# repro.analysis (DESIGN.md §10): the machine-checked determinism contract.
+#
+# MonaVec's headline guarantee — byte-identical results everywhere — rests on
+# invariants that used to live only in DESIGN.md prose and example-based
+# tests (arrays are staged as arguments, never closure constants; full-scan
+# dots run in fixed 8-row chunks behind an optimization_barrier; host-side
+# timers never enter a traced function; predicate constants ride as dynamic
+# args).  This package checks them mechanically on every commit:
+#
+#   * jaxpr_audit  — traces every registered SearchPlan stage across a
+#                    backend × metric × bits × lifecycle grid and flags
+#                    determinism hazards in the ClosedJaxprs;
+#   * invariants   — the declarative registry mapping each DESIGN.md
+#                    contract to the checks that enforce it;
+#   * lint         — AST-level source rules the jaxpr cannot see;
+#   * audit        — the CLI (`python -m repro.analysis.audit`) emitting
+#                    AUDIT_REPORT.json against the committed allowlist.
+
+from .findings import (Allowlist, Finding, fingerprint, load_allowlist,
+                       render_report)
+from .invariants import INVARIANTS, Invariant, invariant_for_check
+from .jaxpr_audit import StageCapture, audit_captures, audit_jaxpr
+
+__all__ = [
+    "Allowlist", "Finding", "INVARIANTS", "Invariant", "StageCapture",
+    "audit_captures", "audit_jaxpr", "fingerprint", "invariant_for_check",
+    "load_allowlist", "render_report",
+]

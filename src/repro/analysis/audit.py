@@ -1,0 +1,196 @@
+"""``python -m repro.analysis.audit`` — the determinism audit CLI (CI gate).
+
+One run = four passes, one report, one exit code:
+
+1. **grid**     — drive the real engine over the backend × metric × bits ×
+   lifecycle grid (analysis/grid.py), capture every compiled stage through
+   the plan observer, and audit each ClosedJaxpr (analysis/jaxpr_audit.py);
+2. **coverage** — every PLAN_STAGES export must have been witnessed;
+3. **retrace**  — rebuild a small plan under ``jax.checking_leaks`` and
+   replay the same bucket: any stage retrace on a warm cache (or a leaked
+   tracer) is a finding (INV-ZERO-RETRACE);
+4. **lint**     — the AST source rules (analysis/lint.py).
+
+Findings are matched against the committed allowlist
+(``src/repro/analysis/allowlist.json``); the report (AUDIT_REPORT.json)
+lists active, allowlisted, and STALE entries — a stale entry fails the run,
+so the allowlist cannot rot and tampering with it breaks CI.
+
+``--inject-hazard`` swaps the grid for one deliberately broken synthetic
+stage (closure-captured corpus + unbarriered full-scan dot) and must exit
+non-zero naming BOTH hazards — CI runs it to prove the gate can fail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .findings import (Allowlist, Finding, load_allowlist, render_report)
+from .invariants import annotate
+from .jaxpr_audit import StageCapture, audit_captures
+
+DEFAULT_ALLOWLIST = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "allowlist.json")
+
+
+def inject_hazard_capture() -> StageCapture:
+    """A stage written exactly the way stages must NOT be written: the
+    corpus rides in the closure (const-array) and the scoring dot runs over
+    the whole corpus with no chunk/barrier structure (full-scan-dot)."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0xBAD)
+    bad_corpus = jnp.asarray(rng.randn(64, 16).astype(np.float32))
+
+    def hazardous_stage(q: "jnp.ndarray") -> "jnp.ndarray":
+        return q @ bad_corpus.T
+
+    q = jnp.asarray(rng.randn(12, 16).astype(np.float32))
+    return StageCapture(
+        backend="SelfTest", stage="injected_hazard",
+        fn=hazardous_stage, args=(q,),
+        context={"n_corpus": 64, "label": "self-test/injected",
+                 "labels": ["self-test/injected"]})
+
+
+def retrace_findings() -> List[Finding]:
+    """INV-ZERO-RETRACE: build + warm a plan under jax.checking_leaks, then
+    replay the same shape bucket — the plan cache's trace counter must not
+    move, and no tracer may escape a stage."""
+    import jax
+
+    from repro.core.api import MonaVec
+    from repro.engine import plan as plan_mod
+
+    rng = np.random.RandomState(99)
+    vecs = rng.randn(40, 16).astype(np.float32)
+    q = rng.randn(3, 16).astype(np.float32)
+    out: List[Finding] = []
+    try:
+        with jax.checking_leaks():
+            idx = MonaVec.build(vecs, metric="cosine", bits=4, seed=0xA11CE)
+            idx.search(q, k=4)                       # cold: traces here
+            before = plan_mod.plan_cache().stats.traces
+            for step in range(3):
+                idx.search(q + np.float32(0.0), k=4)  # warm, same bucket
+            after = plan_mod.plan_cache().stats.traces
+    except Exception as exc:
+        out.append(annotate(Finding(
+            check="tracer-leak", site="engine/plan",
+            detail=f"jax.checking_leaks raised during plan replay: {exc}",
+            signature=("tracer-leak", type(exc).__name__))))
+        return out
+    if after != before:
+        out.append(annotate(Finding(
+            check="unexpected-retrace", site="engine/plan",
+            detail=(f"{after - before} stage trace(s) on warm same-bucket "
+                    f"searches — the plan cache key is unstable"),
+            signature=("unexpected-retrace", "warm-bucket"))))
+    return out
+
+
+def run_audit(
+    *,
+    inject_hazard: bool = False,
+    skip_retrace: bool = False,
+    skip_lint: bool = False,
+    allowlist_path: str = DEFAULT_ALLOWLIST,
+    progress: bool = False,
+) -> dict:
+    """Execute the full audit; returns the report dict (see render_report)."""
+    say = (lambda msg: print(msg, file=sys.stderr, flush=True)) if progress \
+        else (lambda msg: None)
+
+    findings: List[Finding] = []
+    extra = {"mode": "inject-hazard" if inject_hazard else "full"}
+
+    if inject_hazard:
+        say("auditing injected hazardous stage (gate self-test)")
+        findings.extend(audit_captures([inject_hazard_capture()]))
+    else:
+        from . import grid as grid_mod
+
+        say("collecting stage captures over the audit grid")
+        captures = grid_mod.collect_captures(
+            progress=(lambda label: say(f"  grid point: {label}")))
+        say(f"auditing {len(captures)} captured stages")
+        findings.extend(audit_captures(captures))
+        findings.extend(grid_mod.coverage_findings(captures))
+        extra["captures"] = len(captures)
+        extra["grid_points"] = len(grid_mod.default_grid())
+        if not skip_retrace:
+            say("retrace / tracer-leak pass (jax.checking_leaks)")
+            findings.extend(retrace_findings())
+        if not skip_lint:
+            from .lint import lint_tree
+
+            say("AST lint pass")
+            findings.extend(lint_tree())
+
+    allow = (load_allowlist(allowlist_path)
+             if os.path.exists(allowlist_path) else Allowlist())
+    # The injected-hazard mode audits ONE synthetic stage; the allowlist
+    # still applies (so a tampered allowlist cannot mask the self-test) but
+    # its real entries are necessarily stale there — ignore staleness.
+    report = render_report(findings, allow,
+                           stale_is_error=not inject_hazard, extra=extra)
+    try:
+        import jax
+        report["environment"] = {"jax": jax.__version__,
+                                 "backend": jax.default_backend()}
+    except Exception:
+        pass
+    return report
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="jaxpr-level determinism audit over the stage grid")
+    parser.add_argument("--report", default="AUDIT_REPORT.json",
+                        help="path for the JSON report ('-' for stdout only)")
+    parser.add_argument("--allowlist", default=DEFAULT_ALLOWLIST)
+    parser.add_argument("--inject-hazard", action="store_true",
+                        help="audit a deliberately hazardous synthetic stage "
+                             "instead of the grid; MUST exit non-zero")
+    parser.add_argument("--skip-retrace", action="store_true")
+    parser.add_argument("--skip-lint", action="store_true")
+    parser.add_argument("--quiet", action="store_true")
+    args = parser.parse_args(argv)
+
+    report = run_audit(
+        inject_hazard=args.inject_hazard,
+        skip_retrace=args.skip_retrace,
+        skip_lint=args.skip_lint,
+        allowlist_path=args.allowlist,
+        progress=not args.quiet,
+    )
+
+    if args.report != "-":
+        with open(args.report, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    for f in report["findings"]:
+        mark = "ALLOWED" if f["allowlisted"] else "ERROR  "
+        print(f"{mark} {f['check']:26s} {f['site']}  [{f['invariant']}]")
+        print(f"        {f['detail']}")
+    for fp in report["stale_allowlist_entries"]:
+        print(f"STALE   allowlist entry {fp} matched no finding — remove it "
+              f"(or the audit was tampered with)")
+    counts = report["counts"]
+    verdict = "OK" if report["ok"] else "FAIL"
+    print(f"{verdict}: {counts['active']} active, "
+          f"{counts['allowlisted']} allowlisted, "
+          f"{counts['stale_allowlist']} stale allowlist entries")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

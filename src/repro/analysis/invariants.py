@@ -1,0 +1,131 @@
+"""The declarative invariant registry: DESIGN.md contract -> enforcing checks.
+
+Each ``Invariant`` names one clause of the determinism contract and lists
+the check codes (jaxpr_audit.CHECKS and lint.RULES) that enforce it
+mechanically.  Findings cite the invariant they break, so an AUDIT_REPORT
+line reads as "which promise in DESIGN.md did this code violate", not just
+"which pattern matched".  DESIGN.md §10 renders this registry as a table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from .findings import Finding
+
+
+@dataclasses.dataclass(frozen=True)
+class Invariant:
+    id: str
+    design_ref: str
+    summary: str
+    checks: Tuple[str, ...]
+
+
+INVARIANTS: Tuple[Invariant, ...] = (
+    Invariant(
+        id="INV-ARGS-NOT-CONSTS",
+        design_ref="DESIGN.md §7.2",
+        summary=(
+            "Every corpus-scale or arbitrary-valued array (packed codes, "
+            "qnorms, CSR, graph tables, masks, perm, predicate keys) is a "
+            "stage ARGUMENT, never a closure constant: XLA constant-folds "
+            "captured arrays and folded float arithmetic is not guaranteed "
+            "bit-identical to the runtime op sequence.  Exempt: scalars, "
+            "uniform fills, integer iotas, and seeded ±1/0 factors (the "
+            "RHDH signs and Hadamard blocks — exact under multiplication, "
+            "and their seed is part of the plan fingerprint)."),
+        checks=("const-array", "stage-asarray"),
+    ),
+    Invariant(
+        id="INV-CHUNKED-DOT",
+        design_ref="DESIGN.md §5, §7.3",
+        summary=(
+            "Full-corpus float dots run in fixed 8-row query chunks behind "
+            "an optimization_barrier (kernels/ref.py) or inside the Pallas "
+            "kernel's fixed tiling: XLA's dot strategy — and hence the last "
+            "ulp — otherwise varies with the batch shape.  Full-corpus "
+            "float reductions outside that structure are flagged too."),
+        checks=("full-scan-dot", "full-reduce"),
+    ),
+    Invariant(
+        id="INV-NO-X64",
+        design_ref="DESIGN.md §8",
+        summary=(
+            "No 64-bit float/int values inside a compiled stage: JAX runs "
+            "with x64 disabled, and the u64 predicate keys are lowered to "
+            "uint32 (hi, lo) planes precisely so device masks match the "
+            "host oracle without x64.  A float64/int64/uint64 aval in a "
+            "stage jaxpr means an implicit-x64 or dtype-widening leak."),
+        checks=("x64-leak",),
+    ),
+    Invariant(
+        id="INV-NO-HOST-IN-TRACE",
+        design_ref="DESIGN.md §9",
+        summary=(
+            "Host-side effects never enter a traced function: no pure/io/"
+            "debug callbacks or live RNG primitives inside stage jaxprs, no "
+            "timed_span/registry calls or time.* reads inside jit-decorated "
+            "bodies (obs timers wrap the CALL to a compiled stage — bit-"
+            "identity with tracing on/off is asserted on raw bytes)."),
+        checks=("callback-prim", "rng-prim", "obs-in-jit", "host-time"),
+    ),
+    Invariant(
+        id="INV-SEEDED-RANDOMNESS",
+        design_ref="DESIGN.md §2, §6",
+        summary=(
+            "All randomness is seeded and replayable: stage-building "
+            "modules never call unseeded random.* / np.random.* — segment "
+            "seeds derive from (root, ordinal) and the RHDH sign stream "
+            "from the header seed, so the same op sequence reproduces the "
+            "same packed bytes on any platform."),
+        checks=("unseeded-random",),
+    ),
+    Invariant(
+        id="INV-READER-VALIDATES",
+        design_ref="DESIGN.md §6",
+        summary=(
+            ".mvec bytes are parsed only through mvec_format._Reader, which "
+            "length-checks every block before np.frombuffer sees it; a "
+            "frombuffer anywhere else can misparse a truncated file into "
+            "silently-wrong (but deterministic-looking) arrays."),
+        checks=("frombuffer-outside-reader",),
+    ),
+    Invariant(
+        id="INV-ZERO-RETRACE",
+        design_ref="DESIGN.md §7.1",
+        summary=(
+            "Same plan key ⇒ zero retraces, and no tracer leaks out of a "
+            "stage: the audit replays a small plan grid under "
+            "jax.checking_leaks and fails on any unexpected trace."),
+        checks=("unexpected-retrace", "tracer-leak"),
+    ),
+    Invariant(
+        id="INV-STAGE-COVERAGE",
+        design_ref="DESIGN.md §10",
+        summary=(
+            "Every stage factory a module exports via PLAN_STAGES is "
+            "actually captured by the audit grid — a new stage cannot ship "
+            "outside the auditor's view."),
+        checks=("uncovered-stage",),
+    ),
+)
+
+
+_BY_CHECK: Dict[str, Invariant] = {
+    check: inv for inv in INVARIANTS for check in inv.checks
+}
+
+
+def invariant_for_check(check: str) -> Optional[Invariant]:
+    return _BY_CHECK.get(check)
+
+
+def annotate(finding: Finding) -> Finding:
+    """Return a copy of ``finding`` citing the invariant its check enforces."""
+    inv = invariant_for_check(finding.check)
+    if inv is None:
+        return finding
+    return dataclasses.replace(finding, invariant=inv.id,
+                               design_ref=inv.design_ref)

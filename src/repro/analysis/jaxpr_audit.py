@@ -1,0 +1,306 @@
+"""Jaxpr-level determinism auditor (DESIGN.md §10).
+
+Walks ``ClosedJaxpr`` s of captured SearchPlan stages — the exact functions
+``engine/plan.py`` compiles, captured through its stage observer with their
+real operands — and flags determinism hazards:
+
+* ``const-array``      — closure-captured arrays baked into the trace
+                         (INV-ARGS-NOT-CONSTS): XLA constant-folds them and
+                         folded float arithmetic need not match the runtime
+                         op sequence bit-for-bit.  Exemptions (documented in
+                         invariants.py): scalars/tiny consts, uniform fills,
+                         integer iotas, seeded ±1/0 factors (RHDH signs and
+                         Hadamard blocks), and ≤16-entry float tables (the
+                         Lloyd-Max codebooks).
+* ``full-scan-dot``    — a query×corpus f32 dot executed OUTSIDE the fixed
+                         8-row-chunk + optimization_barrier structure of
+                         ``kernels/ref.py`` (or the Pallas kernel's fixed
+                         tiling): the last ulp then varies with batch shape.
+* ``full-reduce``      — a corpus-length float reduction outside that
+                         structure (same re-association hazard).
+* ``x64-leak``         — float64/int64/uint64 avals inside a stage (JAX
+                         runs x64-disabled; predicate keys are (hi, lo)
+                         uint32 planes precisely to keep it that way).
+* ``callback-prim`` /
+  ``rng-prim``         — pure/io/debug callbacks or live PRNG primitives
+                         inside a compiled stage (host state or key streams
+                         inside the traced program).
+
+Checks are structural: they recurse through every sub-jaxpr (pjit, scan,
+while, cond branches, shard_map, custom_jvp/vjp bodies) carrying ancestor
+context, so "this dot is inside the barriered 8-row chunk scan" is decided
+from the program, not from naming conventions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .findings import Finding
+from .invariants import annotate
+
+#: The pinned query-chunk granularity of every full-scan dot
+#: (kernels/ref.py _ROW_CHUNK == the Pallas kernels' block_q grain).
+ROW_CHUNK = 8
+
+#: Size above which an integer/bool constant counts as corpus-scale.
+INT_CONST_LIMIT = 1024
+#: Size above which a non-exempt float constant is a hazard.  16 admits the
+#: 4-bit Lloyd-Max codebook; anything larger must be ±1/0 (RHDH factors).
+FLOAT_CONST_LIMIT = 16
+
+_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+})
+_RNG_PRIMS = frozenset({
+    "threefry2x32", "random_seed", "random_bits", "random_wrap",
+    "random_fold_in", "random_unwrap", "random_gamma", "rng_bit_generator",
+})
+_X64_DTYPES = frozenset({"float64", "int64", "uint64", "complex128"})
+
+CHECKS = (
+    "const-array", "full-scan-dot", "full-reduce", "x64-leak",
+    "callback-prim", "rng-prim",
+)
+
+
+@dataclasses.dataclass
+class StageCapture:
+    """One stage invocation captured from the engine's observer hook."""
+
+    backend: str                  # plan backend kind (or "SelfTest")
+    stage: str                    # plan stage name ("rotate", "scan", ...)
+    fn: Callable[..., Any]        # the UN-jitted stage callable
+    args: Tuple[Any, ...]         # the concrete operands it was called with
+    context: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # context keys used by checks:
+    #   n_corpus  — smallest per-segment row count of the grid index; any
+    #               rank-2 float dot with a free dim >= n_corpus is treated
+    #               as a full-corpus scan.
+    #   label     — human grid-point label for reports.
+
+    @property
+    def site(self) -> str:
+        return f"{self.backend}/{self.stage}"
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking.
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(params: Dict[str, Any]) -> Iterable[Any]:
+    """Every ClosedJaxpr reachable from one eqn's params (scan/while/cond/
+    pjit/shard_map/custom_* all stash theirs under different keys)."""
+    from jax.extend import core as jex_core  # type: ignore[import-not-found]
+    closed = getattr(jex_core, "ClosedJaxpr", None) or jax.core.ClosedJaxpr
+    for value in params.values():
+        if isinstance(value, closed):
+            yield value
+        elif isinstance(value, (tuple, list)):
+            for item in value:
+                if isinstance(item, closed):
+                    yield item
+
+
+def _walk(
+    closed: Any,
+    visit: Callable[[Any, Tuple[str, ...], bool], None],
+    ancestors: Tuple[str, ...] = (),
+    barrier_seen: bool = False,
+) -> None:
+    """Depth-first over eqns; ``visit(eqn, ancestors, barrier_seen)`` gets
+    the enclosing primitive chain and whether any enclosing level (this one
+    included) contains an optimization_barrier."""
+    jaxpr = closed.jaxpr
+    level_barrier = barrier_seen or any(
+        eqn.primitive.name == "optimization_barrier" for eqn in jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        visit(eqn, ancestors, level_barrier)
+        for sub in _sub_jaxprs(eqn.params):
+            _walk(sub, visit, ancestors + (eqn.primitive.name,),
+                  level_barrier)
+
+
+def _all_consts(closed: Any) -> List[Any]:
+    """Constants at every nesting level of a ClosedJaxpr."""
+    out = list(closed.consts)
+    seen = {id(closed)}
+
+    def rec(c: Any) -> None:
+        for eqn in c.jaxpr.eqns:
+            for sub in _sub_jaxprs(eqn.params):
+                if id(sub) in seen:
+                    continue
+                seen.add(id(sub))
+                out.extend(sub.consts)
+                rec(sub)
+
+    rec(closed)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Checks.
+# ---------------------------------------------------------------------------
+
+def _classify_const(value: Any) -> Optional[str]:
+    """None = exempt; otherwise a stable hazard class string."""
+    arr = np.asarray(value)
+    if arr.ndim == 0 or arr.size <= 8:
+        return None                                   # scalar / tiny
+    flat = arr.reshape(-1)
+    first = flat[0]
+    if bool(np.all(flat == first)):
+        return None                                   # uniform fill
+    if arr.dtype.kind in "iub":
+        if arr.ndim == 1 and bool(np.all(np.diff(flat.astype(np.int64)) == 1)):
+            return None                               # iota / arange
+        if arr.size <= INT_CONST_LIMIT:
+            return None
+        return f"int-array[{arr.dtype}]"
+    if arr.dtype.kind == "f":
+        if bool(np.all(np.isin(flat, (-1.0, 0.0, 1.0)))):
+            return None                               # seeded ±1/0 factor
+        if arr.size <= FLOAT_CONST_LIMIT:
+            return None                               # Lloyd-Max table
+        return f"float-array[{arr.dtype}]"
+    return f"array[{arr.dtype}]"
+
+
+def _check_consts(closed: Any, cap: StageCapture) -> List[Finding]:
+    found: List[Finding] = []
+    for const in _all_consts(closed):
+        cls = _classify_const(const)
+        if cls is None:
+            continue
+        arr = np.asarray(const)
+        found.append(Finding(
+            check="const-array",
+            site=cap.site,
+            detail=(
+                f"stage closes over a {cls} constant (ndim={arr.ndim}): "
+                f"arrays must ride as stage ARGUMENTS — XLA constant-folds "
+                f"captured arrays and folded arithmetic is not bit-stable"),
+            signature=("const-array", cls, f"ndim={arr.ndim}"),
+        ))
+    return found
+
+
+def _dot_free_dims(eqn: Any) -> Optional[Tuple[int, int, int]]:
+    """(lhs_free, rhs_free, n_batch) row/col products of a dot_general."""
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = (v.aval for v in eqn.invars[:2])
+    lf = int(np.prod([d for i, d in enumerate(lhs.shape)
+                      if i not in lc and i not in lb] or [1]))
+    rf = int(np.prod([d for i, d in enumerate(rhs.shape)
+                      if i not in rc and i not in rb] or [1]))
+    return lf, rf, len(lb)
+
+
+def _chunk_safe(ancestors: Tuple[str, ...], barrier_seen: bool,
+                lhs_free: int) -> bool:
+    if "pallas_call" in ancestors:
+        return True                        # kernel: fixed tiling by build
+    looped = any(a in ("scan", "while") for a in ancestors)
+    return looped and barrier_seen and lhs_free == ROW_CHUNK
+
+
+def _check_program(closed: Any, cap: StageCapture) -> List[Finding]:
+    found: List[Finding] = []
+    n_corpus = int(cap.context.get("n_corpus", 0))
+
+    def visit(eqn: Any, ancestors: Tuple[str, ...], barrier: bool) -> None:
+        name = eqn.primitive.name
+        if name in _CALLBACK_PRIMS:
+            found.append(Finding(
+                check="callback-prim", site=cap.site,
+                detail=f"host callback primitive '{name}' inside a compiled "
+                       f"stage",
+                signature=("callback-prim", name)))
+        elif name in _RNG_PRIMS:
+            found.append(Finding(
+                check="rng-prim", site=cap.site,
+                detail=f"PRNG primitive '{name}' inside a compiled stage "
+                       f"(key streams must resolve at trace time from the "
+                       f"fingerprinted seed)",
+                signature=("rng-prim", name)))
+        elif name == "dot_general" and n_corpus:
+            out_dtype = eqn.outvars[0].aval.dtype
+            lhs, rhs = (v.aval for v in eqn.invars[:2])
+            if (np.issubdtype(out_dtype, np.floating)
+                    and lhs.ndim == 2 and rhs.ndim == 2):
+                dims = _dot_free_dims(eqn)
+                if dims is not None:
+                    lf, rf, nb = dims
+                    if (nb == 0 and rf >= n_corpus
+                            and not _chunk_safe(ancestors, barrier, lf)):
+                        found.append(Finding(
+                            check="full-scan-dot", site=cap.site,
+                            detail=(
+                                f"[{lf} x d] @ [d x {rf}] full-corpus float "
+                                f"dot outside the fixed {ROW_CHUNK}-row "
+                                f"chunk + optimization_barrier structure "
+                                f"(kernels/ref.py): last ulp varies with "
+                                f"batch shape"),
+                            signature=("full-scan-dot", str(out_dtype))))
+        elif name in ("reduce_sum", "reduce_prod", "cumsum") and n_corpus:
+            aval = eqn.invars[0].aval
+            if np.issubdtype(aval.dtype, np.floating):
+                axes = eqn.params.get("axes", eqn.params.get("axis", ()))
+                axes = (axes,) if isinstance(axes, int) else axes
+                reduced = int(np.prod([aval.shape[a] for a in axes] or [1]))
+                if (reduced >= n_corpus
+                        and not _chunk_safe(ancestors, barrier, ROW_CHUNK)):
+                    found.append(Finding(
+                        check="full-reduce", site=cap.site,
+                        detail=(
+                            f"float reduction over {reduced} elements "
+                            f"(corpus-scale) outside the pinned chunk "
+                            f"structure: reduction order is shape-dependent"),
+                        signature=("full-reduce", str(aval.dtype))))
+        for var in tuple(eqn.invars) + tuple(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and str(dtype) in _X64_DTYPES:
+                found.append(Finding(
+                    check="x64-leak", site=cap.site,
+                    detail=f"64-bit aval ({dtype}) in primitive '{name}': "
+                           f"stages must stay in 32-bit space (u64 keys are "
+                           f"split into uint32 planes)",
+                    signature=("x64-leak", str(dtype), name)))
+
+    _walk(closed, visit)
+    return found
+
+
+def audit_jaxpr(closed: Any, cap: StageCapture) -> List[Finding]:
+    """All findings for one stage's ClosedJaxpr (deduplicated, annotated
+    with the invariant each check enforces)."""
+    raw = _check_consts(closed, cap) + _check_program(closed, cap)
+    seen: Dict[str, Finding] = {}
+    for f in raw:
+        seen.setdefault(f.fingerprint(), f)
+    return [annotate(f) for f in seen.values()]
+
+
+def audit_captures(captures: Sequence[StageCapture]) -> List[Finding]:
+    """make_jaxpr every capture and audit it; findings deduplicate across
+    the whole grid by fingerprint (one entry per structural hazard)."""
+    out: Dict[str, Finding] = {}
+    for cap in captures:
+        try:
+            closed = jax.make_jaxpr(cap.fn)(*cap.args)
+        except Exception as exc:   # a stage that cannot re-trace is itself
+            f = annotate(Finding(   # a hazard: plans must be pure functions
+                check="tracer-leak", site=cap.site,
+                detail=f"stage failed to re-trace standalone: {exc}",
+                signature=("retrace-failure", type(exc).__name__)))
+            out.setdefault(f.fingerprint(), f)
+            continue
+        for f in audit_jaxpr(closed, cap):
+            out.setdefault(f.fingerprint(), f)
+    return list(out.values())

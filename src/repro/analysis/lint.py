@@ -1,0 +1,299 @@
+"""AST-level repo invariant linter — the source rules jaxprs cannot see.
+
+The jaxpr auditor proves properties of what actually got COMPILED; this
+module proves properties of what was WRITTEN, catching hazards before they
+are reachable from any grid point:
+
+* ``unseeded-random``          (L001) — ``random.*`` / bare ``np.random.*``
+  calls in stage-building modules (core/engine/dist/kernels): all index
+  randomness must flow from seeded generators (``np.random.RandomState(s)``
+  / ``np.random.default_rng(s)``) or seeded ``jax.random`` keys, so builds
+  replay byte-identically.
+* ``host-time``                (L001) — ``time.*()`` calls in those same
+  modules: wall-clock reads belong to obs/ and launch/, never near stage
+  construction (a clock INJECTED as a parameter default is fine; a call is
+  not).
+* ``frombuffer-outside-reader`` (L002) — ``np.frombuffer`` anywhere except
+  ``mvec_format._Reader``, the one place that length-checks bytes first.
+* ``obs-in-jit``               (L003) — ``obs.inc`` / ``obs.observe`` /
+  ``obs.timed_span`` / ``get_registry`` inside a jit-compiled function
+  body: host-side observability inside a trace either breaks purity or
+  silently becomes a trace-time-only no-op.  Detects ``@jax.jit``
+  decorators, ``functools.partial(jax.jit, ...)`` decorators, and
+  functions passed to ``jax.jit(...)`` by name anywhere in the module.
+* ``stage-asarray``            (L004) — ``jnp.asarray``/``jnp.array`` of a
+  closure-captured name inside a jit-compiled body: converting a captured
+  array inside the trace bakes it in as a constant (the runtime twin is
+  jaxpr_audit's const-array check).
+
+Findings carry line numbers in ``detail`` but NOT in their fingerprint
+(site is ``path:qualname``), so unrelated edits above a finding do not
+invalidate allowlist entries.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Sequence, Set
+
+from .findings import Finding
+from .invariants import annotate
+
+#: Directories (relative to src/repro) whose modules build stages or bytes.
+STAGE_BUILDING_DIRS = ("core", "engine", "dist", "kernels")
+#: The one sanctioned frombuffer site.
+READER_MODULE = os.path.join("core", "mvec_format.py")
+READER_CLASS = "_Reader"
+
+_OBS_CALLS = {"inc", "observe", "timed_span", "get_registry", "histogram"}
+_TIME_CALLS = {"time", "monotonic", "perf_counter", "process_time",
+               "thread_time", "clock_gettime"}
+_SEEDED_FACTORIES = {"RandomState", "default_rng", "Generator", "SeedSequence"}
+
+RULES = ("unseeded-random", "host-time", "frombuffer-outside-reader",
+         "obs-in-jit", "stage-asarray")
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """'np.random.randint' for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    chain = _attr_chain(node)
+    return chain in ("jax.jit", "jit")
+
+
+def _jit_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        if _is_jax_jit(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return True
+            # functools.partial(jax.jit, ...)
+            if (_attr_chain(dec.func) in ("functools.partial", "partial")
+                    and dec.args and _is_jax_jit(dec.args[0])):
+                return True
+    return False
+
+
+def _names_passed_to_jit(tree: ast.AST) -> Set[str]:
+    """Function NAMES given to jax.jit(...) anywhere in the module — catches
+    ``jitted = jax.jit(wrapper)`` after a plain ``def wrapper``."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+    return names
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Parameters + names assigned anywhere inside ``fn`` (so only true
+    closure captures count as 'free' for stage-asarray)."""
+    args = fn.args
+    names = {a.arg for a in (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs))}
+    for extra in (args.vararg, args.kwarg):
+        if extra is not None:
+            names.add(extra.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                names.add(node.name)
+    return names
+
+
+def _finding(rule: str, rel: str, qualname: str, line: int, call: str,
+             detail: str) -> Finding:
+    return annotate(Finding(
+        check=rule,
+        site=f"{rel}:{qualname}" if qualname else rel,
+        detail=f"{rel}:{line}: {detail}",
+        signature=(rule, call),
+    ))
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, rel: str, tree: ast.Module):
+        self.rel = rel
+        self.findings: List[Finding] = []
+        self.stage_building = any(
+            rel.startswith(d + os.sep) for d in STAGE_BUILDING_DIRS)
+        self.is_reader_module = rel == READER_MODULE
+        self._jit_names = _names_passed_to_jit(tree)
+        self._class_stack: List[str] = []
+        self._fn_stack: List["ast.FunctionDef | ast.AsyncFunctionDef"] = []
+        self._jit_depth = 0
+
+    # -- context tracking --------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _visit_fn(
+        self, node: "ast.FunctionDef | ast.AsyncFunctionDef",
+    ) -> None:
+        jitted = _jit_decorated(node) or node.name in self._jit_names
+        self._fn_stack.append(node)
+        self._jit_depth += 1 if jitted else 0
+        self.generic_visit(node)
+        self._jit_depth -= 1 if jitted else 0
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    @property
+    def _qualname(self) -> str:
+        parts = list(self._class_stack) + [f.name for f in self._fn_stack]
+        return ".".join(parts)
+
+    # -- the rules ---------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func) or ""
+        self._rule_l001(node, chain)
+        self._rule_l002(node, chain)
+        self._rule_l003(node, chain)
+        self._rule_l004(node, chain)
+        self.generic_visit(node)
+
+    def _rule_l001(self, node: ast.Call, chain: str) -> None:
+        if not self.stage_building:
+            return
+        if chain.startswith("random."):
+            self.findings.append(_finding(
+                "unseeded-random", self.rel, self._qualname, node.lineno,
+                chain,
+                f"stdlib '{chain}(...)' in a stage-building module — all "
+                f"randomness must come from a seeded generator"))
+        elif chain.startswith(("np.random.", "numpy.random.")):
+            leaf = chain.rsplit(".", 1)[1]
+            if leaf in _SEEDED_FACTORIES and node.args:
+                return          # np.random.RandomState(seed) — the idiom
+            self.findings.append(_finding(
+                "unseeded-random", self.rel, self._qualname, node.lineno,
+                chain,
+                f"'{chain}(...)' draws from (or seeds without an explicit "
+                f"seed) the GLOBAL numpy RNG in a stage-building module"))
+        elif chain.startswith("time.") and chain.split(".")[1] in _TIME_CALLS:
+            self.findings.append(_finding(
+                "host-time", self.rel, self._qualname, node.lineno, chain,
+                f"wall-clock read '{chain}()' in a stage-building module — "
+                f"clocks live in obs/ and launch/, or arrive injected"))
+
+    def _rule_l002(self, node: ast.Call, chain: str) -> None:
+        if not chain.endswith("frombuffer"):
+            return
+        if self.is_reader_module and READER_CLASS in self._class_stack:
+            return
+        self.findings.append(_finding(
+            "frombuffer-outside-reader", self.rel, self._qualname,
+            node.lineno, chain,
+            f"'{chain}' outside mvec_format.{READER_CLASS} — raw bytes are "
+            f"parsed only through the length-checked reader"))
+
+    def _rule_l003(self, node: ast.Call, chain: str) -> None:
+        if self._jit_depth <= 0:
+            return
+        parts = chain.split(".")
+        if ((len(parts) >= 2 and parts[0] == "obs"
+             and parts[-1] in _OBS_CALLS)
+                or parts[-1] == "timed_span"
+                or chain == "get_registry"):
+            self.findings.append(_finding(
+                "obs-in-jit", self.rel, self._qualname, node.lineno, chain,
+                f"observability call '{chain}(...)' inside a jit-compiled "
+                f"body: runs at trace time only (or breaks purity)"))
+
+    def _rule_l004(self, node: ast.Call, chain: str) -> None:
+        if self._jit_depth <= 0 or not self._fn_stack:
+            return
+        if chain not in ("jnp.asarray", "jnp.array"):
+            return
+        if not node.args or not isinstance(node.args[0], ast.Name):
+            return
+        name = node.args[0].id
+        if name in _local_names(self._fn_stack[-1]):
+            return
+        self.findings.append(_finding(
+            "stage-asarray", self.rel, self._qualname, node.lineno,
+            f"{chain}({name})",
+            f"'{chain}({name})' converts the closure-captured '{name}' "
+            f"inside a jit body — it bakes in as a trace constant; pass it "
+            f"as a stage argument instead"))
+
+
+def lint_file(path: str, rel: str) -> List[Finding]:
+    with open(path) as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    linter = _ModuleLinter(rel, tree)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_tree(root: Optional[str] = None) -> List[Finding]:
+    """Lint every module under src/repro (analysis excluded — it is the
+    checker, and its only 'violations' are the patterns it documents)."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", "analysis"))
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            findings.extend(lint_file(path, rel))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    import json as _json
+
+    from .findings import Allowlist, load_allowlist, render_report
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST invariant linter over src/repro")
+    default_allow = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "allowlist.json")
+    parser.add_argument("--allowlist", default=default_allow)
+    parser.add_argument("--root", default=None,
+                        help="package root to lint (default: src/repro)")
+    args = parser.parse_args(argv)
+
+    allow = (load_allowlist(args.allowlist)
+             if os.path.exists(args.allowlist) else Allowlist())
+    findings = lint_tree(args.root)
+    # Lint shares the audit allowlist but must not call ITS unmatched
+    # entries stale — the jaxpr checks own those.
+    report = render_report(findings, allow, stale_is_error=False)
+    for f in report["findings"]:
+        mark = "ALLOWED" if f["allowlisted"] else "ERROR  "
+        print(f"{mark} {f['check']:26s} {f['site']}\n        {f['detail']}")
+    active = report["counts"]["active"]
+    print(_json.dumps({"ok": active == 0, "counts": report["counts"]}))
+    return 0 if active == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

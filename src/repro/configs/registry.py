@@ -8,7 +8,7 @@ on CPU in tests), and its assigned input-shape set.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Mapping, Optional, Tuple
+from typing import Callable, Dict, Mapping, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,7 +9,6 @@ AG News (45K) to production scale (1B vectors — only viable because of the
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 from .registry import Arch, ShapeSpec, register
 

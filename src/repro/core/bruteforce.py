@@ -23,6 +23,29 @@ from ..kernels import ops
 from . import quantize as qz
 from .allowlist import Allowlist
 
+#: Pure plan-stage callables this module exports (repro.analysis coverage
+#: hook, DESIGN.md §10: the determinism auditor fails if a listed stage is
+#: never captured on its grid).
+PLAN_STAGES = ("scan_stage",)
+
+
+def scan_stage(
+    q_rot: jnp.ndarray,
+    packed: jnp.ndarray,
+    *,
+    bits: int,
+    n4_dims: int = 0,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Raw full-corpus scan — the jitted body exposed as a pure PLAN STAGE
+    (DESIGN.md §7): [b, d'] rotated queries × [n, bytes] packed codes →
+    [b, n] RAW scores.  The metric adjustment deliberately stays outside
+    (the engine runs it eagerly so XLA cannot FMA-contract the L2 adjust);
+    every array is an argument, never a trace constant."""
+    return ops.score_raw(packed, q_rot, bits=bits, n4_dims=n4_dims,
+                         use_kernel=use_kernel, interpret=interpret)
+
 
 @dataclasses.dataclass
 class BruteForceIndex:

@@ -39,6 +39,11 @@ from .rhdh import rhdh_apply
 from .standardize import COSINE, L2, prepare
 
 
+#: repro.analysis coverage hook (DESIGN.md §10): pure plan stages exported
+#: here; the determinism auditor's grid must capture each one.
+PLAN_STAGES = ("search_stage",)
+
+
 def recommended_m(n: int) -> int:
     """Auto-M policy (paper contribution #4): graph diameter grows with N."""
     return 32 if n < 1_000_000 else 64

@@ -37,6 +37,11 @@ from .scoring import topk
 from .standardize import COSINE, L2, prepare
 
 
+#: repro.analysis coverage hook (DESIGN.md §10): pure plan stages exported
+#: here; the determinism auditor's grid must capture each one.
+PLAN_STAGES = ("search_stage",)
+
+
 def _assign(x: jnp.ndarray, cents: jnp.ndarray, metric: str) -> jnp.ndarray:
     """Nearest centroid per row.  argmin/argmax are stable (lowest index)."""
     if metric == L2:

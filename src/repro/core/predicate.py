@@ -30,12 +30,20 @@ are interning order, not collation order.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Tuple
+from typing import TYPE_CHECKING, Callable, Iterator, List, Tuple
+
+if TYPE_CHECKING:                  # typing only: this module stays jax-free
+    import jax.numpy as jnp
 
 import numpy as np
 
 from .metadata import (KIND_STR, MetaStore, NO_MATCH_KEY, encode_constant,
                        split_key)
+
+
+#: repro.analysis coverage hook (DESIGN.md §10): ``build_stage_fn`` output is
+#: the predicate-mask plan stage; the auditor's grid must capture it.
+PLAN_STAGES = ("build_stage_fn",)
 
 
 class Predicate:
@@ -213,7 +221,8 @@ def evaluate(p: Predicate, store: MetaStore) -> np.ndarray:
 # Device lowering: stage builder + per-call argument packing.
 # ---------------------------------------------------------------------------
 
-def _key_cmp(op: str, ch, cl, kh, kl):
+def _key_cmp(op: str, ch: jnp.ndarray, cl: jnp.ndarray, kh: jnp.ndarray,
+             kl: jnp.ndarray) -> jnp.ndarray:
     """u64 comparison on (hi, lo) uint32 planes — jnp, selection-only."""
     eq = (ch == kh) & (cl == kl)
     if op == "eq":
@@ -230,7 +239,7 @@ def _key_cmp(op: str, ch, cl, kh, kl):
     return ~(lt | eq)                                # gt
 
 
-def build_stage_fn(p: Predicate):
+def build_stage_fn(p: Predicate) -> Callable[..., jnp.ndarray]:
     """Compile the AST into ``fn(live, *args) -> live & mask``.
 
     Pure jnp boolean algebra over the flat argument tuple (preorder leaf
@@ -260,7 +269,7 @@ def build_stage_fn(p: Predicate):
 
     inner = rec(p)
 
-    def fn(live, *args):
+    def fn(live: jnp.ndarray, *args: jnp.ndarray) -> jnp.ndarray:
         return live & inner(iter(args))
 
     return fn

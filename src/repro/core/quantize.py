@@ -19,13 +19,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import lloydmax
-from .rhdh import next_pow2, rhdh_apply
-from .standardize import COSINE, DOT, L2, GlobalStd, prepare
+from .rhdh import rhdh_apply
+from .standardize import COSINE, GlobalStd, prepare
 
 
 # ---------------------------------------------------------------------------

@@ -51,10 +51,20 @@ def _split_pow2(dp: int) -> Tuple[int, int]:
 
 
 def rademacher_signs(seed: int, d_pad: int) -> jnp.ndarray:
-    """Deterministic ±1 diagonal from the 64-bit index seed."""
-    key = jax.random.key(np.uint32(seed & 0xFFFFFFFF))
-    key = jax.random.fold_in(key, np.uint32((seed >> 32) & 0xFFFFFFFF))
-    return jax.random.rademacher(key, (d_pad,), dtype=jnp.float32)
+    """Deterministic ±1 diagonal from the 64-bit index seed.
+
+    Resolved at TRACE time, always: the jax.random samplers are internally
+    jitted, so when this runs under an outer trace (every compiled rotate
+    stage) they would otherwise be staged into the program as live PRNG
+    primitives instead of folding to the concrete sign vector the seed
+    pins.  ensure_compile_time_eval forces the eager path, so the stage
+    jaxpr sees only a ±1 constant — same bits, no random_* primitives
+    (repro.analysis INV-NO-HOST-IN-TRACE).
+    """
+    with jax.ensure_compile_time_eval():
+        key = jax.random.key(np.uint32(seed & 0xFFFFFFFF))
+        key = jax.random.fold_in(key, np.uint32((seed >> 32) & 0xFFFFFFFF))
+        return jax.random.rademacher(key, (d_pad,), dtype=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=())

@@ -14,12 +14,11 @@ Metric adjustments (q_norm = ||dequantized rotated vector||):
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import lloydmax, quantize as qz
+from . import quantize as qz
 from .standardize import COSINE, DOT, L2
 
 

@@ -51,6 +51,10 @@ SENTINEL_ID = np.uint64(0xFFFFFFFFFFFFFFFF)
 _MASK64 = 0xFFFFFFFFFFFFFFFF
 _GOLDEN = 0x9E3779B97F4A7C15
 
+#: repro.analysis coverage hook (DESIGN.md §10): pure plan stages exported
+#: here; the determinism auditor's grid must capture each one.
+PLAN_STAGES = ("merge_stage",)
+
 
 def derive_segment_seed(root_seed: int, ordinal: int) -> int:
     """Deterministic per-segment RHDH seed.

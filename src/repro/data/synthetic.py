@@ -9,8 +9,7 @@ is a pure re-slice of the same global batch.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Iterator, Tuple
+from typing import Tuple
 
 import numpy as np
 

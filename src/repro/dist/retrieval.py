@@ -41,6 +41,11 @@ from repro.launch.mesh import data_axes
 
 from .partition import data_axis_size, pad_rows, shard_sizes
 
+#: repro.analysis coverage hook (DESIGN.md §10): the shard_map scan factory's
+#: output runs as the engine's ``shard_scan`` plan stage; the determinism
+#: auditor's grid must capture it.
+PLAN_STAGES = ("make_scan_topk_shardmap",)
+
 
 # ---------------------------------------------------------------------------
 # Single-logical-array references (jit / pjit).

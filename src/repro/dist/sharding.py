@@ -22,7 +22,7 @@ graphs, not the weights, are what's big; edges shard over 'data' at runtime).
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -38,6 +38,12 @@ from repro.core.segments import SENTINEL_ID
 
 from .plan import search_backend
 
+#: repro.analysis coverage hook (DESIGN.md §10): the dense channel of
+#: ``search_hybrid`` runs as an ordinary compiled SearchPlan (every stage
+#: captured through plan.py's observer); this export makes the hybrid path
+#: enumerable so the auditor's grid provably drives it.
+PLAN_STAGES = ("search_hybrid",)
+
 
 def _sparse_mask(index, allow: Optional[Allowlist],
                  where: Optional[pred.Predicate]) -> Optional[np.ndarray]:

@@ -40,13 +40,14 @@ import collections
 import dataclasses
 import hashlib
 import logging
-from typing import Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import bruteforce as bf_mod
 from repro.core import hnsw as hnsw_mod
 from repro.core import ivf as ivf_mod
 from repro.core import predicate as pred
@@ -60,6 +61,28 @@ from repro.core.standardize import DOT, prepare
 from repro.kernels import ops
 
 _LOG = logging.getLogger("repro.engine.plan")
+
+# Stage-capture hook (repro.analysis, DESIGN.md §10): when installed, every
+# plan-stage invocation reports (backend kind, stage name, UN-jitted stage
+# function, concrete args) before dispatching to the compiled stage.  The
+# determinism auditor uses this to jax.make_jaxpr exactly the programs the
+# engine compiles — same factories, same operands — instead of a parallel
+# hand-maintained stage list that could drift.  Costs one ``is not None``
+# check per stage call when uninstalled.
+_STAGE_OBSERVER: Optional[Callable[[str, str, Callable, tuple], None]] = None
+
+
+def set_stage_observer(
+    observer: Optional[Callable[[str, str, Callable, tuple], None]],
+) -> Optional[Callable[[str, str, Callable, tuple], None]]:
+    """Install (or clear, with None) the stage-capture hook; returns the
+    previous observer so callers can restore it.  Plans built while an
+    observer is installed keep reporting through the module-level slot, so
+    clearing the hook also silences previously-built cached plans."""
+    global _STAGE_OBSERVER
+    prev = _STAGE_OBSERVER
+    _STAGE_OBSERVER = observer
+    return prev
 
 
 def shape_bucket(b: int) -> int:
@@ -191,7 +214,7 @@ def plan_cache() -> PlanCache:
 # Fingerprints: everything the trace bakes in.
 # ---------------------------------------------------------------------------
 
-def _std_sig(std) -> Optional[tuple]:
+def _std_sig(std: Any) -> Optional[tuple]:
     return None if std is None else (float(std.mean), float(std.inv_std))
 
 
@@ -207,7 +230,7 @@ _BACKEND_KNOBS = {
 }
 
 
-def _validate_knobs(backend, kwargs: dict) -> None:
+def _validate_knobs(backend: Any, kwargs: dict) -> None:
     kind = type(backend).__name__
     allowed = _BACKEND_KNOBS.get(kind, frozenset())
     unknown = sorted(set(kwargs) - allowed)
@@ -216,7 +239,7 @@ def _validate_knobs(backend, kwargs: dict) -> None:
             f"unexpected search kwargs for the {kind} backend: {unknown}")
 
 
-def _normalize_knobs(backend, kwargs: dict, k: int) -> dict:
+def _normalize_knobs(backend: Any, kwargs: dict, k: int) -> dict:
     """Fill defaults and clamp exactly like the pre-engine search paths, so
     the normalized knobs are part of the plan key (nprobe=min(nprobe,nlist);
     the HNSW beam auto-widens to max(ef, k))."""
@@ -228,7 +251,7 @@ def _normalize_knobs(backend, kwargs: dict, k: int) -> dict:
     return {}
 
 
-def _fingerprint(backend, extras, knobs: dict) -> tuple:
+def _fingerprint(backend: Any, extras: Sequence[Any], knobs: dict) -> tuple:
     kind = type(backend).__name__
     segs = (_enc_sig(backend.enc),) + tuple(_enc_sig(s.enc) for s in extras)
     head: tuple = (kind, backend.enc.metric, segs)
@@ -244,7 +267,8 @@ def _fingerprint(backend, extras, knobs: dict) -> tuple:
 # Plan compilation.
 # ---------------------------------------------------------------------------
 
-def _rotate(q, *, metric, std, seed, perm):
+def _rotate(q: jnp.ndarray, *, metric: str, std: Any, seed: int,
+            perm: Optional[jnp.ndarray]) -> jnp.ndarray:
     """encode_query as a trace-safe stage: same prepare + RHDH as the corpus,
     with the v7 permutation riding in as an array ARGUMENT."""
     prepared = prepare(q.astype(jnp.float32), metric, std)
@@ -254,7 +278,8 @@ def _rotate(q, *, metric, std, seed, perm):
     return rot
 
 
-def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
+def _build_plan(backend: Any, extras: Sequence[Any], *, key: PlanKey,
+                knobs: dict,
                 cache: PlanCache,
                 where: Optional[pred.Predicate] = None) -> SearchPlan:
     """Compile one plan: a pipeline of per-plan jitted STAGES driven by a
@@ -282,13 +307,21 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
     use_kernel, interpret = key.dispatch
     stats = cache.stats
 
-    def marked(fn):
-        """jit(fn) with the trace counter attached (runs once per trace)."""
+    def marked(fn, stage):
+        """jit(fn) with the trace counter attached (runs once per trace) and
+        the analysis stage-capture hook on the call path (module docstring:
+        one None-check per call when no observer is installed)."""
         def wrapper(*args):
             stats.traces += 1
             obs.inc("plan_cache.traces")
             return fn(*args)
-        return jax.jit(wrapper)
+        jitted = jax.jit(wrapper)
+
+        def run(*args):
+            if _STAGE_OBSERVER is not None:
+                _STAGE_OBSERVER(kind, stage, fn, args)
+            return jitted(*args)
+        return run
 
     def staged(stage, fn):
         """Host-side per-stage timer (DESIGN.md §9): wraps the CALL to a
@@ -307,7 +340,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
 
     def make_rot(seed):
         return marked(lambda q, perm: _rotate(q, metric=metric, std=std,
-                                              seed=seed, perm=perm))
+                                              seed=seed, perm=perm), "rotate")
 
     # Predicate mask stage (DESIGN.md §8): pure boolean algebra over the
     # live mask and the flattened (column keys, constant keys) operands —
@@ -315,7 +348,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
     # depends only on the predicate STRUCTURE (which is in the plan key),
     # never on its constants, so plans are shared across constant values.
     where_stage = None if where is None else staged(
-        "predicate_mask", marked(pred.build_stage_fn(where)))
+        "predicate_mask", marked(pred.build_stage_fn(where), "predicate_mask"))
 
     def masked_live(live, where_args):
         return live if where_stage is None else where_stage(live, *where_args)
@@ -326,9 +359,9 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
         # XLA contracts the L2 multiply+subtract into an FMA and the result
         # is no longer bit-identical to the eager op sequence the oracles
         # (and the pre-engine search paths) compute.
-        raw_fn = marked(lambda q_rot, packed: ops.score_raw(
-            packed, q_rot, bits=bits, n4_dims=n4, use_kernel=use_kernel,
-            interpret=interpret))
+        raw_fn = marked(lambda q_rot, packed: bf_mod.scan_stage(
+            q_rot, packed, bits=bits, n4_dims=n4, use_kernel=use_kernel,
+            interpret=interpret), "scan")
         if metric == DOT:
             return lambda q_rot, packed, qnorms: raw_fn(q_rot, packed)
         return lambda q_rot, packed, qnorms: adjust_scores(
@@ -348,7 +381,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
                                  constant_values=NEG)
             vals, pos = topk(scores, k)
             return vals, jnp.where(vals > NEG, pos, -1)
-        finalize = staged("finalize", marked(fin))
+        finalize = staged("finalize", marked(fin, "finalize"))
 
         def fn(q, q_valid, live, perm, where_args, *seg_arrays):
             live = masked_live(live, where_args)
@@ -371,7 +404,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
                 q_rot, centroids, order, offsets, packed, qnorms,
                 live0, k=k, nprobe=nprobe, max_cand=max_cand,
                 metric=metric, bits=bits, n4_dims=n4,
-                use_kernel=use_kernel, interpret=interpret)))
+                use_kernel=use_kernel, interpret=interpret), "main"))
         n_head = 3
     elif kind == "HnswIndex":
         ef = knobs["ef"]
@@ -382,7 +415,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
                 q_rot, packed, qnorms, nbr0, nbr_hi, live0,
                 entry=entry, ef=ef, k=k, metric=metric, bits=bits,
                 n4_dims=n4, max_level=max_level,
-                use_kernel=use_kernel, interpret=interpret)))
+                use_kernel=use_kernel, interpret=interpret), "main"))
         n_head = 2
     else:
         raise TypeError(f"no plan builder for backend {kind}")
@@ -404,7 +437,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
                 main_vals, main_pos, side, base_n, k)
         vals = jnp.where(q_valid[:, None], main_vals, NEG)
         return vals, jnp.where(vals > NEG, main_pos, -1)
-    finalize = staged("merge", marked(merge))
+    finalize = staged("merge", marked(merge, "merge"))
 
     def fn(q, q_valid, live, perm, where_args, *arrays):
         live = masked_live(live, where_args)
@@ -421,7 +454,7 @@ def _build_plan(backend, extras, *, key: PlanKey, knobs: dict,
     return SearchPlan(key=key, fn=fn)
 
 
-def _bind_arrays(backend, extras) -> tuple:
+def _bind_arrays(backend: Any, extras: Sequence[Any]) -> tuple:
     """Per-call array operands, in the plan function's positional order."""
     kind = type(backend).__name__
     head: tuple = ()
@@ -441,15 +474,15 @@ def _bind_arrays(backend, extras) -> tuple:
 # ---------------------------------------------------------------------------
 
 def search_backend(
-    backend,
-    state,                       # SegmentedState or None (= static index)
-    queries,
+    backend: Any,
+    state: Any,                  # SegmentedState or None (= static index)
+    queries: jnp.ndarray,
     k: int,
     *,
     allow: Optional[Allowlist] = None,
     where: Optional[pred.Predicate] = None,
     meta: Optional[MetaStore] = None,
-    where_mask=None,
+    where_mask: Optional[np.ndarray] = None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     **kwargs,
@@ -557,7 +590,8 @@ def search_backend(
     return vals, seg.rows_to_ids(pos, ids)
 
 
-def search_sharded(index, queries, k: int, *, where_mask=None,
+def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
+                   where_mask: Optional[np.ndarray] = None,
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """The shard_map scan as a cached plan: same bucketing, same counters,
     same [b, k] sentinel-padded contract as the single-device engines.
@@ -607,10 +641,12 @@ def search_sharded(index, queries, k: int, *, where_mask=None,
             # Eager rotation: the exact op sequence of qz.encode_query.
             q_rot = _rotate(q_pad, metric=metric, std=std, seed=seed,
                             perm=perm)
+            args = (q_rot, packed, qnorms) if mask is None else \
+                (q_rot, packed, qnorms, mask)
+            if _STAGE_OBSERVER is not None:
+                _STAGE_OBSERVER("ShardedMonaVec", "shard_scan", scan, args)
             with mesh:
-                if mask is None:
-                    return scan(q_rot, packed, qnorms)
-                return scan(q_rot, packed, qnorms, mask)
+                return scan(*args)
 
         return SearchPlan(key=key, fn=raw)
 
@@ -679,7 +715,9 @@ class Searcher:
     # metrics, DESIGN.md §9).
     labels: tuple = ()
 
-    def __call__(self, queries, *, allow: Optional[Allowlist] = None):
+    def __call__(self, queries: jnp.ndarray, *,
+                 allow: Optional[Allowlist] = None,
+                 ) -> Tuple[np.ndarray, np.ndarray]:
         kw = dict(self.knobs)
         if self.use_kernel is not None:
             kw["use_kernel"] = self.use_kernel

@@ -16,7 +16,6 @@ bit-identical scores — the property the backend contract tests pin down.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -8,7 +8,6 @@ machinery drives real-mesh launches on TPU fleets.
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import numpy as np
@@ -48,7 +47,6 @@ def main() -> None:
         init_fn = lambda: g.init_params(cfg, key)
         batch_fn = lambda step: graph
     elif arch.family == "recsys":
-        from repro.models import recsys as rs
         from repro.dist.steps import _RS_INIT, _RS_LOSS
         init = _RS_INIT[args.arch]
         loss = _RS_LOSS[args.arch]

@@ -21,9 +21,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .layers import dense, mlp, mlp_init
+from .layers import mlp, mlp_init
 
 
 @dataclasses.dataclass(frozen=True)

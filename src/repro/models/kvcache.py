@@ -17,7 +17,7 @@ token (linearity), not per cached vector.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

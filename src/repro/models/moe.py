@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layers import dense_init, rms_norm, swiglu, swiglu_init
+from .layers import dense_init, swiglu, swiglu_init
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,7 +14,7 @@ are expressed as consecutive homogeneous "blocks", each with its own scan.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,447 @@
+"""repro.analysis: the auditor must (a) stay silent on the real tree,
+(b) scream on injected hazards, and (c) hold its allowlist to the
+no-rot contract.
+
+The load-bearing cases:
+  * mutation self-test — a deliberately hazardous stage (closure-captured
+    corpus + unbarriered full-scan dot) run through the REAL CLI must exit
+    non-zero and name BOTH findings;
+  * clean-grid — real engine stages captured through the plan observer
+    produce zero findings (including the rotate stage, pinned rng-free
+    after the rademacher_signs staging fix);
+  * per-check units — each jaxpr check and each AST lint rule, positive
+    and negative;
+  * allowlist — reasons are mandatory, stale entries fail strict mode
+    (which is what makes CI's tamper test work).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.analysis
+from repro.analysis import (Allowlist, Finding, StageCapture, audit_captures,
+                            fingerprint, invariant_for_check, load_allowlist,
+                            render_report)
+from repro.analysis import grid as agrid
+from repro.analysis import jaxpr_audit as ja
+from repro.analysis import lint as alint
+from repro.analysis.audit import (DEFAULT_ALLOWLIST, inject_hazard_capture,
+                                  retrace_findings)
+
+SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(repro.analysis.__file__))))
+
+
+def _audit_fn(fn, *args, n_corpus=0, backend="Unit", stage="stage"):
+    cap = StageCapture(backend=backend, stage=stage, fn=fn, args=args,
+                      context={"n_corpus": n_corpus})
+    return audit_captures([cap])
+
+
+def _checks(findings):
+    return sorted({f.check for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# Findings / fingerprints / allowlist.
+# ---------------------------------------------------------------------------
+
+class TestFindings:
+    def test_fingerprint_is_stable_and_structural(self):
+        fp = fingerprint("const-array", "X/scan", ("const-array", "f32"))
+        assert fp == fingerprint("const-array", "X/scan",
+                                 ["const-array", "f32"])
+        assert len(fp) == 16
+        assert fp != fingerprint("const-array", "Y/scan",
+                                 ("const-array", "f32"))
+
+    def test_finding_cites_its_invariant(self):
+        inv = invariant_for_check("const-array")
+        assert inv is not None and inv.id == "INV-ARGS-NOT-CONSTS"
+        assert "§" in inv.design_ref
+        # every registered check maps to exactly one invariant
+        seen = {}
+        from repro.analysis.invariants import INVARIANTS
+        for i in INVARIANTS:
+            for c in i.checks:
+                assert c not in seen, f"check {c} claimed by two invariants"
+                seen[c] = i.id
+
+    def test_allowlist_reason_is_mandatory(self, tmp_path):
+        p = tmp_path / "a.json"
+        p.write_text(json.dumps({"entries": [{"fingerprint": "ab" * 8}]}))
+        with pytest.raises(ValueError, match="reason"):
+            load_allowlist(str(p))
+
+    def test_stale_entry_fails_strict_report(self):
+        allow = Allowlist(entries={"f" * 16: "bogus tamper entry"})
+        report = render_report([], allow, stale_is_error=True)
+        assert not report["ok"]
+        assert report["stale_allowlist_entries"] == ["f" * 16]
+        # lint mode tolerates (the jaxpr side owns those entries)
+        assert render_report([], allow, stale_is_error=False)["ok"]
+
+    def test_matched_entry_passes(self):
+        f = Finding(check="c", site="s", detail="d", signature=("c", "x"))
+        allow = Allowlist(entries={f.fingerprint(): "accepted"})
+        report = render_report([f], allow)
+        assert report["ok"]
+        assert report["counts"] == {"active": 0, "allowlisted": 1,
+                                    "stale_allowlist": 0}
+
+    def test_committed_allowlist_loads(self):
+        allow = load_allowlist(DEFAULT_ALLOWLIST)
+        assert all(allow.entries.values()), "every entry carries a reason"
+
+
+# ---------------------------------------------------------------------------
+# Const classification policy.
+# ---------------------------------------------------------------------------
+
+class TestConstPolicy:
+    @pytest.mark.parametrize("value", [
+        np.float32(3.0),                               # scalar
+        np.zeros(5, np.float32),                       # tiny
+        np.full((64,), 7.0, np.float32),               # uniform fill
+        np.arange(100, dtype=np.int32),                # iota
+        np.arange(5, 105, dtype=np.int32),             # shifted iota
+        np.random.RandomState(0).randint(0, 9, 100),   # small int table
+        np.sign(np.random.RandomState(0).randn(256)).astype(np.float32),
+        np.linspace(-2, 2, 16).astype(np.float32),     # Lloyd-Max size
+    ])
+    def test_exempt(self, value):
+        assert ja._classify_const(value) is None
+
+    @pytest.mark.parametrize("value,cls", [
+        (np.random.RandomState(0).randn(64, 16).astype(np.float32),
+         "float-array[float32]"),
+        (np.random.RandomState(0).randn(17).astype(np.float32),
+         "float-array[float32]"),
+        (np.random.RandomState(0).randint(0, 9, 2048).astype(np.int32),
+         "int-array[int32]"),
+    ])
+    def test_flagged(self, value, cls):
+        assert ja._classify_const(value) == cls
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr checks, one by one.
+# ---------------------------------------------------------------------------
+
+class TestJaxprChecks:
+    def test_injected_hazard_raises_both(self):
+        findings = audit_captures([inject_hazard_capture()])
+        assert _checks(findings) == ["const-array", "full-scan-dot"]
+        for f in findings:
+            assert f.invariant in ("INV-ARGS-NOT-CONSTS", "INV-CHUNKED-DOT")
+
+    def test_full_scan_dot_as_argument_still_flagged(self):
+        # passing the corpus as an argument fixes const-array but NOT the
+        # unchunked reduction — the checks are independent
+        def fn(q, corpus):
+            return q @ corpus.T
+        q = jnp.zeros((12, 16), jnp.float32)
+        c = jnp.zeros((64, 16), jnp.float32)
+        assert _checks(_audit_fn(fn, q, c, n_corpus=64)) == ["full-scan-dot"]
+
+    def test_chunked_barrier_dot_is_clean(self):
+        from repro.kernels import ref
+
+        def fn(q, corpus_t):
+            return ref._chunked_dot(q, corpus_t)
+        q = jnp.zeros((12, 16), jnp.float32)
+        ct = jnp.zeros((16, 64), jnp.float32)
+        assert _audit_fn(fn, q, ct, n_corpus=64) == []
+
+    def test_small_dot_not_corpus_scale(self):
+        # nlist-sized centroid dots are legitimate
+        def fn(q, cents):
+            return q @ cents.T
+        q = jnp.zeros((12, 16), jnp.float32)
+        cents = jnp.zeros((8, 16), jnp.float32)
+        assert _audit_fn(fn, q, cents, n_corpus=64) == []
+
+    def test_gathered_batched_dot_is_clean(self):
+        # per-query candidate scoring (batch dims) is tiling-stable by the
+        # gathered-scan contract, not a full-corpus scan
+        def fn(deq, q):
+            return jnp.einsum("bmd,bd->bm", deq, q)
+        deq = jnp.zeros((3, 70, 16), jnp.float32)
+        q = jnp.zeros((3, 16), jnp.float32)
+        assert _audit_fn(fn, deq, q, n_corpus=64) == []
+
+    def test_full_reduce_flagged(self):
+        def fn(scores):
+            return jnp.sum(scores, axis=-1)
+        s = jnp.zeros((3, 128), jnp.float32)
+        assert _checks(_audit_fn(fn, s, n_corpus=64)) == ["full-reduce"]
+
+    def test_x64_leak(self):
+        jax.config.update("jax_enable_x64", True)
+        try:
+            def fn(x):
+                return x.astype(jnp.float64) * 2.0
+            x = jnp.zeros((4,), jnp.float32)
+            findings = _audit_fn(fn, x, n_corpus=0)
+        finally:
+            jax.config.update("jax_enable_x64", False)
+        assert "x64-leak" in _checks(findings)
+
+    def test_rng_prims_staged_by_jitted_samplers(self):
+        # the rademacher_signs failure mode, reproduced: jax.random samplers
+        # are internally jitted, so under an outer trace they STAGE instead
+        # of resolving eagerly
+        def fn(x):
+            key = jax.random.key(1)
+            return x * jax.random.rademacher(key, (x.shape[-1],),
+                                             dtype=jnp.float32)
+        x = jnp.zeros((3, 16), jnp.float32)
+        assert "rng-prim" in _checks(_audit_fn(fn, x))
+
+    def test_rotate_stage_regression_rng_free(self):
+        # rademacher_signs resolves at trace time (ensure_compile_time_eval):
+        # the compiled rotate stage must contain no PRNG primitives and no
+        # non-exempt consts — its sign vector folds to a ±1 constant
+        from repro.engine.plan import _rotate
+
+        def fn(q):
+            return _rotate(q, metric="cosine", std=None,
+                           seed=0x6D6F6E61, perm=None)
+        q = jnp.zeros((3, 16), jnp.float32)
+        assert _audit_fn(fn, q, n_corpus=48) == []
+
+    def test_callback_prim(self):
+        def fn(x):
+            jax.debug.callback(lambda v: None, x)
+            return x * 2
+        x = jnp.zeros((4,), jnp.float32)
+        assert "callback-prim" in _checks(_audit_fn(fn, x))
+
+    def test_retrace_failure_is_a_finding(self):
+        def broken():
+            raise RuntimeError("boom")
+        cap = StageCapture(backend="Unit", stage="s", fn=broken, args=())
+        findings = audit_captures([cap])
+        assert _checks(findings) == ["tracer-leak"]
+
+
+# ---------------------------------------------------------------------------
+# Grid capture + coverage.
+# ---------------------------------------------------------------------------
+
+class TestGrid:
+    def test_clean_points_zero_findings(self):
+        # one point per backend family keeps this tier-1-sized; the full
+        # grid runs in the CI analysis job
+        points = [
+            agrid.GridPoint(label="t/bf", index="bruteforce"),
+            agrid.GridPoint(label="t/ivf", index="ivf", metric="l2",
+                            bits=2),
+        ]
+        caps = agrid.collect_captures(points)
+        assert caps, "observer captured nothing — plan hook is broken"
+        assert audit_captures(caps) == []
+
+    def test_hnsw_and_hybrid_stages_const_clean(self):
+        # regression pin (satellite): the HNSW beam stage and the hybrid
+        # dense-plan stages keep every array an ARGUMENT
+        points = [
+            agrid.GridPoint(label="t/hnsw", index="hnsw"),
+            agrid.GridPoint(label="hybrid/t", hybrid=True, where=True),
+        ]
+        caps = agrid.collect_captures(points)
+        assert any(c.backend == "HnswIndex" and c.stage == "main"
+                   for c in caps)
+        assert any(str(label).startswith("hybrid")
+                   for c in caps for label in c.context.get("labels", ()))
+        findings = audit_captures(caps)
+        assert [f for f in findings if f.check == "const-array"] == []
+        assert findings == []
+
+    def test_coverage_findings_on_empty_capture_set(self):
+        findings = agrid.coverage_findings([])
+        sites = {f.site for f in findings}
+        assert "repro.core.hnsw:search_stage" in sites
+        assert "repro.engine.fusion:search_hybrid" in sites
+        assert all(f.check == "uncovered-stage" for f in findings)
+
+    def test_observer_restored_after_collect(self):
+        from repro.engine import plan as plan_mod
+        agrid.collect_captures([agrid.GridPoint(label="t/restore")])
+        assert plan_mod._STAGE_OBSERVER is None
+
+    def test_retrace_pass_clean(self):
+        assert retrace_findings() == []
+
+
+# ---------------------------------------------------------------------------
+# AST lint rules.
+# ---------------------------------------------------------------------------
+
+def _lint_src(tmp_path, rel, src):
+    path = tmp_path / os.path.basename(rel)
+    path.write_text(textwrap.dedent(src))
+    return alint.lint_file(str(path), rel)
+
+
+class TestLint:
+    def test_unseeded_random_flagged_seeded_allowed(self, tmp_path):
+        src = """
+            import random
+            import numpy as np
+
+            def build(seed):
+                rng = np.random.RandomState(seed)      # idiom: allowed
+                gen = np.random.default_rng(seed)      # allowed
+                a = np.random.randn(4)                 # global RNG: flagged
+                b = random.random()                    # stdlib: flagged
+                return rng, gen, a, b
+        """
+        findings = _lint_src(tmp_path, "core/thing.py", src)
+        assert _checks(findings) == ["unseeded-random"]
+        assert len(findings) == 2
+
+    def test_host_time_flagged_in_core_not_launch(self, tmp_path):
+        src = """
+            import time
+
+            def f():
+                return time.perf_counter()
+        """
+        assert _checks(_lint_src(tmp_path, "core/thing.py", src)) \
+            == ["host-time"]
+        assert _lint_src(tmp_path, "launch/serve.py", src) == []
+
+    def test_injected_clock_reference_allowed(self, tmp_path):
+        src = """
+            import time
+            import dataclasses
+
+            @dataclasses.dataclass
+            class Limiter:
+                clock = time.monotonic
+        """
+        assert _lint_src(tmp_path, "core/tenancy.py", src) == []
+
+    def test_frombuffer_only_inside_reader(self, tmp_path):
+        src = """
+            import numpy as np
+
+            class _Reader:
+                def take(self, b):
+                    return np.frombuffer(b, dtype=np.uint8)
+
+            def rogue(b):
+                return np.frombuffer(b, dtype=np.uint8)
+        """
+        findings = _lint_src(tmp_path, os.path.join("core", "mvec_format.py"),
+                             src)
+        assert len(findings) == 1
+        assert findings[0].site.endswith(":rogue")
+        # any frombuffer outside that module is flagged, class or not
+        assert _checks(_lint_src(tmp_path, "core/other.py", src)) \
+            == ["frombuffer-outside-reader"] and len(
+                _lint_src(tmp_path, "core/other.py", src)) == 2
+
+    def test_obs_in_jit_via_decorator_and_by_name(self, tmp_path):
+        src = """
+            import jax
+            from repro import obs
+
+            @jax.jit
+            def decorated(x):
+                obs.inc("n")
+                return x
+
+            def wrapper(x):
+                obs.inc("m")
+                return x
+            jitted = jax.jit(wrapper)
+
+            def host_path(x):
+                obs.inc("fine")          # not jitted: allowed
+                return x
+        """
+        findings = _lint_src(tmp_path, "engine/thing.py", src)
+        assert _checks(findings) == ["obs-in-jit"]
+        assert {f.site.split(":")[1] for f in findings} \
+            == {"decorated", "wrapper"}
+
+    def test_stage_asarray_of_captured_name(self, tmp_path):
+        src = """
+            import jax
+            import jax.numpy as jnp
+
+            corpus = None
+
+            @jax.jit
+            def bad(q):
+                return q @ jnp.asarray(corpus).T    # captured: flagged
+
+            @jax.jit
+            def good(q, c):
+                local = jnp.asarray(c)              # argument: allowed
+                other = jnp.asarray(local)          # local: allowed
+                return q @ other.T
+        """
+        findings = _lint_src(tmp_path, "engine/thing.py", src)
+        assert _checks(findings) == ["stage-asarray"]
+        assert len(findings) == 1 and "corpus" in findings[0].detail
+
+    def test_repo_tree_lint_matches_allowlist_exactly(self):
+        findings = alint.lint_tree()
+        allow = load_allowlist(DEFAULT_ALLOWLIST)
+        active = [f for f in findings if not allow.match(f)]
+        assert active == [], \
+            "new lint findings: fix them or allowlist with a reason"
+
+    def test_lint_fingerprints_do_not_move_with_lines(self, tmp_path):
+        src = "import time\n\ndef f():\n    return time.time()\n"
+        shifted = "import time\n\n\n# comment\n\ndef f():\n    return time.time()\n"
+        (tmp_path / "a.py").write_text(src)
+        (tmp_path / "b.py").write_text(shifted)
+        fa = alint.lint_file(str(tmp_path / "a.py"), "core/x.py")
+        fb = alint.lint_file(str(tmp_path / "b.py"), "core/x.py")
+        assert [f.fingerprint() for f in fa] == [f.fingerprint() for f in fb]
+
+
+# ---------------------------------------------------------------------------
+# The CLI gate (mutation self-test, through the real entry point).
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def _run(self, *argv):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis.audit", *argv],
+            capture_output=True, text=True, env=env, timeout=300)
+
+    def test_inject_hazard_exits_nonzero_naming_both(self, tmp_path):
+        report_path = tmp_path / "AUDIT_REPORT.json"
+        proc = self._run("--inject-hazard", "--quiet",
+                         "--report", str(report_path))
+        assert proc.returncode != 0, proc.stdout + proc.stderr
+        assert "const-array" in proc.stdout
+        assert "full-scan-dot" in proc.stdout
+        report = json.loads(report_path.read_text())
+        assert not report["ok"]
+        assert {f["check"] for f in report["findings"]} \
+            == {"const-array", "full-scan-dot"}
+        assert all(f["invariant"] for f in report["findings"])
+
+    def test_lint_cli_passes_on_tree(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis.lint"],
+            capture_output=True, text=True, env=env, timeout=120)
+        assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,43 @@
+"""Property test: randomly parameterized CLEAN plans produce zero findings.
+
+The deterministic suite (tests/test_analysis.py) checks hand-picked grid
+points; here hypothesis draws index/metric/bits/lifecycle combinations the
+hand-picked grid may never have tried and asserts the auditor stays silent
+on all of them — the auditor's false-positive rate on legitimately-built
+engine stages is pinned at zero, not just at the points we thought of.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import audit_captures
+from repro.analysis import grid as agrid
+
+POINTS = st.builds(
+    agrid.GridPoint,
+    label=st.just("prop"),
+    index=st.sampled_from(["bruteforce", "ivf", "hnsw"]),
+    metric=st.sampled_from(["cosine", "l2", "dot"]),
+    bits=st.sampled_from([4, 2]),
+    lifecycle=st.sampled_from(["static", "mutated"]),
+    where=st.booleans(),
+)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(point=POINTS)
+def test_random_clean_plan_has_zero_findings(point):
+    point = agrid.GridPoint(
+        label=f"prop/{point.index}/{point.metric}/b{point.bits}/"
+              f"{point.lifecycle}{'+where' if point.where else ''}",
+        index=point.index, metric=point.metric, bits=point.bits,
+        lifecycle=point.lifecycle, where=point.where)
+    caps = agrid.collect_captures([point])
+    assert caps, "plan observer captured nothing"
+    findings = audit_captures(caps)
+    assert findings == [], [f.to_dict() for f in findings]

@@ -1,6 +1,5 @@
 """Distribution + fault-tolerance behaviour on the local (CPU) mesh."""
 
-import dataclasses
 import os
 import tempfile
 
@@ -19,7 +18,7 @@ from repro.dist.retrieval import (make_scan_topk_f32_shardmap,
 from repro.train.checkpoint import CheckpointManager
 from repro.train.loop import SimulatedFailure, train
 from repro.train.optimizer import (AdamWConfig, adamw_update, compress_int8,
-                                   global_norm, init_opt_state)
+                                   init_opt_state)
 
 
 def local_mesh():

@@ -4,16 +4,13 @@
 we test the analysis layer on synthetic inputs.)
 """
 
-import json
 
-import numpy as np
 import pytest
 
 
 def _parse(hlo, default_group=256):
     # import from the module without triggering its XLA_FLAGS side effect
     import importlib.util
-    import sys
     from pathlib import Path
     spec = importlib.util.find_spec("repro.launch.dryrun")
     src = Path(spec.origin).read_text()

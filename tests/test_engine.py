@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import (Allowlist, And, Eq, HybridIndex, Lt, MonaVec,
+from repro.core import (And, Eq, HybridIndex, Lt, MonaVec,
                         SENTINEL_ID, TenantRegistry)
 from repro.core import predicate as pred
 from tests.lifecycle_harness import assert_matches_oracle, build_index

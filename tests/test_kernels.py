@@ -4,7 +4,6 @@ All kernels run in interpret=True (CPU executes the kernel body; on TPU the
 same BlockSpecs compile to Mosaic).
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -24,7 +24,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import engine
 from repro.core import (Allowlist, And, Eq, Ge, Gt, In, Le, Lt, MonaVec, Ne,
                         Not, Or, SENTINEL_ID)
 from repro.core import metadata as md

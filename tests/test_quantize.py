@@ -1,6 +1,5 @@
 """Unit + property tests for the MonaVec quantization core."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

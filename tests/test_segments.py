@@ -13,7 +13,7 @@ import pytest
 
 from repro.core import Allowlist, MonaVec, SENTINEL_ID, derive_segment_seed
 from tests.lifecycle_harness import (apply_ops, assert_matches_oracle,
-                                     build_index, oracle_search, save_digest)
+                                     build_index, save_digest)
 
 
 def _vecs(rng, n, dim=16):

@@ -1,6 +1,5 @@
 """End-to-end behaviour of the paper's system (replaces the scaffold stub)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import numpy as np
 import pytest
 
 import repro.configs as C
-from repro.core import Allowlist, GlobalStd, MonaVec, TenantRegistry
+from repro.core import MonaVec, TenantRegistry
 from repro.core.scoring import score_f32, topk
 from repro.data import synthetic as syn
 
