@@ -1,0 +1,124 @@
+"""Binarized cascade vs the full 4-bit scan (DESIGN.md §11 gate).
+
+The cascade's claim is a memory-bandwidth trade: the coarse pass reads
+dim_pad/8 bytes per row (sign) instead of the full scan's dim_pad/2, and
+only ``m = rescore_mult * k`` survivors per segment pay the 4-bit gathered
+rescore.  This bench measures both sides of the claim on the same corpus:
+
+  * QPS of the full scan (``rescore_mult`` absent — the plain plan) vs the
+    cascade at the default budget, same index, same queries;
+  * recall@10 of each against the exact f32 oracle, plus the cascade's
+    overlap with the full scan's own ids (the cascade can only lose rows
+    the coarse proxy misranks — this is the number the ≥0.95x acceptance
+    bound pins).
+
+The paper-scale point is 1M x 1024 (acceptance: cascade ≥ 3x the full
+scan's QPS at ≥ 0.95x its recall@10); 45k x 1024 shows the same shape at
+a size where the full scan is still comfortably cache-resident.
+
+    PYTHONPATH=src python -m benchmarks.cascade_bench [--n 45000] [--dim 1024]
+
+Emits the standard ``name,us_per_call,derived`` rows plus structured
+records for the BENCH_cascade.json artifact (``bytes_per_vector`` is the
+FIRST-PASS bytes read per row: the coarse plane for the cascade, the
+packed codes for the full scan — the compression the paper claims).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import MonaVec
+from repro.core.binary import DEFAULT_RESCORE_MULT
+from repro.data.synthetic import embedding_corpus, queries_from_corpus
+
+from .common import emit, ground_truth, recall_at_10, record, time_fn
+
+
+def bench_cascade(n: int = 45_000, dim: int = 1024, batch_q: int = 16,
+                  k: int = 10, kinds: Sequence[str] = ("sign", "crumb"),
+                  rescore_mults: Sequence[int] = (DEFAULT_RESCORE_MULT,),
+                  ) -> None:
+    corpus = embedding_corpus(41, n, dim)
+    queries = np.asarray(queries_from_corpus(corpus, 141, batch_q))
+    gt = ground_truth(queries, corpus, "cosine", k)
+
+    # ONE build serves every kind: the coarse code is a pure function of
+    # the packed nibbles, so enable_coarse just re-derives the codes, and
+    # the plan cache keys on enc.coarse — the full scan is the SAME plan
+    # either way and is measured once as the shared baseline.
+    idx = MonaVec.build(corpus, metric="cosine")
+    packed_bpv = int(idx.backend.enc.packed.shape[-1])
+
+    full = idx.searcher(k=k, use_kernel=False)
+    full.warmup(batch_q)
+    us_full = time_fn(lambda: full(queries))
+    ids_full = np.asarray(full(queries)[1])
+    rec_full = recall_at_10(ids_full, gt)
+    qps_full = batch_q / (us_full / 1e6)
+    emit(f"cascade/fullscan/n{n}", us_full,
+         f"qps={qps_full:.1f} recall={rec_full:.3f} "
+         f"bytes_per_vec={packed_bpv}")
+    record(bench="cascade", kind="full", n=n, dim=dim, batch_q=batch_q,
+           k=k, rescore_mult=0, qps=float(qps_full),
+           recall_at_10=float(rec_full), bytes_per_vector=packed_bpv,
+           us_per_call=float(us_full))
+
+    for kind in kinds:
+        idx.enable_coarse(kind)
+        code_bpv = int(idx.backend.enc.ccodes.shape[-1])
+
+        for rm in rescore_mults:
+            casc = idx.searcher(k=k, use_kernel=False, rescore_mult=rm)
+            casc.warmup(batch_q)
+            us = time_fn(lambda: casc(queries))
+            ids = np.asarray(casc(queries)[1])
+            rec = recall_at_10(ids, gt)
+            rec_vs_full = recall_at_10(ids, ids_full)
+            qps = batch_q / (us / 1e6)
+            speedup = us_full / us
+            emit(f"cascade/{kind}/n{n}/rm{rm}", us,
+                 f"qps={qps:.1f} recall={rec:.3f} "
+                 f"vs_fullscan={rec_vs_full:.3f} speedup={speedup:.2f}x "
+                 f"m={rm * k} bytes_per_vec={code_bpv}")
+            record(bench="cascade", kind=kind, n=n, dim=dim, batch_q=batch_q,
+                   k=k, rescore_mult=int(rm), qps=float(qps),
+                   recall_at_10=float(rec), bytes_per_vector=code_bpv,
+                   us_per_call=float(us))
+
+
+def emit_benchmark() -> None:
+    """Hook for benchmarks.run: the acceptance shapes (45k and 1M x 1024)."""
+    bench_cascade(n=45_000, dim=1024)
+    bench_cascade(n=1_000_000, dim=1024)
+
+
+def emit_benchmark_smoke() -> None:
+    """CI smoke hook: tiny shape, both coarse kinds, same code paths — the
+    cascade plan (coarse_scan -> survivor_topk -> gathered_rescore) compiles
+    and is gated on recall/qps/bytes against the committed baseline."""
+    bench_cascade(n=4_096, dim=128, batch_q=4, kinds=("sign", "crumb"),
+                  rescore_mults=(8,))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=45_000)
+    ap.add_argument("--dim", type=int, default=1024)
+    ap.add_argument("--batch-q", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--kinds", default="sign,crumb")
+    ap.add_argument("--rescore-mults", default=str(DEFAULT_RESCORE_MULT))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_cascade(n=args.n, dim=args.dim, batch_q=args.batch_q, k=args.k,
+                  kinds=tuple(args.kinds.split(",")),
+                  rescore_mults=tuple(
+                      int(r) for r in args.rescore_mults.split(",")))
+
+
+if __name__ == "__main__":
+    main()

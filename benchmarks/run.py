@@ -54,6 +54,7 @@ def main() -> None:
                     help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
 
+    from . import cascade_bench
     from . import common
     from . import dist_scan
     from . import engine_bench
@@ -84,6 +85,8 @@ def main() -> None:
          engine_bench.emit_benchmark_smoke),
         ("filtered", filtered_bench.emit_benchmark,
          filtered_bench.emit_benchmark_smoke),
+        ("cascade", cascade_bench.emit_benchmark,
+         cascade_bench.emit_benchmark_smoke),
         ("roofline", roofline.emit_benchmark, None),
     ]
     print("name,us_per_call,derived")

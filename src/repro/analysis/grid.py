@@ -53,6 +53,8 @@ class GridPoint:
     sharded: bool = False
     hybrid: bool = False
     avg_bits: Optional[float] = None   # BF mixed-precision point
+    coarse: Optional[str] = None       # sign | crumb: attach coarse codes
+    rescore_mult: Optional[int] = None  # cascade rescore budget (r*k)
 
 
 def default_grid() -> Tuple[GridPoint, ...]:
@@ -74,6 +76,16 @@ def default_grid() -> Tuple[GridPoint, ...]:
     pts.append(GridPoint(label="sharded/cosine/b4/static", sharded=True))
     pts.append(GridPoint(label="hybrid/cosine/b4/static+where",
                          hybrid=True, where=True))
+    # Binarized-cascade points (DESIGN.md §11): r*k=16 < every segment size
+    # (48 base / 24 extra), so the rescore_mult knob survives normalization
+    # and the coarse_scan/survivor_topk/gathered_rescore stages compile.
+    pts.append(GridPoint(label="cascade-sign/cosine/b4/static",
+                         coarse="sign", rescore_mult=4))
+    pts.append(GridPoint(label="cascade-crumb/l2/b4/mutated+where",
+                         coarse="crumb", rescore_mult=4,
+                         lifecycle="mutated", where=True))
+    pts.append(GridPoint(label="cascade-sign/sharded/cosine/b4/static",
+                         coarse="sign", rescore_mult=4, sharded=True))
     return tuple(pts)
 
 
@@ -111,7 +123,7 @@ def _build_index(point: GridPoint) -> object:
     meta = _meta(N_BASE, seed=7) if point.where else None
     idx = MonaVec.build(
         _vectors(N_BASE, seed=3), metric=point.metric, index=point.index,
-        bits=point.bits, meta=meta, **kwargs)
+        bits=point.bits, meta=meta, coarse=point.coarse, **kwargs)
     if point.lifecycle == "mutated":
         add_meta = _meta(N_EXTRA, seed=8) if point.where else None
         idx.add(_vectors(N_EXTRA, seed=4), meta=add_meta)
@@ -199,9 +211,11 @@ def _run_point(point: GridPoint, current: Dict[str, object]) -> None:
     idx = _build_index(point)
     current["n_corpus"] = _min_segment_rows(idx)
     target = idx.shard() if point.sharded else idx
+    kw = ({"rescore_mult": point.rescore_mult}
+          if point.rescore_mult is not None else {})
     for b in BATCHES:
         q = _vectors(b, seed=11)
-        target.search(q, k=K, where=where)
+        target.search(q, k=K, where=where, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +228,7 @@ STAGE_MODULES = (
     "repro.core.hnsw",
     "repro.core.segments",
     "repro.core.predicate",
+    "repro.core.binary",
     "repro.dist.retrieval",
     "repro.engine.fusion",
 )
@@ -242,8 +257,14 @@ def _coverage_witnesses() -> Dict[str, Callable[[Sequence[StageCapture]], bool]]
         "repro.core.hnsw:search_stage": by_stage("main", "HnswIndex"),
         "repro.core.segments:merge_stage": by_stage("merge"),
         "repro.core.predicate:build_stage_fn": by_stage("predicate_mask"),
+        "repro.core.binary:coarse_scan_stage": by_stage("coarse_scan"),
+        "repro.core.binary:survivor_topk_stage": by_stage("survivor_topk"),
+        "repro.core.binary:gathered_rescore_stage":
+            by_stage("gathered_rescore"),
         "repro.dist.retrieval:make_scan_topk_shardmap":
             by_stage("shard_scan", "ShardedMonaVec"),
+        "repro.dist.retrieval:make_cascade_topk_shardmap":
+            by_stage("cascade_shard_scan", "ShardedMonaVec"),
         "repro.engine.fusion:search_hybrid": hybrid_point,
     }
 

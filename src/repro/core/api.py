@@ -80,9 +80,14 @@ class MonaVec:
         std: Optional[GlobalStd] = None,
         ids: Optional[np.ndarray] = None,
         meta: Optional[dict] = None,
+        coarse: Optional[str] = None,
         **kwargs,
     ) -> "MonaVec":
         vectors = jnp.asarray(vectors)
+        if coarse is not None and index != "bruteforce":
+            raise ValueError(
+                "coarse= (the binarized cascade) requires the bruteforce "
+                f"index, got index={index!r}")
         if index == "bruteforce":
             be = BruteForceIndex.build(
                 vectors, metric=metric, seed=seed, bits=bits, std=std, ids=ids,
@@ -100,7 +105,10 @@ class MonaVec:
             raise ValueError(f"unknown index {index!r}")
         store = (MetaStore.build(meta, int(vectors.shape[0]))
                  if meta else None)
-        return MonaVec(backend=be, meta=store)
+        idx = MonaVec(backend=be, meta=store)
+        if coarse is not None:
+            idx.enable_coarse(coarse)
+        return idx
 
     # -- corpus introspection ---------------------------------------------
 
@@ -236,6 +244,22 @@ class MonaVec:
             )
         self.mut = seg.SegmentedState.fresh(self.backend.enc.n)
         return reclaimed
+
+    def enable_coarse(self, kind: str = "sign") -> "MonaVec":
+        """Derive + attach the binarized coarse code (DESIGN.md §11) to every
+        segment, in place.  Pure function of the packed codes, so enabling on
+        a loaded pre-v10 index yields exactly the codes a ``coarse=`` build
+        would have persisted.  Unlocks ``search(..., rescore_mult=r)``."""
+        from . import binary
+        if not isinstance(self.backend, BruteForceIndex):
+            raise TypeError(
+                "the binarized cascade requires the bruteforce backend, "
+                f"got {type(self.backend).__name__}")
+        self.backend = dataclasses.replace(
+            self.backend, enc=binary.attach_coarse(self.backend.enc, kind))
+        for s in self.mut.extras:
+            s.enc = binary.attach_coarse(s.enc, kind)
+        return self
 
     # -- distribution ------------------------------------------------------
 

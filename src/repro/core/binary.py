@@ -1,0 +1,285 @@
+"""Training-free binarized coarse codes (cascade stage 1; DESIGN.md §11).
+
+The coarse code is a PURE FUNCTION of the packed Lloyd-Max nibbles — no data
+pass, no training, no new randomness — because the quantizer boundary tables
+straddle zero exactly:
+
+  * ``BOUNDARIES_4BIT[7] == 0.0`` and ``quantize`` counts boundaries <= x, so
+    a 4-bit code >= 8 iff the rotated coordinate is >= 0; likewise a 2-bit
+    code >= 2.  The **sign** code packs that predicate 8 dims/byte
+    (little-endian, ``np.packbits(bitorder="little")`` layout): 32x smaller
+    than f32, 4x smaller than the 4-bit nibbles.
+  * The **crumb** code keeps the top two bits of the code (``code4 >> 2``;
+    a 2-bit block's codes verbatim), stored as TWO SIGN PLANES — the hi
+    bit plane then the lo bit plane, each packed 8 dims/byte like the sign
+    code — d'/4 bytes total: 16x smaller than f32.  The plane layout is
+    what makes the crumb proxy an AND+popcount (kernels/binary_dot.py)
+    instead of a per-dim unpack.
+
+Query side, the sign bit is ``q_rot >= 0`` (EXACTLY the corpus predicate —
+shared zero boundary) and the crumb planes come from the 2-bit Lloyd-Max
+code of the rotated query; both are derived INSIDE the coarse stage from
+the same rotated query the rescore uses, so the cascade adds no second
+rotation.
+
+Scores are integer proxies (see kernels/binary_dot.py): ``-hamming`` for
+sign, the symmetric-level affinity for crumb.  Integer proxies make the
+kernel/jnp mirror bit-identical by construction and keep the survivor set
+deterministic: ``survivor_topk_stage`` canonicalizes ties by ROW ORDER
+(equivalent to a stable top-k followed by an ascending index sort), which
+is the admissibility contract the cascade property tests pin against the
+brute-force oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from . import lloydmax
+from . import quantize as qz
+
+SIGN = "sign"
+CRUMB = "crumb"
+COARSE_KINDS = (SIGN, CRUMB)
+
+#: Default rescore budget multiplier: the cascade rescores m = mult * k
+#: candidates with the full 4-bit kernel (m >= n collapses to the full scan).
+DEFAULT_RESCORE_MULT = 32
+
+#: Default static bound on |proxy| when the caller passes no ``vbound``:
+#: proxies live in [-9 d', 9 d'], so 2^29 covers any conceivable d' while
+#: keeping the bisection endpoints safely inside int32 (lo + hi never
+#: overflows).  Callers that know d' pass vbound = 9 * dim_pad and the
+#: bisection converges in ~15 passes instead of 31.
+VBOUND_MAX = 1 << 29
+
+#: Integer analogue of allowlist.NEG for the int32 proxy domain: the value
+#: dead rows carry INSIDE survivor selection.  Real proxies live in
+#: [-9 d', 9 d'] — nowhere near the sentinel.
+INT_NEG = int(np.iinfo(np.int32).min)
+
+#: Compiled stage coverage contract for the repro.analysis auditor.
+PLAN_STAGES = ("coarse_scan_stage", "survivor_topk_stage",
+               "gathered_rescore_stage")
+
+_BIT_WEIGHTS = tuple(1 << t for t in range(8))      # little-endian bit weights
+
+
+def code_bytes(dim_pad: int, kind: str) -> int:
+    """Packed coarse-code bytes per vector for a rotated dim d'."""
+    if kind == SIGN:
+        if dim_pad % 8 != 0:
+            raise ValueError(f"sign code requires dim_pad % 8 == 0, got {dim_pad}")
+        return dim_pad // 8
+    if kind == CRUMB:
+        if dim_pad % 8 != 0:
+            raise ValueError(f"crumb code requires dim_pad % 8 == 0, got {dim_pad}")
+        return dim_pad // 4
+    raise ValueError(f"unknown coarse kind {kind!r}; expected one of {COARSE_KINDS}")
+
+
+def _unpacked_codes(packed: np.ndarray, bits: int, n4_dims: int) -> np.ndarray:
+    """Packed corpus bytes -> per-dim crumb codes in [0,4) (numpy, host side).
+
+    4-bit codes coarsen via ``>> 2``; 2-bit codes pass through; mixed mode
+    concatenates per block ([4-bit dims | 2-bit dims], the packed layout).
+    """
+    if bits == 4:
+        return np.asarray(qz.unpack_4bit(packed)) >> 2
+    if bits == 2:
+        return np.asarray(qz.unpack_2bit(packed))
+    if bits == 3:
+        b4 = n4_dims // 2
+        c4 = np.asarray(qz.unpack_4bit(packed[:, :b4])) >> 2
+        c2 = np.asarray(qz.unpack_2bit(packed[:, b4:]))
+        return np.concatenate([c4, c2], axis=-1)
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def derive_codes(
+    packed: jnp.ndarray,     # [n, bytes] packed Lloyd-Max nibbles/crumbs
+    *,
+    bits: int,
+    n4_dims: int,
+    dim_pad: int,
+    kind: str,
+) -> np.ndarray:
+    """Derive the packed coarse code [n, code_bytes(dim_pad, kind)] uint8.
+
+    Pure function of the packed codes (the sign bit is code4 >= 8 / code2
+    >= 2 — the shared zero boundary; the crumb is the top two code bits,
+    stored as the hi bit plane then the lo bit plane, each packbits
+    little-endian like the sign code), so add/compact segments re-derive
+    byte-identical codes.
+    """
+    nbytes = code_bytes(dim_pad, kind)               # validates kind + dim_pad
+    crumbs = _unpacked_codes(np.asarray(packed), bits, n4_dims)   # [n, d'] in [0,4)
+    if kind == SIGN:
+        signs = (crumbs >= 2).astype(np.uint8)       # crumb >= 2 iff code >= mid
+        out = np.packbits(signs, axis=-1, bitorder="little")
+    else:
+        hi = np.packbits((crumbs >> 1).astype(np.uint8), axis=-1,
+                         bitorder="little")
+        lo = np.packbits((crumbs & 1).astype(np.uint8), axis=-1,
+                         bitorder="little")
+        out = np.concatenate([hi, lo], axis=-1)
+    assert out.shape == (crumbs.shape[0], nbytes)
+    return out
+
+
+def attach_coarse(enc: "qz.Encoded", kind: str) -> "qz.Encoded":
+    """Return a copy of ``enc`` carrying the derived coarse code.
+
+    Idempotent for a fixed kind; pure derivation means attaching after load
+    reproduces the persisted CODE block byte-for-byte.
+    """
+    ccodes = derive_codes(enc.packed, bits=enc.bits, n4_dims=enc.n4_dims,
+                          dim_pad=enc.dim_pad, kind=kind)
+    return dataclasses.replace(enc, coarse=kind, ccodes=jnp.asarray(ccodes))
+
+
+# ---------------------------------------------------------------------------
+# Query-side coarse encodings (traced; called inside the coarse stage).
+# ---------------------------------------------------------------------------
+
+def query_sign_bits(q_rot: jnp.ndarray) -> jnp.ndarray:
+    """[b, d'] rotated f32 -> [b, d'/8] packed sign bytes (little-endian).
+
+    ``q_rot >= 0`` is EXACTLY the corpus sign predicate: quantize counts
+    boundaries <= x and the mid boundary is 0.0 in both tables.
+    """
+    b, d = q_rot.shape
+    bits = (q_rot >= 0).astype(jnp.uint8).reshape(b, d // 8, 8)
+    weights = jnp.asarray(_BIT_WEIGHTS, jnp.uint8)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def query_crumb_planes(q_rot: jnp.ndarray) -> jnp.ndarray:
+    """[b, d'] rotated f32 -> [b, d'/4] packed crumb planes (hi || lo bytes).
+
+    The 2-bit Lloyd-Max code of the rotated query, split into its hi and
+    lo bit planes and packed little-endian — the EXACT corpus layout of
+    ``derive_codes(kind="crumb")``, so kernel and corpus bytes line up.
+    """
+    b, d = q_rot.shape
+    c2 = lloydmax.quantize(q_rot, 2).astype(jnp.uint8)
+    weights = jnp.asarray(_BIT_WEIGHTS, jnp.uint8)
+
+    def pack(bits):
+        return jnp.sum(bits.reshape(b, d // 8, 8) * weights,
+                       axis=-1).astype(jnp.uint8)
+
+    return jnp.concatenate([pack(c2 >> 1), pack(c2 & 1)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Cascade plan stages (compiled per-plan by engine/plan.py; the names below
+# are the PLAN_STAGES coverage contract).
+# ---------------------------------------------------------------------------
+
+def coarse_scan_stage(
+    q_rot: jnp.ndarray,      # [b, d'] rotated f32 queries (post-perm)
+    ccodes: jnp.ndarray,     # [n, code_bytes] packed coarse codes
+    *,
+    kind: str,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Integer proxy scores [b, n] (int32), HIGHER = closer for both kinds."""
+    if kind == SIGN:
+        ham = ops.sign_coarse_raw(ccodes, query_sign_bits(q_rot),
+                                  use_kernel=use_kernel, interpret=interpret)
+        return -ham
+    if kind == CRUMB:
+        return ops.crumb_coarse_raw(ccodes, query_crumb_planes(q_rot),
+                                    use_kernel=use_kernel, interpret=interpret)
+    raise ValueError(f"unknown coarse kind {kind!r}")
+
+
+def survivor_topk_stage(
+    proxy: jnp.ndarray,      # [b, n] int32 proxies, |proxy| <= vbound
+    live: jnp.ndarray,       # [n] bool — tombstone & allowlist & predicate mask
+    *,
+    m: int,
+    vbound: Optional[int] = None,
+) -> jnp.ndarray:
+    """Top-m survivor row indices [b, m] (int32), ROW-ORDER canonical.
+
+    Exact integer top-m WITHOUT ``lax.top_k``: XLA's CPU TopK re-walks the
+    whole row per selection (~0.2 s at 45k x m=320 — it would erase the
+    coarse pass's entire win).  Integer proxies admit a cheaper exact plan:
+
+      1. bisect t*, the m-th-largest proxy per row, on the integer value
+         range (each probe is one compare+reduce pass over [b, n]);
+      2. admit every proxy > t*, plus the FIRST ``m - count(> t*)`` rows
+         with proxy == t* in row order (a cumsum over the tie mask) — the
+         stable-top-k tie rule, ties broken by lowest row;
+      3. compact the admitted mask to indices by searchsorted over its
+         cumsum — binary-search gathers only, no scatter, no sort.
+
+    Masks are fused BEFORE selection (§3.5: filtered queries must not lose
+    candidates to dead rows), dead slots come back as -1 AFTER the real
+    survivors, and survivors are emitted ascending — the same canonical
+    form as a stable top-k followed by an index sort, which is what the
+    cascade property tests pin against the brute-force oracle.
+    """
+    b, n = proxy.shape
+    bound = VBOUND_MAX if vbound is None else int(vbound)
+    dead = -bound - 1
+    masked = jnp.where(live[None, :], proxy, dead)
+
+    # Invariant: count(>= lo) >= m > count(>= hi); after ceil(log2(hi0-lo0))
+    # halvings hi - lo == 1 and lo is t*.  Dead rows sit below every live
+    # proxy, so they can surface as t* only when fewer than m rows are live
+    # (step 2's `& live` then pads the tail with -1 instead).
+    lo0 = jnp.full((b,), dead, jnp.int32)
+    hi0 = jnp.full((b,), bound + 1, jnp.int32)
+    iters = int(np.ceil(np.log2(2 * bound + 2)))
+
+    def probe(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2
+        ok = jnp.sum((masked >= mid[:, None]).astype(jnp.int32), axis=-1) >= m
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    tstar, _ = jax.lax.fori_loop(0, iters, probe, (lo0, hi0))
+
+    above = masked > tstar[:, None]
+    ties = masked == tstar[:, None]
+    j = m - jnp.sum(above.astype(jnp.int32), axis=-1)     # tie budget (> 0)
+    tie_rank = jnp.cumsum(ties.astype(jnp.int32), axis=-1)
+    sel = (above | (ties & (tie_rank <= j[:, None]))) & live[None, :]
+
+    rank = jnp.cumsum(sel.astype(jnp.int32), axis=-1)     # 1-based, per row
+    targets = jnp.arange(1, m + 1, dtype=jnp.int32)
+    pos = jax.vmap(lambda r: jnp.searchsorted(r, targets, side="left"))(rank)
+    return jnp.where(pos < n, pos, -1).astype(jnp.int32)
+
+
+def gathered_rescore_stage(
+    q_rot: jnp.ndarray,      # [b, d'] rotated f32 queries
+    packed: jnp.ndarray,     # [n, bytes] packed 4/2-bit corpus
+    qnorms: jnp.ndarray,     # [n] f32
+    cand: jnp.ndarray,       # [b, m] survivor rows, -1 = dead
+    *,
+    bits: int,
+    n4_dims: int,
+    metric: str,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Metric-adjusted 4-bit rescores [b, m]; dead survivors come back NEG.
+
+    Delegates to ops.score_gathered — the SAME gathered kernel the IVF probe
+    scan and HNSW beam use, so cascade rescores inherit their bit-identity
+    and masking contract unchanged.
+    """
+    return ops.score_gathered(packed, q_rot, cand, bits=bits, n4_dims=n4_dims,
+                              qnorms=qnorms, metric=metric,
+                              use_kernel=use_kernel, interpret=interpret)

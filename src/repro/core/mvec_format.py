@@ -1,4 +1,4 @@
-"""`.mvec` single-file index format, versions 6-9 (paper §3.8 + DESIGN.md §6/§8).
+"""`.mvec` single-file index format, versions 6-10 (paper §3.8 + DESIGN.md §6/§8/§11).
 
 Fixed 56-byte header followed by variable-length blocks.  The embedded SEED
 makes load→search reproduce the same top-K on any platform; all payloads are
@@ -10,7 +10,9 @@ Header layout (offsets in bytes, little-endian):
                          persisted — our documented extension, DESIGN.md §2;
                          8 when the index is MUTATED: extra segments and/or
                          tombstones — DESIGN.md §6; 9 when per-row METADATA
-                         COLUMNS are attached — DESIGN.md §8)
+                         COLUMNS are attached — DESIGN.md §8; 10 when a
+                         binarized COARSE CODE block is attached —
+                         DESIGN.md §11)
     8   DIM         u32  input dimension d
     12  METRIC      u8   0=Cosine 1=Dot 2=L2
     13  BIT_WIDTH   u8   2, 3 (mixed) or 4
@@ -26,9 +28,14 @@ Header layout (offsets in bytes, little-endian):
                          reserved-zero field, so pre-existing readers and
                          files are unaffected)
     44  HAS_STD     u8   1 if global standardization block follows
-    45  HAS_PERM    u8   v8/v9 only: 1 if a permutation block follows (v7
+    45  HAS_PERM    u8   v8+ only: 1 if a permutation block follows (v7
                          signals the same through VERSION; always 0 in v6/v7)
-    46  RESERVED    10B  (pads the header to exactly 56 bytes)
+    46  COARSE_KIND u8   v10 only: 1=sign 2=crumb (always 0 before v10, so
+                         v6-v9 files are byte-identical to their pre-v10
+                         serialization)
+    47  HAS_META    u8   v10 only: 1 if the metadata column table follows
+                         (v9 signals the same through VERSION)
+    48  RESERVED    8B   (pads the header to exactly 56 bytes)
 
 Blocks (in order): STD_MEAN [f32 × dim], STD_INV_STD [f32 × dim] (if HAS_STD;
 scalar globals replicated per the paper's field spec), PERM [i32 × dim_pad]
@@ -58,6 +65,20 @@ metadata column table (DESIGN.md §8):
         per segment INCLUDING the base, in order:
             VALUES [i64|f64|i32] the segment's rows (i32 = vocab codes)
 
+Version 10 (an index carrying binarized coarse codes for the cascade —
+DESIGN.md §11) writes the v8 segment-table body, then the metadata column
+table if HAS_META, then the coarse CODE block:
+
+    per segment INCLUDING the base, in order:
+        CODES      [u8]          row-major [n, code_bytes] coarse codes
+                                 (code_bytes = dim_pad/8 for sign,
+                                 dim_pad/4 for crumb; COARSE_KIND in the
+                                 header names the layout)
+
+The codes are a pure function of the packed bytes (``core.binary``), so v10
+is a cache, not new information — but persisting it keeps load→search free
+of any derivation pass, per the paper's mmap-and-go contract.
+
 Every block is length-prefixed and every read is validated against the bytes
 actually present — a truncated or garbage-tailed file raises ``ValueError``
 naming the short block instead of letting ``np.frombuffer`` misparse it.
@@ -83,9 +104,11 @@ HEADER_LEN = 56
 _METRIC_CODE = {COSINE: 0, DOT: 1, L2: 2}
 _METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
 INDEX_BRUTEFORCE, INDEX_IVF, INDEX_HNSW = 0, 1, 2
-SUPPORTED_VERSIONS = (6, 7, 8, 9)
+SUPPORTED_VERSIONS = (6, 7, 8, 9, 10)
 _META_DTYPE = {md.KIND_I64: np.int64, md.KIND_F64: np.float64,
                md.KIND_STR: np.int32}
+_COARSE_CODE = {"sign": 1, "crumb": 2}
+_COARSE_NAME = {v: k for k, v in _COARSE_CODE.items()}
 
 
 def _write_array(buf: io.BytesIO, arr: np.ndarray) -> None:
@@ -197,7 +220,18 @@ def save(path: str, f: MvecFile) -> None:
         f.tombs is not None and any(t.any() for t in f.tombs)
     )
     has_meta = f.meta is not None and bool(f.meta)
-    if has_meta:
+    seg_encs = [enc] + [seg.enc for seg in f.extras]
+    with_codes = [e.ccodes is not None for e in seg_encs]
+    if any(with_codes):
+        if not all(with_codes):
+            raise ValueError(
+                "coarse codes must be attached to every segment or to none "
+                f"({sum(with_codes)} of {len(with_codes)} segments have them)"
+            )
+        if any(e.coarse != enc.coarse for e in seg_encs):
+            raise ValueError("segments disagree on the coarse-code kind")
+        version = 10
+    elif has_meta:
         version = 9
     elif mutated:
         version = 8
@@ -219,7 +253,10 @@ def save(path: str, f: MvecFile) -> None:
         enc.n4_dims, f.index_param, f.index_param2,
         1 if has_std else 0,
         1 if (version >= 8 and has_perm) else 0,
-        b"\x00" * 10,
+        bytes([
+            _COARSE_CODE[enc.coarse] if version == 10 else 0,
+            1 if (version == 10 and has_meta) else 0,
+        ]) + b"\x00" * 8,
     )
     assert len(header) == HEADER_LEN, len(header)
     buf = io.BytesIO()
@@ -246,7 +283,7 @@ def save(path: str, f: MvecFile) -> None:
         tombs = f.tombs or [np.zeros(n, dtype=bool) for n in seg_rows]
         for t in tombs:
             _write_array(buf, np.packbits(np.asarray(t, dtype=bool)))
-    if version == 9:
+    if has_meta:
         bounds = np.concatenate([[0], np.cumsum(seg_rows)]).tolist()
         buf.write(struct.pack("<I", len(f.meta.columns)))
         for name, col in f.meta.columns.items():
@@ -259,6 +296,9 @@ def save(path: str, f: MvecFile) -> None:
             for lo, hi in zip(bounds, bounds[1:]):
                 _write_array(buf, np.asarray(
                     col.values[lo:hi], dtype=_META_DTYPE[col.kind]))
+    if version == 10:
+        for e in seg_encs:
+            _write_array(buf, np.asarray(e.ccodes, dtype=np.uint8))
     with open(path, "wb") as fh:
         fh.write(buf.getvalue())
 
@@ -283,8 +323,19 @@ def load(path: str) -> MvecFile:
     if version not in SUPPORTED_VERSIONS:
         raise ValueError(
             f"unsupported .mvec version {version} (this reader supports "
-            f"versions {', '.join(map(str, SUPPORTED_VERSIONS))})"
+            f"versions {', '.join(map(str, SUPPORTED_VERSIONS))}; the highest "
+            f"supported version is {SUPPORTED_VERSIONS[-1]})"
         )
+    coarse_kind = None
+    has_meta_flag = False
+    if version == 10:
+        if _tail[0] not in _COARSE_NAME:
+            raise ValueError(
+                f".mvec corrupt header: version 10 requires COARSE_KIND 1 "
+                f"(sign) or 2 (crumb), got {_tail[0]}"
+            )
+        coarse_kind = _COARSE_NAME[_tail[0]]
+        has_meta_flag = bool(_tail[1])
     rd = _Reader(data, HEADER_LEN)
     std = None
     if has_std:
@@ -343,12 +394,12 @@ def load(path: str) -> MvecFile:
             tombs.append(np.unpackbits(packed_bits)[:n_rows].astype(bool))
 
     meta: Optional[md.MetaStore] = None
-    if version == 9:
+    if version == 9 or has_meta_flag:
         n_cols = rd.u32("metadata column table")
         if n_cols == 0:
             raise ValueError(
-                ".mvec corrupt block 'metadata column table': version 9 "
-                "requires at least one column"
+                ".mvec corrupt block 'metadata column table': the metadata "
+                "column table requires at least one column"
             )
         seg_rows = [int(count)] + [int(e.ids.shape[0]) for e in extras]
         cols: "collections.OrderedDict[str, md.Column]" = (
@@ -385,6 +436,21 @@ def load(path: str) -> MvecFile:
                 )
             cols[name] = md.Column(kind=kind, values=values, vocab=vocab)
         meta = md.MetaStore(columns=cols)
+
+    if version == 10:
+        from .binary import code_bytes
+        cb = code_bytes(dim_pad, coarse_kind)
+        seg_ns = [int(count)] + [int(e.ids.shape[0]) for e in extras]
+        seg_codes = []
+        for i, n_rows in enumerate(seg_ns):
+            codes = rd.array(np.uint8, f"coarse codes[{i}]",
+                             count=n_rows * cb)
+            seg_codes.append(jnp.asarray(codes.reshape(n_rows, cb)))
+        enc = dataclasses.replace(enc, coarse=coarse_kind,
+                                  ccodes=seg_codes[0])
+        for seg, cc in zip(extras, seg_codes[1:]):
+            seg.enc = dataclasses.replace(seg.enc, coarse=coarse_kind,
+                                          ccodes=cc)
     rd.expect_eof()
 
     return MvecFile(

@@ -77,6 +77,8 @@ class Encoded:
     n4_dims: int = 0             # 4-bit dims in mixed mode (paper header N4_DIMS)
     std: Optional[GlobalStd] = None
     perm: Optional[np.ndarray] = None   # mixed-mode variance permutation (v7 ext)
+    coarse: Optional[str] = None        # binarized coarse-code kind ("sign"/"crumb")
+    ccodes: Optional[jnp.ndarray] = None  # [n, code_bytes] uint8 coarse codes (v10)
 
     @property
     def n(self) -> int:

@@ -117,15 +117,25 @@ class SegmentedState:
 
 def encode_segment(vectors: jnp.ndarray, base: qz.Encoded, seed: int) -> qz.Encoded:
     """Quantize a new segment under the BASE segment's configuration (metric,
-    bit mode, std, v7 permutation) but its own derived seed."""
+    bit mode, std, v7 permutation, coarse-code kind) but its own derived
+    seed.  When the base carries a binarized coarse code the new segment
+    derives its own from its packed codes (a pure function — DESIGN.md §11),
+    so add()/compact() keep every segment cascade-capable."""
     vectors = jnp.asarray(vectors)
     if base.bits in (2, 4):
-        return qz.encode(vectors, metric=base.metric, seed=seed,
-                         bits=base.bits, std=base.std)
-    # Mixed mode: pin n4_dims to the base split (allocate_bits is avg-driven;
-    # the override keeps every segment's packed layout byte-compatible).
-    return qz.encode_mixed(vectors, metric=base.metric, seed=seed,
-                           std=base.std, perm=base.perm, n4_dims=base.n4_dims)
+        enc = qz.encode(vectors, metric=base.metric, seed=seed,
+                        bits=base.bits, std=base.std)
+    else:
+        # Mixed mode: pin n4_dims to the base split (allocate_bits is
+        # avg-driven; the override keeps every segment's packed layout
+        # byte-compatible).
+        enc = qz.encode_mixed(vectors, metric=base.metric, seed=seed,
+                              std=base.std, perm=base.perm,
+                              n4_dims=base.n4_dims)
+    if base.coarse is not None:
+        from . import binary
+        enc = binary.attach_coarse(enc, base.coarse)
+    return enc
 
 
 def reconstruct_vectors(enc: qz.Encoded) -> np.ndarray:

@@ -35,16 +35,17 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import binary as bin_mod
 from repro.core.scoring import adjust_scores, score_f32, topk
 from repro.kernels.ops import score_raw
 from repro.launch.mesh import data_axes
 
 from .partition import data_axis_size, pad_rows, shard_sizes
 
-#: repro.analysis coverage hook (DESIGN.md §10): the shard_map scan factory's
-#: output runs as the engine's ``shard_scan`` plan stage; the determinism
-#: auditor's grid must capture it.
-PLAN_STAGES = ("make_scan_topk_shardmap",)
+#: repro.analysis coverage hook (DESIGN.md §10): the shard_map scan factories'
+#: outputs run as the engine's ``shard_scan`` / ``cascade_shard_scan`` plan
+#: stages; the determinism auditor's grid must capture both.
+PLAN_STAGES = ("make_scan_topk_shardmap", "make_cascade_topk_shardmap")
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +172,83 @@ def make_scan_topk_shardmap(
 
         in_specs = [P(), P(axes, None), P(axes)]
         operands = [q_rot, packed_p, qnorms_p]
+        if with_mask:
+            in_specs.append(P(axes))
+            operands.append(pad_rows(mask, n_pad, fill=False))
+        return shard_map(
+            local_scan, mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=(P(), P()),
+            check_rep=False,
+        )(*operands)
+
+    return call
+
+
+def make_cascade_topk_shardmap(
+    mesh,
+    *,
+    metric: str = "cosine",
+    k: int = 10,
+    bits: int = 4,
+    n4_dims: int = 0,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    n_valid: Optional[int] = None,
+    on_trace=None,
+    with_mask: bool = False,
+    kind: str = bin_mod.SIGN,
+    m: int = 320,
+):
+    """Binarized-cascade variant of make_scan_topk_shardmap (DESIGN.md §11):
+    fn(q_rot, packed, qnorms, ccodes[, mask]) -> (scores [b,k], gids [b,k]).
+
+    Each shard runs the WHOLE cascade locally on its contiguous row block —
+    integer coarse proxy, survivor top-m (padding and admissibility masks
+    fused BEFORE selection, so filtered shards spend their full budget on
+    admissible rows), gathered 4-bit rescore — then local top-k and the
+    same stable all-gather merge as the plain scan.  Dead survivor slots
+    surface as -inf for the caller to sentinel-convert (exactly the
+    with_mask contract of the plain factory).
+    """
+    axes, n_shards = _mesh_data_info(mesh)
+
+    @jax.jit
+    def call(q_rot, packed, qnorms, ccodes, mask=None):
+        if on_trace is not None:
+            on_trace()
+        n = packed.shape[0] if n_valid is None else n_valid
+        per, n_pad = shard_sizes(n, n_shards)
+        m_local = min(m, per)
+        k_local = min(k, per, m_local)
+        packed_p = pad_rows(packed, n_pad)
+        qnorms_p = pad_rows(qnorms, n_pad, fill=1.0)
+        ccodes_p = pad_rows(ccodes, n_pad)
+
+        def local_scan(q, pk, qn, cc, *rest):
+            gid0 = _shard_index(axes, mesh) * per
+            gids = gid0 + jnp.arange(per, dtype=jnp.int32)
+            live = gids < n                                 # padding sentinel
+            if rest:
+                live = live & rest[0]                       # row admissibility
+            proxy = bin_mod.coarse_scan_stage(
+                q, cc, kind=kind, use_kernel=use_kernel, interpret=interpret)
+            # |proxy| <= 9 d'; d' recovers from the plane width (d'/8 bytes
+            # per sign plane, two planes for crumb).
+            d_rot = cc.shape[-1] * (8 if kind == bin_mod.SIGN else 4)
+            cand = bin_mod.survivor_topk_stage(proxy, live, m=m_local,
+                                               vbound=9 * d_rot)
+            s = bin_mod.gathered_rescore_stage(
+                q, pk, qn, cand, bits=bits, n4_dims=n4_dims, metric=metric,
+                use_kernel=use_kernel, interpret=interpret)
+            s = jnp.where(cand >= 0, s, -jnp.inf)           # dead survivors
+            v, si = jax.lax.top_k(s, k_local)               # local stable top-k
+            wrow = jnp.take_along_axis(cand, si, axis=1)
+            wgid = jnp.where(wrow >= 0, gid0 + wrow, 0)
+            return _merge_topk(v, wgid, axes, k)
+
+        in_specs = [P(), P(axes, None), P(axes), P(axes, None)]
+        operands = [q_rot, packed_p, qnorms_p, ccodes_p]
         if with_mask:
             in_specs.append(P(axes))
             operands.append(pad_rows(mask, n_pad, fill=False))

@@ -63,7 +63,19 @@ class ShardedMonaVec:
         if mesh is None:
             mesh = make_local_mesh()
         packed, qnorms, n = place_sharded(mesh, enc.packed, enc.qnorms)
-        enc_sharded = dataclasses.replace(enc, packed=packed, qnorms=qnorms)
+        ccodes = None
+        if enc.ccodes is not None:
+            # Coarse codes shard row-contiguously alongside the packed bytes
+            # (zero pad rows: the scan masks gid >= n before any selection).
+            import jax
+
+            from .partition import (corpus_sharding, data_axis_size,
+                                    pad_rows, shard_sizes)
+            _, n_pad = shard_sizes(n, data_axis_size(mesh))
+            ccodes = jax.device_put(pad_rows(enc.ccodes, n_pad),
+                                    corpus_sharding(mesh, 2))
+        enc_sharded = dataclasses.replace(enc, packed=packed, qnorms=qnorms,
+                                          ccodes=ccodes)
         return ShardedMonaVec(enc=enc_sharded, ids=np.asarray(ids), mesh=mesh,
                               n=n, meta=meta)
 
@@ -77,6 +89,7 @@ class ShardedMonaVec:
     def search(self, queries: jnp.ndarray, k: int = 10, *,
                where: Optional[pred.Predicate] = None,
                where_mask=None,
+               rescore_mult: Optional[int] = None,
                ) -> Tuple[np.ndarray, np.ndarray]:
         """(scores [b,k], external ids [b,k]) — same contract, same results
         as the single-device BruteForce search.  The shard_map scan runs as
@@ -111,7 +124,8 @@ class ShardedMonaVec:
                     pm = pred.evaluate(where, self.meta)
                 mask = pm if mask is None else mask & pm
             self._trace_shards(n_shards)
-            return engine.search_sharded(self, queries, k, where_mask=mask)
+            return engine.search_sharded(self, queries, k, where_mask=mask,
+                                         rescore_mult=rescore_mult)
 
     def _trace_shards(self, n_shards: int) -> None:
         """Under an active QueryTrace, record one structural span per shard
@@ -133,7 +147,8 @@ class ShardedMonaVec:
             tr.pop(sp)
 
     def searcher(self, k: int = 10, *,
-                 where: Optional[pred.Predicate] = None):
-        """Bound search handle over the sharded scan (``engine.Searcher``)."""
+                 where: Optional[pred.Predicate] = None, **knobs):
+        """Bound search handle over the sharded scan (``engine.Searcher``).
+        ``**knobs`` (e.g. ``rescore_mult=``) bind into every call."""
         from repro import engine
-        return engine.Searcher(self, k=k, where=where)
+        return engine.Searcher(self, k=k, where=where, knobs=knobs)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import binary as bin_mod
 from repro.core import bruteforce as bf_mod
 from repro.core import hnsw as hnsw_mod
 from repro.core import ivf as ivf_mod
@@ -220,11 +221,11 @@ def _std_sig(std: Any) -> Optional[tuple]:
 
 def _enc_sig(enc: qz.Encoded) -> tuple:
     return (enc.n, enc.seed, enc.bits, enc.n4_dims, enc.dim, enc.dim_pad,
-            _std_sig(enc.std), enc.perm is not None)
+            _std_sig(enc.std), enc.perm is not None, enc.coarse)
 
 
 _BACKEND_KNOBS = {
-    "BruteForceIndex": frozenset(),
+    "BruteForceIndex": frozenset({"rescore_mult"}),
     "IvfFlatIndex": frozenset({"nprobe"}),
     "HnswIndex": frozenset({"ef"}),
 }
@@ -239,15 +240,38 @@ def _validate_knobs(backend: Any, kwargs: dict) -> None:
             f"unexpected search kwargs for the {kind} backend: {unknown}")
 
 
-def _normalize_knobs(backend: Any, kwargs: dict, k: int) -> dict:
+def _normalize_knobs(backend: Any, extras: Sequence[Any], kwargs: dict,
+                     k: int) -> dict:
     """Fill defaults and clamp exactly like the pre-engine search paths, so
     the normalized knobs are part of the plan key (nprobe=min(nprobe,nlist);
-    the HNSW beam auto-widens to max(ef, k))."""
+    the HNSW beam auto-widens to max(ef, k)).
+
+    BruteForce: ``rescore_mult=r > 0`` selects the binarized cascade with a
+    rescore budget of m = r*k survivors per segment.  When every segment
+    would rescore all of its rows (m >= n_s for all s) the knob normalizes
+    AWAY and the plan IS the plain full-scan plan — which is exactly how
+    the m=n cascade is bit-identical to the full 4-bit scan (the exactness
+    pin in tests/test_cascade.py)."""
     kind = type(backend).__name__
     if kind == "IvfFlatIndex":
         return {"nprobe": min(int(kwargs.get("nprobe", 8)), backend.nlist)}
     if kind == "HnswIndex":
         return {"ef": max(int(kwargs.get("ef", 64)), k)}
+    if kind == "BruteForceIndex":
+        rm = kwargs.get("rescore_mult")
+        rm = 0 if rm is None else int(rm)
+        if rm < 0:
+            raise ValueError(f"rescore_mult must be >= 0, got {rm}")
+        if rm == 0:
+            return {}
+        encs = [backend.enc] + [s.enc for s in extras]
+        if any(e.ccodes is None for e in encs):
+            raise ValueError(
+                "rescore_mult requires an index built with a binarized "
+                "coarse code (MonaVec.build(..., coarse='sign'|'crumb'))")
+        if rm * k >= max(e.n for e in encs):
+            return {}   # full rescore everywhere == the full scan
+        return {"rescore_mult": rm}
     return {}
 
 
@@ -369,6 +393,77 @@ def _build_plan(backend: Any, extras: Sequence[Any], *, key: PlanKey,
 
     rot_stages = [staged("rotate", make_rot(s)) for s in seeds]
 
+    if kind == "BruteForceIndex" and "rescore_mult" in knobs:
+        # Binarized cascade (DESIGN.md §11): coarse_scan -> survivor_topk ->
+        # gathered_rescore per segment, then one selection-only finalizer.
+        # The coarse proxy is INTEGER (bit-identical on every dispatch path);
+        # the only float stages are the rotation and the gathered 4-bit
+        # rescore — the same score_gathered the IVF/HNSW paths compile.  The
+        # live mask (tombstones & allowlist & predicate) gates SURVIVOR
+        # SELECTION, so filtered queries spend their whole rescore budget on
+        # admissible rows (§3.5: filters must not lose candidates).
+        coarse_kind = enc0.coarse
+        m = knobs["rescore_mult"] * k
+        seg_ms = tuple(min(m, n) for n in seg_ns)
+        m_total = sum(seg_ms)
+        offsets = [0] + np.cumsum(seg_ns).tolist()
+
+        coarse_stages = [staged("coarse_scan", marked(
+            lambda q_rot, ccodes: bin_mod.coarse_scan_stage(
+                q_rot, ccodes, kind=coarse_kind, use_kernel=use_kernel,
+                interpret=interpret), "coarse_scan")) for _ in seeds]
+
+        def make_surv(m_i):
+            return staged("survivor_topk", marked(
+                lambda proxy, live_s: bin_mod.survivor_topk_stage(
+                    proxy, live_s, m=m_i, vbound=9 * enc0.dim_pad),
+                "survivor_topk"))
+        surv_stages = [make_surv(m_i) for m_i in seg_ms]
+
+        rescore_stages = [staged("gathered_rescore", marked(
+            lambda q_rot, packed, qnorms, cand:
+            bin_mod.gathered_rescore_stage(
+                q_rot, packed, qnorms, cand, bits=bits, n4_dims=n4,
+                metric=metric, use_kernel=use_kernel, interpret=interpret),
+            "gathered_rescore")) for _ in seeds]
+
+        n_segs = len(seeds)
+
+        def fin(q_valid, *cols):
+            # Selection and data movement only (exact under any fusion):
+            # dead survivors already carry NEG from score_gathered and -1
+            # in the position columns.
+            scores = cols[0] if n_segs == 1 else \
+                jnp.concatenate(cols[:n_segs], axis=1)
+            gpos = cols[n_segs] if n_segs == 1 else \
+                jnp.concatenate(cols[n_segs:], axis=1)
+            scores = jnp.where(q_valid[:, None], scores, NEG)
+            if m_total < k:   # k > budget: sentinel-pad to the [b, k] contract
+                scores = jnp.pad(scores, ((0, 0), (0, k - m_total)),
+                                 constant_values=NEG)
+                gpos = jnp.pad(gpos, ((0, 0), (0, k - m_total)),
+                               constant_values=-1)
+            vals, sel = topk(scores, k)
+            pos = jnp.take_along_axis(gpos, sel, axis=1)
+            return vals, jnp.where(vals > NEG, pos, -1)
+        finalize = staged("finalize", marked(fin, "finalize"))
+
+        def fn(q, q_valid, live, perm, where_args, *seg_arrays):
+            live = masked_live(live, where_args)
+            score_cols, pos_cols = [], []
+            for i in range(n_segs):
+                off, n_i = offsets[i], seg_ns[i]
+                packed, qnorms, ccodes = seg_arrays[3 * i: 3 * i + 3]
+                q_rot = rot_stages[i](q, perm)
+                proxy = coarse_stages[i](q_rot, ccodes)
+                cand = surv_stages[i](proxy, live[off: off + n_i])
+                score_cols.append(rescore_stages[i](q_rot, packed, qnorms,
+                                                    cand))
+                pos_cols.append(jnp.where(cand >= 0, cand + off, -1))
+            return finalize(q_valid, *(score_cols + pos_cols))
+
+        return SearchPlan(key=key, fn=fn)
+
     if kind == "BruteForceIndex":
         scan_stages = [staged("scan", make_scan()) for _ in seeds]
 
@@ -454,8 +549,12 @@ def _build_plan(backend: Any, extras: Sequence[Any], *, key: PlanKey,
     return SearchPlan(key=key, fn=fn)
 
 
-def _bind_arrays(backend: Any, extras: Sequence[Any]) -> tuple:
-    """Per-call array operands, in the plan function's positional order."""
+def _bind_arrays(backend: Any, extras: Sequence[Any],
+                 with_codes: bool = False) -> tuple:
+    """Per-call array operands, in the plan function's positional order.
+
+    ``with_codes`` (cascade plans) appends each segment's packed coarse
+    codes after its (packed, qnorms) pair — arrays stay stage ARGUMENTS."""
     kind = type(backend).__name__
     head: tuple = ()
     if kind == "IvfFlatIndex":
@@ -465,7 +564,10 @@ def _bind_arrays(backend: Any, extras: Sequence[Any]) -> tuple:
                 jnp.asarray(backend.neighbors_hi) if backend.max_level else None)
     segs: list = []
     for enc in [backend.enc] + [s.enc for s in extras]:
-        segs.extend((enc.packed, enc.qnorms))
+        if with_codes:
+            segs.extend((enc.packed, enc.qnorms, enc.ccodes))
+        else:
+            segs.extend((enc.packed, enc.qnorms))
     return head + tuple(segs)
 
 
@@ -505,9 +607,9 @@ def search_backend(
     (the live mask is a dynamic argument, so no new plan is minted).
     """
     _validate_knobs(backend, kwargs)
-    knobs = _normalize_knobs(backend, kwargs, k)
-    use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
     extras = state.extras if state is not None else []
+    knobs = _normalize_knobs(backend, extras, kwargs, k)
+    use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
     kind = type(backend).__name__
 
     q = jnp.atleast_2d(jnp.asarray(queries))
@@ -578,7 +680,8 @@ def search_backend(
                         labels={"backend": kind, "stage": "execute"},
                         attrs={"backend": kind, "rows": b, "bucket": bucket}):
         vals, pos = plan.fn(q, q_valid, jnp.asarray(live), perm, where_args,
-                            *_bind_arrays(backend, extras))
+                            *_bind_arrays(backend, extras,
+                                          with_codes="rescore_mult" in knobs))
     # The device->host transfer is where outstanding async device work
     # completes: this span/histogram carries the actual device latency.
     with obs.timed_span("sync", histogram="engine.stage_us",
@@ -592,6 +695,7 @@ def search_backend(
 
 def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
                    where_mask: Optional[np.ndarray] = None,
+                   rescore_mult: Optional[int] = None,
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """The shard_map scan as a cached plan: same bucketing, same counters,
     same [b, k] sentinel-padded contract as the single-device engines.
@@ -600,7 +704,13 @@ def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
     predicate's output, or any caller-built filter), sharded alongside the
     corpus and applied BEFORE the local top-k — slots with no admissible
     row come back as SENTINEL_ID / NEG exactly like the single-device
-    filtered path."""
+    filtered path.
+
+    ``rescore_mult=r > 0`` selects the binarized cascade INSIDE each shard
+    (coarse proxy -> local survivor top-m -> gathered 4-bit rescore -> local
+    top-k), normalized exactly like the single-device knob: when m = r*k
+    covers the whole corpus the knob drops away and the plan is the plain
+    sharded scan (the m=n bit-identity pin)."""
     q = jnp.atleast_2d(jnp.asarray(queries))
     b = int(q.shape[0])
     bucket = shape_bucket(b)
@@ -613,17 +723,29 @@ def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
             raise ValueError(
                 f"where_mask covers {where_mask.shape} rows but the index "
                 f"has {index.n}")
+    rm = 0 if rescore_mult is None else int(rescore_mult)
+    if rm < 0:
+        raise ValueError(f"rescore_mult must be >= 0, got {rm}")
+    if rm > 0 and enc.ccodes is None:
+        raise ValueError(
+            "rescore_mult requires an index built with a binarized coarse "
+            "code (MonaVec.build(..., coarse='sign'|'crumb'))")
+    if rm * k_eff >= index.n:
+        rm = 0              # full rescore everywhere == the full scan
+    cascade = rm > 0
     # Content-keyed like search_backend — the plan must not retain the index:
     # the closure holds only scalars + the (small, long-lived) mesh, arrays
     # ride in as arguments, and same-config corpora on one mesh share plans.
     key = PlanKey(
         fingerprint=("ShardedMonaVec", id(index.mesh), index.n,
                      _enc_sig(enc), enc.metric, masked),
-        bucket=bucket, k=k_eff, dispatch=(None, None), knobs=(),
+        bucket=bucket, k=k_eff, dispatch=(None, None),
+        knobs=(("rescore_mult", rm),) if cascade else (),
     )
 
     def build() -> SearchPlan:
-        from repro.dist.retrieval import make_scan_topk_shardmap
+        from repro.dist.retrieval import (make_cascade_topk_shardmap,
+                                          make_scan_topk_shardmap)
         stats = _CACHE.stats
 
         def on_trace() -> None:
@@ -632,19 +754,29 @@ def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
 
         mesh = index.mesh
         metric, std, seed = enc.metric, enc.std, enc.seed
-        scan = make_scan_topk_shardmap(
-            mesh, metric=metric, k=k_eff, bits=enc.bits,
-            n4_dims=enc.n4_dims, n_valid=index.n, on_trace=on_trace,
-            with_mask=masked)
+        if cascade:
+            scan = make_cascade_topk_shardmap(
+                mesh, metric=metric, k=k_eff, bits=enc.bits,
+                n4_dims=enc.n4_dims, n_valid=index.n, on_trace=on_trace,
+                with_mask=masked, kind=enc.coarse, m=rm * k_eff)
+        else:
+            scan = make_scan_topk_shardmap(
+                mesh, metric=metric, k=k_eff, bits=enc.bits,
+                n4_dims=enc.n4_dims, n_valid=index.n, on_trace=on_trace,
+                with_mask=masked)
+        stage = "cascade_shard_scan" if cascade else "shard_scan"
 
-        def raw(q_pad, packed, qnorms, perm, mask):
+        def raw(q_pad, packed, qnorms, ccodes, perm, mask):
             # Eager rotation: the exact op sequence of qz.encode_query.
             q_rot = _rotate(q_pad, metric=metric, std=std, seed=seed,
                             perm=perm)
-            args = (q_rot, packed, qnorms) if mask is None else \
-                (q_rot, packed, qnorms, mask)
+            args = (q_rot, packed, qnorms)
+            if ccodes is not None:
+                args += (ccodes,)
+            if mask is not None:
+                args += (mask,)
             if _STAGE_OBSERVER is not None:
-                _STAGE_OBSERVER("ShardedMonaVec", "shard_scan", scan, args)
+                _STAGE_OBSERVER("ShardedMonaVec", stage, scan, args)
             with mesh:
                 return scan(*args)
 
@@ -666,16 +798,18 @@ def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
                         labels={"backend": "ShardedMonaVec",
                                 "stage": "shard_scan"},
                         attrs={"shards": n_shards, "rows": b}):
-        vals, gidx = plan.fn(q, enc.packed, enc.qnorms, perm,
+        vals, gidx = plan.fn(q, enc.packed, enc.qnorms,
+                             enc.ccodes if cascade else None, perm,
                              jnp.asarray(where_mask) if masked else None)
     with obs.timed_span("sync", histogram="engine.stage_us",
                         labels={"backend": "ShardedMonaVec", "stage": "sync"}):
         vals = np.asarray(vals)[:b]
         gidx = np.asarray(gidx)
     ids = index.ids[gidx[:b]]
-    if masked:
-        # Filtered shards surface inadmissible slots as -inf; convert to the
-        # engine-wide sentinel contract (NEG score, SENTINEL_ID id).
+    if masked or cascade:
+        # Filtered shards (and cascade shards with dead survivor slots)
+        # surface inadmissible slots as -inf; convert to the engine-wide
+        # sentinel contract (NEG score, SENTINEL_ID id).
         bad = ~np.isfinite(vals)
         vals = np.where(bad, NEG, vals).astype(vals.dtype)
         ids = np.where(bad, seg.SENTINEL_ID, ids)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core import quantize as qz
 from repro.core.allowlist import NEG
 from repro.core.scoring import adjust_scores
-from . import gather_dot, nibble_dot, ref
+from . import binary_dot, gather_dot, nibble_dot, ref
 
 
 def _on_tpu() -> bool:
@@ -160,6 +160,78 @@ def score_packed(
     raw = score_raw(enc.packed, q_rot, bits=enc.bits, n4_dims=enc.n4_dims,
                     use_kernel=use_kernel, interpret=interpret)
     return adjust_scores(raw, enc.qnorms, enc.metric)
+
+
+# ---------------------------------------------------------------------------
+# Binarized coarse-scan proxies (cascade stage 1; DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+def sign_coarse_raw(
+    cbits: jnp.ndarray,      # [n, d'/8] uint8 — packed corpus sign bits
+    qbits: jnp.ndarray,      # [b, d'/8] uint8 — packed query sign bits
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Hamming distances [b, n] (int32); pads to tile multiples and unpads.
+
+    Both dispatch paths are bit-identical by construction (integer
+    arithmetic); zero pad bytes XOR to 0 and contribute exactly 0.
+    """
+    use_kernel, interpret = resolve_dispatch(use_kernel, interpret)
+    if not use_kernel:
+        return binary_dot.sign_hamming_jnp(cbits, qbits)
+
+    n, dk = cbits.shape
+    b = qbits.shape[0]
+    bq = min(8, _round_up(b, 8))
+    bn = min(256, _round_up(n, 128))
+    bk = min(128, dk)        # dk is a power of two (d' = pow2 >= 8), so bk | dk
+    b_pad, n_pad = _round_up(b, bq), _round_up(n, bn)
+    cbits_p = jnp.pad(cbits, ((0, n_pad - n), (0, 0)))
+    qbits_p = jnp.pad(qbits, ((0, b_pad - b), (0, 0)))
+    out = binary_dot.sign_hamming_raw(
+        cbits_p, qbits_p,
+        block_q=bq, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return out[:b, :n]
+
+
+def crumb_coarse_raw(
+    ccodes: jnp.ndarray,     # [n, d'/4] uint8 — corpus crumb planes (hi || lo)
+    qplanes: jnp.ndarray,    # [b, d'/4] uint8 — query crumb planes (hi || lo)
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Crumb affinities [b, n] (int32) from plane-packed codes.
+
+    Both byte arrays carry the hi bit plane then the lo bit plane, each
+    d'/8 bytes (binary.derive_codes / binary.query_crumb_planes layout);
+    zero pad rows AND to 0 and popcount to 0, so padding is free.
+    """
+    use_kernel, interpret = resolve_dispatch(use_kernel, interpret)
+    dkp = ccodes.shape[-1] // 2
+    dim = dkp * 8
+    chi, clo = ccodes[:, :dkp], ccodes[:, dkp:]
+    qhi, qlo = qplanes[:, :dkp], qplanes[:, dkp:]
+    if not use_kernel:
+        return binary_dot.crumb_affinity_jnp(chi, clo, qhi, qlo, dim=dim)
+
+    n = ccodes.shape[0]
+    b = qplanes.shape[0]
+    bq = min(8, _round_up(b, 8))
+    bn = min(256, _round_up(n, 128))
+    bk = min(128, dkp)       # dkp is a power of two (d' = pow2 >= 8), so bk | dkp
+    b_pad, n_pad = _round_up(b, bq), _round_up(n, bn)
+    pad_c = ((0, n_pad - n), (0, 0))
+    pad_q = ((0, b_pad - b), (0, 0))
+    out = binary_dot.crumb_affinity_raw(
+        jnp.pad(chi, pad_c), jnp.pad(clo, pad_c),
+        jnp.pad(qhi, pad_q), jnp.pad(qlo, pad_q),
+        dim=dim, block_q=bq, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return out[:b, :n]
 
 
 # ---------------------------------------------------------------------------

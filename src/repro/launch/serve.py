@@ -111,6 +111,16 @@ def main() -> None:
     ap.add_argument("--micro-batch", type=int, default=0, metavar="R",
                     help="serve each batch as R coalesced requests through "
                          "the engine MicroBatcher (0 = direct searcher)")
+    ap.add_argument("--coarse", default="off", choices=["off", "sign", "crumb"],
+                    help="attach a binarized coarse code at build time "
+                         "(DESIGN.md §11; persisted as .mvec v10 with --save; "
+                         "with --load, derives codes for a pre-v10 file) — "
+                         "unlocks --rescore-mult")
+    ap.add_argument("--rescore-mult", type=int, default=0, metavar="R",
+                    help="serve through the binarized cascade: coarse-scan "
+                         "all rows, rescore only the top R*k survivors with "
+                         "the 4-bit kernel (0 = full scan; requires --coarse "
+                         "or a v10 .mvec)")
     ap.add_argument("--use-kernel", default="auto", choices=["auto", "on", "off"],
                     help="scoring dispatch: auto = Pallas kernel on TPU / "
                          "pure-jnp elsewhere; on/off force it (all backends)")
@@ -145,6 +155,15 @@ def main() -> None:
         # ShardedMonaVec is a static row partition; mutate on the unsharded
         # index, compact, then shard the result.
         raise SystemExit("--mutate does not apply to --shard (compact first)")
+    if args.coarse != "off" and not args.load and args.index != "bruteforce":
+        raise SystemExit("--coarse requires --index bruteforce")
+    if args.rescore_mult and args.coarse == "off" and not args.load:
+        raise SystemExit("--rescore-mult requires --coarse sign|crumb "
+                         "(or a v10 .mvec via --load)")
+    if args.rescore_mult and args.micro_batch:
+        # MicroBatcher groups by (namespace, collection, k, where); per-
+        # request knobs would split its coalescing contract.
+        raise SystemExit("--rescore-mult does not apply to --micro-batch")
 
     if args.load:
         index = MonaVec.load(args.load)
@@ -156,6 +175,16 @@ def main() -> None:
             raise SystemExit("--filter-every needs a 'bucket' metadata "
                              "column; the loaded .mvec has none (build one "
                              "with --filter-every --save)")
+        if args.coarse != "off":
+            try:
+                index.enable_coarse(args.coarse)   # no-op on a v10 file
+            except TypeError as e:
+                raise SystemExit(f"--coarse: {e}")
+            print(f"[serve] coarse codes attached (kind={args.coarse})")
+        if args.rescore_mult and index.backend.enc.ccodes is None:
+            raise SystemExit("--rescore-mult: the loaded .mvec carries no "
+                             "coarse codes; add --coarse sign|crumb to "
+                             "derive them at load time")
     else:
         corpus = embedding_corpus(0, args.n, args.dim)
         kw = {"nlist": 128} if args.index == "ivf" else (
@@ -164,12 +193,14 @@ def main() -> None:
                  % args.filter_every}
                 if args.filter_every else None)
         t0 = time.time()
+        coarse = None if args.coarse == "off" else args.coarse
         index = MonaVec.build(corpus, metric="cosine", index=args.index,
-                              meta=meta, **kw)
+                              meta=meta, coarse=coarse, **kw)
         print(f"[serve] built {args.index} over {args.n}x{args.dim} "
               f"in {time.time() - t0:.1f}s"
               + (f" (+ bucket metadata column, {args.filter_every} values)"
-                 if meta else ""))
+                 if meta else "")
+              + (f" (+ {coarse} coarse codes)" if coarse else ""))
         if args.save:
             index.save(args.save)
             print(f"[serve] saved {args.save}")
@@ -218,13 +249,17 @@ def main() -> None:
     def run_phase(label: str, where=None) -> None:
         # The serving loop holds ONE bound searcher per phase; mutation
         # phases pick up the index's new segment signature automatically.
+        knobs = ({"rescore_mult": args.rescore_mult}
+                 if args.rescore_mult else {})
         if args.shard:   # sharded scan has its own shard_map dispatch
             search = reg.get(args.token, "default").searcher(k=args.k,
-                                                             where=where)
+                                                             where=where,
+                                                             **knobs)
         else:
             search = reg.searcher(args.token, "default", k=args.k,
                                   where=where,
-                                  use_kernel=use_kernel, interpret=interpret)
+                                  use_kernel=use_kernel, interpret=interpret,
+                                  **knobs)
         # Untimed warm-up: the first batch of a phase pays jit trace +
         # compile; measured QPS must not include it (at small --batches the
         # old numbers were dominated by compile time).

@@ -1,0 +1,31 @@
+"""Shared oracle for the cascade suites (deterministic + hypothesis twins
+both drive it, so the survivor contract is exercised even where hypothesis
+is unavailable — the same split as lifecycle_harness).
+
+The survivor oracle is the ISSUE's "brute-force oracle": stable top-m of
+the tombstone-masked integer proxies (ties broken by lowest row — numpy's
+``argsort(kind="stable")`` on the negated values), emitted as ASCENDING row
+indices with -1 padding.  ``binary.survivor_topk_stage`` must equal this
+EXACTLY — it is the canonical ranked prefix, not merely an admissible set —
+because the rescore stage's candidate list (and therefore every cascade
+search result) is a pure function of it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def survivor_oracle(proxy: np.ndarray, live: np.ndarray, m: int) -> np.ndarray:
+    """Stable top-m of the live proxies, ascending, -1 padded (int64 host
+    math — the jax stage must reproduce this in int32 exactly)."""
+    b, n = proxy.shape
+    out = np.full((b, m), -1, np.int32)
+    dead = -(np.int64(1) << 62)        # below any proxy, negation-safe
+    for r in range(b):
+        vals = proxy[r].astype(np.int64).copy()
+        vals[~live] = dead
+        order = np.argsort(-vals, kind="stable")[:m]
+        order = np.sort(order[live[order]])
+        out[r, :order.size] = order
+    return out

@@ -76,11 +76,28 @@ def build_v9_meta_bruteforce():
     return idx
 
 
+def build_v10_coarse_bruteforce():
+    """v10: per-segment coarse CODE blocks (crumb planes) over a mutated
+    index WITH metadata — the COARSE_KIND and HAS_META header bytes are
+    both set, and every segment (base + one add()) persists its code."""
+    from repro.core import MonaVec
+    idx = MonaVec.build(
+        _data(20, 16, 107), metric="cosine", seed=7, coarse="crumb",
+        meta={"price": np.arange(20, dtype=np.int64) * 2 - 5,
+              "cat": np.array(["red", "green"] * 10)})
+    idx.add(_data(6, 16, 108),
+            meta={"price": np.arange(6, dtype=np.int64) + 50,
+                  "cat": np.array(["blue", "red"] * 3)})
+    idx.delete([1, 4, 21])
+    return idx
+
+
 FIXTURES = {
     "v6_bruteforce.mvec": build_v6_bruteforce,
     "v7_perm_bruteforce.mvec": build_v7_perm_bruteforce,
     "v8_segmented_ivf.mvec": build_v8_segmented_ivf,
     "v9_meta_bruteforce.mvec": build_v9_meta_bruteforce,
+    "v10_coarse_bruteforce.mvec": build_v10_coarse_bruteforce,
 }
 
 

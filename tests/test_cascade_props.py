@@ -1,0 +1,95 @@
+"""Hypothesis property suite for the binarized cascade (DESIGN.md §11).
+
+Two invariants that the deterministic suite (test_cascade.py) pins at fixed
+points, generalized over generated inputs:
+
+  * **Survivor admissibility** — ``survivor_topk_stage`` equals the
+    brute-force numpy oracle EXACTLY on every generated (proxy, live, m):
+    the admitted set is the stable top-m of the masked proxies (ties broken
+    by lowest row), emitted ascending with -1 padding — i.e. survivors are
+    always the canonical ranked prefix of the oracle ordering, never an
+    arbitrary admissible set.  This is the contract that makes cascade
+    results replayable: the rescore stage sees a deterministic candidate
+    list, so the whole search is a pure function of (corpus, query, m).
+  * **Replay determinism** — two builds from identical inputs produce
+    cascade searches whose scores AND ids are byte-identical (``tobytes``
+    equality, not allclose), across coarse kinds and budgets.
+
+Ops are generated as integer seeds and materialized through RandomState so
+shrinking stays cheap and every failing example replays exactly.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                                         "(pip install -r requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import MonaVec, binary  # noqa: E402
+from tests.cascade_harness import survivor_oracle  # noqa: E402
+
+COMMON = dict(deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+
+VB = 64     # generated proxies live in [-VB, VB]
+
+
+class TestSurvivorAdmissibility:
+    @settings(max_examples=60, **COMMON)
+    @given(seed=st.integers(0, 2**16), b=st.integers(1, 3),
+           n=st.integers(1, 48), m=st.integers(1, 52),
+           live_frac=st.floats(0.0, 1.0))
+    def test_matches_oracle(self, seed, b, n, m, live_frac):
+        rng = np.random.RandomState(seed)
+        proxy = rng.randint(-VB, VB + 1, size=(b, n)).astype(np.int32)
+        live = rng.rand(n) < live_frac
+        got = np.asarray(binary.survivor_topk_stage(
+            jnp.asarray(proxy), jnp.asarray(live), m=m, vbound=VB))
+        np.testing.assert_array_equal(got, survivor_oracle(proxy, live, m))
+
+    @settings(max_examples=20, **COMMON)
+    @given(seed=st.integers(0, 2**16), n=st.integers(2, 40),
+           m=st.integers(1, 40))
+    def test_heavy_ties_break_by_row_order(self, seed, n, m):
+        """Proxies drawn from {−1, 0, 1}: nearly everything ties, so the
+        whole answer is the tie rule — first rows in row order win."""
+        rng = np.random.RandomState(seed)
+        proxy = rng.randint(-1, 2, size=(2, n)).astype(np.int32)
+        live = rng.rand(n) < 0.8
+        got = np.asarray(binary.survivor_topk_stage(
+            jnp.asarray(proxy), jnp.asarray(live), m=m, vbound=VB))
+        np.testing.assert_array_equal(got, survivor_oracle(proxy, live, m))
+
+    @settings(max_examples=10, **COMMON)
+    @given(seed=st.integers(0, 2**16))
+    def test_default_vbound_matches_explicit(self, seed):
+        """vbound is a convergence-speed knob, never a semantics knob."""
+        rng = np.random.RandomState(seed)
+        proxy = rng.randint(-VB, VB + 1, size=(2, 30)).astype(np.int32)
+        live = rng.rand(30) < 0.7
+        a = np.asarray(binary.survivor_topk_stage(
+            jnp.asarray(proxy), jnp.asarray(live), m=9, vbound=VB))
+        b_ = np.asarray(binary.survivor_topk_stage(
+            jnp.asarray(proxy), jnp.asarray(live), m=9))
+        np.testing.assert_array_equal(a, b_)
+
+
+class TestReplayDeterminism:
+    @settings(max_examples=8, **COMMON)
+    @given(seed=st.integers(0, 2**16),
+           kind=st.sampled_from(["sign", "crumb"]),
+           rm=st.sampled_from([2, 4]))
+    def test_two_builds_byte_identical(self, seed, kind, rm):
+        def run():
+            rng = np.random.RandomState(seed)
+            x = rng.randn(200, 16).astype(np.float32)
+            idx = MonaVec.build(x, metric="cosine", coarse=kind)
+            idx.delete([int(i) for i in rng.randint(0, 200, size=5)])
+            q = rng.randn(3, 16).astype(np.float32)
+            return idx.search(q, k=6, rescore_mult=rm)
+        s1, i1 = run()
+        s2, i2 = run()
+        assert s1.tobytes() == s2.tobytes()
+        assert i1.tobytes() == i2.tobytes()

@@ -348,13 +348,14 @@ class TestMvecFormat:
         with pytest.raises(ValueError):
             fmt.load(str(p))
 
-    @pytest.mark.parametrize("version", [1, 3, 5, 10])
+    @pytest.mark.parametrize("version", [1, 3, 5, 11])
     def test_rejects_unsupported_versions(self, version, corpus, tmp_path):
         """Versions 1-5 predate the v6 header layout (parsing them against it
         would misread every field) and future versions are unknown: all must
         be rejected with an error naming the version found.  (8 is the
         segmented layout since DESIGN.md §6, 9 adds metadata columns per
-        DESIGN.md §8 — neither is rejected any more.)"""
+        DESIGN.md §8, 10 adds coarse CODE blocks per DESIGN.md §11 — none
+        of those is rejected any more.)"""
         import struct
         from repro.core import mvec_format as fmt
         p = str(tmp_path / "v.mvec")

@@ -64,6 +64,7 @@ class TestGoldenFixtures:
         assert open(os.path.join(GOLD, "v7_perm_bruteforce.mvec"), "rb").read()[4] == 7
         assert open(os.path.join(GOLD, "v8_segmented_ivf.mvec"), "rb").read()[4] == 8
         assert open(os.path.join(GOLD, "v9_meta_bruteforce.mvec"), "rb").read()[4] == 9
+        assert open(os.path.join(GOLD, "v10_coarse_bruteforce.mvec"), "rb").read()[4] == 10
 
     def test_v9_meta_survives_roundtrip(self, tmp_path):
         """The v9 fixture's columns load with exact values and survive a
@@ -76,6 +77,38 @@ class TestGoldenFixtures:
         np.testing.assert_array_equal(
             idx.meta["price"].values[:3], np.array([-10, -7, -4]))
         assert idx.meta["cat"].vocab == ["red", "green", "blue", "violet"]
+
+
+    def test_v10_coarse_survives_roundtrip(self):
+        """The v10 fixture's CODE blocks load on every segment, and the
+        persisted bytes equal a fresh derivation from the packed codes —
+        the 'v10 is a cache' clause of DESIGN.md §11."""
+        from repro.core import binary
+        idx = MonaVec.load(os.path.join(GOLD, "v10_coarse_bruteforce.mvec"))
+        enc = idx.backend.enc
+        assert enc.coarse == "crumb" and enc.ccodes is not None
+        assert all(s.enc.ccodes is not None for s in idx.mut.extras)
+        for e in [enc] + [s.enc for s in idx.mut.extras]:
+            rederived = binary.derive_codes(
+                e.packed, bits=e.bits, n4_dims=e.n4_dims,
+                dim_pad=e.dim_pad, kind="crumb")
+            np.testing.assert_array_equal(np.asarray(e.ccodes), rederived)
+        # The loaded codes are live: a cascade search runs and returns k ids.
+        q = np.random.RandomState(5).randn(3, 16).astype(np.float32)
+        scores, ids = idx.search(q, k=4, rescore_mult=2)
+        assert ids.shape == (3, 4)
+
+    def test_unknown_version_names_highest_supported(self, tmp_path):
+        """Bugfix regression: the unknown-version error must tell the user
+        the highest version this build reads, not just echo the bad byte."""
+        raw = bytearray(open(os.path.join(GOLD, "v6_bruteforce.mvec"), "rb").read())
+        raw[4] = 99
+        p = str(tmp_path / "future.mvec")
+        with open(p, "wb") as fh:
+            fh.write(bytes(raw))
+        with pytest.raises(ValueError, match=r"version 99.*highest supported "
+                                             r"version is 10"):
+            fmt.load(p)
 
 
 class TestSaveLoadFixedPoint:
@@ -109,7 +142,8 @@ class TestTruncationFuzz:
 
     @pytest.mark.parametrize("name", ["v6_bruteforce.mvec",
                                       "v8_segmented_ivf.mvec",
-                                      "v9_meta_bruteforce.mvec"])
+                                      "v9_meta_bruteforce.mvec",
+                                      "v10_coarse_bruteforce.mvec"])
     def test_every_truncation_offset_raises(self, name, tmp_path):
         raw = open(os.path.join(GOLD, name), "rb").read()
         p = str(tmp_path / "cut.mvec")
