@@ -54,6 +54,7 @@ def main() -> None:
                     help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
 
+    from . import autotune_bench
     from . import cascade_bench
     from . import common
     from . import dist_scan
@@ -87,6 +88,8 @@ def main() -> None:
          filtered_bench.emit_benchmark_smoke),
         ("cascade", cascade_bench.emit_benchmark,
          cascade_bench.emit_benchmark_smoke),
+        ("autotune", autotune_bench.emit_benchmark,
+         autotune_bench.emit_benchmark_smoke),
         ("roofline", roofline.emit_benchmark, None),
     ]
     print("name,us_per_call,derived")

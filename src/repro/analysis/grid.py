@@ -55,6 +55,7 @@ class GridPoint:
     avg_bits: Optional[float] = None   # BF mixed-precision point
     coarse: Optional[str] = None       # sign | crumb: attach coarse codes
     rescore_mult: Optional[int] = None  # cascade rescore budget (r*k)
+    tuned: bool = False                # autotune first; searches run tuned
 
 
 def default_grid() -> Tuple[GridPoint, ...]:
@@ -86,6 +87,11 @@ def default_grid() -> Tuple[GridPoint, ...]:
                          lifecycle="mutated", where=True))
     pts.append(GridPoint(label="cascade-sign/sharded/cosine/b4/static",
                          coarse="sign", rescore_mult=4, sharded=True))
+    # Autotuned point (DESIGN.md §12): the tuned boost curve makes every
+    # filtered search consult the selectivity popcount stage, so the
+    # selectivity_popcount capture is witnessed from a live tuned search.
+    pts.append(GridPoint(label="ivf/cosine/b4/static+where+tuned",
+                         index="ivf", where=True, tuned=True))
     return tuple(pts)
 
 
@@ -210,6 +216,14 @@ def _run_point(point: GridPoint, current: Dict[str, object]) -> None:
 
     idx = _build_index(point)
     current["n_corpus"] = _min_segment_rows(idx)
+    if point.tuned:
+        # Real autotune under the observer (its ladder-sweep searches are
+        # ordinary plan executions over the same corpus); the count cache is
+        # dropped first so the selectivity_popcount stage re-fires even when
+        # the grid runs twice in one process.
+        from repro.tune import clear_caches
+        clear_caches()
+        idx.autotune(recall_target=0.9, k=K, n_queries=8)
     target = idx.shard() if point.sharded else idx
     kw = ({"rescore_mult": point.rescore_mult}
           if point.rescore_mult is not None else {})
@@ -231,6 +245,7 @@ STAGE_MODULES = (
     "repro.core.binary",
     "repro.dist.retrieval",
     "repro.engine.fusion",
+    "repro.tune.selectivity",
 )
 
 
@@ -266,6 +281,8 @@ def _coverage_witnesses() -> Dict[str, Callable[[Sequence[StageCapture]], bool]]
         "repro.dist.retrieval:make_cascade_topk_shardmap":
             by_stage("cascade_shard_scan", "ShardedMonaVec"),
         "repro.engine.fusion:search_hybrid": hybrid_point,
+        "repro.tune.selectivity:make_popcount_fn":
+            by_stage("selectivity_popcount"),
     }
 
 

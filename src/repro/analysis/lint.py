@@ -41,7 +41,7 @@ from .findings import Finding
 from .invariants import annotate
 
 #: Directories (relative to src/repro) whose modules build stages or bytes.
-STAGE_BUILDING_DIRS = ("core", "engine", "dist", "kernels")
+STAGE_BUILDING_DIRS = ("core", "engine", "dist", "kernels", "tune")
 #: The one sanctioned frombuffer site.
 READER_MODULE = os.path.join("core", "mvec_format.py")
 READER_CLASS = "_Reader"

@@ -52,6 +52,7 @@ class MonaVec:
     backend: Backend
     mut: Optional[seg.SegmentedState] = None
     meta: Optional[MetaStore] = None   # per-row metadata columns (v9, §8)
+    tuned: Optional[object] = None     # repro.tune.TuneResult (v11, §12)
 
     def __post_init__(self):
         if self.mut is None:
@@ -81,6 +82,7 @@ class MonaVec:
         ids: Optional[np.ndarray] = None,
         meta: Optional[dict] = None,
         coarse: Optional[str] = None,
+        autotune: Union[bool, float, dict, None] = None,
         **kwargs,
     ) -> "MonaVec":
         vectors = jnp.asarray(vectors)
@@ -108,6 +110,15 @@ class MonaVec:
         idx = MonaVec(backend=be, meta=store)
         if coarse is not None:
             idx.enable_coarse(coarse)
+        if autotune is not None and autotune is not False:
+            # autotune=True -> defaults; a float is the recall target; a
+            # dict is passed through to MonaVec.autotune verbatim.
+            if autotune is True:
+                idx.autotune()
+            elif isinstance(autotune, dict):
+                idx.autotune(**autotune)
+            else:
+                idx.autotune(recall_target=float(autotune))
         return idx
 
     # -- corpus introspection ---------------------------------------------
@@ -261,6 +272,44 @@ class MonaVec:
             s.enc = binary.attach_coarse(s.enc, kind)
         return self
 
+    # -- autotuning (DESIGN.md §12) ---------------------------------------
+
+    def autotune(
+        self,
+        recall_target: float = 0.95,
+        k: int = 10,
+        *,
+        n_queries: int = 32,
+        seed: int = 0xA07001,
+        boost: bool = True,
+    ) -> "MonaVec":
+        """Pick the cheapest backend knobs meeting ``recall@k >= target``.
+
+        Deterministic and training-free: seeded sample queries are drawn
+        from the corpus itself, recall is measured against an exact
+        full-scan oracle over the SAME quantized segments, and the chosen
+        knob is the smallest ladder rung meeting the target.  The result
+        rides on ``self.tuned`` (knob defaults for every later search) and
+        persists in ``save()`` as the v11 TUNE block.  ``boost=True`` also
+        tunes the selectivity boost curve so filtered recall holds at 1%
+        selectivity.  Returns ``self`` for chaining.
+        """
+        from repro.tune import autotune as tune_fn
+        self.tuned = tune_fn(
+            self, recall_target=recall_target, k=k, n_queries=n_queries,
+            seed=seed, boost=boost)
+        return self
+
+    def resolved_knobs(self, k: int = 10, **kwargs) -> dict:
+        """The exact knobs ``search(queries, k, **kwargs)`` would run with —
+        after tuned-default resolution, the silent nprobe<=nlist clamp, the
+        ef>=k auto-widen, and the rescore_mult full-scan collapse.  An empty
+        dict means the plain full scan."""
+        from .. import engine
+        return engine.resolve_knobs(
+            self.backend, None if self.mut.is_static else self.mut, k,
+            tuned=self.tuned, **kwargs)
+
     # -- distribution ------------------------------------------------------
 
     def shard(self, mesh=None):
@@ -305,7 +354,8 @@ class MonaVec:
         return engine.search_backend(
             self.backend, None if self.mut.is_static else self.mut,
             queries, k, allow=allow, where=where, meta=self.meta,
-            use_kernel=use_kernel, interpret=interpret, **kwargs,
+            use_kernel=use_kernel, interpret=interpret, tuned=self.tuned,
+            **kwargs,
         )
 
     def searcher(
@@ -348,6 +398,7 @@ class MonaVec:
                     for s in self.mut.extras],
             tombs=[self.mut.base_tombs] + [s.tombs for s in self.mut.extras],
             meta=self.meta,
+            tune=self.tuned,
         ))
 
     @staticmethod
@@ -377,4 +428,4 @@ class MonaVec:
                     for i, e in enumerate(f.extras)],
             next_ordinal=len(f.extras) + 1,
         )
-        return MonaVec(backend=be, mut=mut, meta=f.meta)
+        return MonaVec(backend=be, mut=mut, meta=f.meta, tuned=f.tune)

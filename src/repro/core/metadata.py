@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -119,6 +120,14 @@ def split_key(keys) -> Tuple[np.ndarray, np.ndarray]:
 # Columns + the store.
 # ---------------------------------------------------------------------------
 
+#: Monotone token minted per Column construction.  Every mutation path
+#: (append / gather / load) builds NEW Column objects, so a column's
+#: ``version`` changing is a sound proxy for "its values may have changed" —
+#: the selectivity estimator (repro.tune) keys its caches on these tokens
+#: instead of hashing the value arrays.
+_COLUMN_VERSIONS = itertools.count(1)
+
+
 @dataclasses.dataclass
 class Column:
     """One typed column: exact host values + the precomputed device keys."""
@@ -128,8 +137,10 @@ class Column:
     vocab: Optional[List[str]] = None     # str columns: code -> string
     key_hi: np.ndarray = dataclasses.field(init=False)
     key_lo: np.ndarray = dataclasses.field(init=False)
+    version: int = dataclasses.field(init=False, compare=False, repr=False)
 
     def __post_init__(self) -> None:
+        self.version = next(_COLUMN_VERSIONS)
         self._rekey()
 
     def _rekey(self) -> None:

@@ -12,7 +12,8 @@ Header layout (offsets in bytes, little-endian):
                          tombstones — DESIGN.md §6; 9 when per-row METADATA
                          COLUMNS are attached — DESIGN.md §8; 10 when a
                          binarized COARSE CODE block is attached —
-                         DESIGN.md §11)
+                         DESIGN.md §11; 11 when a persisted AUTOTUNE
+                         result block is attached — DESIGN.md §12)
     8   DIM         u32  input dimension d
     12  METRIC      u8   0=Cosine 1=Dot 2=L2
     13  BIT_WIDTH   u8   2, 3 (mixed) or 4
@@ -79,6 +80,31 @@ The codes are a pure function of the packed bytes (``core.binary``), so v10
 is a cache, not new information — but persisting it keeps load→search free
 of any derivation pass, per the paper's mmap-and-go contract.
 
+Version 11 (an index carrying a persisted AUTOTUNE result — DESIGN.md §12)
+writes the v8 body, the metadata table if HAS_META, the coarse CODE blocks
+if COARSE_KIND != 0 (unlike v10, a v11 file may omit them), then one
+length-prefixed TUNE envelope:
+
+    TUNE_LEN   u64               payload byte length
+    payload:
+        FORMAT         u32       1
+        RECALL_TARGET  f64
+        K              u32
+        N_QUERIES      u32
+        SEED           u64
+        MET_TARGET     u8
+        KNOBS          u32 count, then per knob (sorted by name):
+                       NAME str, CHOSEN i64
+        LADDERS        u32 count, then per ladder (sorted by name):
+                       NAME str, u32 n_rungs, per rung: VALUE i64, RECALL f64
+        HAS_BOOST      u8        if 1: u32 n_points, per point:
+                       SELECTIVITY f64, MULT i64, RECALL f64
+
+The tuned knobs become the engine's plan-key DEFAULTS on load; the sweep
+ladder and boost curve persist so the choice is auditable offline.  The
+TuneResult is a pure function of (corpus bytes, tuning seed), so v11 files
+are byte-deterministic like every earlier version.
+
 Every block is length-prefixed and every read is validated against the bytes
 actually present — a truncated or garbage-tailed file raises ``ValueError``
 naming the short block instead of letting ``np.frombuffer`` misparse it.
@@ -104,7 +130,7 @@ HEADER_LEN = 56
 _METRIC_CODE = {COSINE: 0, DOT: 1, L2: 2}
 _METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
 INDEX_BRUTEFORCE, INDEX_IVF, INDEX_HNSW = 0, 1, 2
-SUPPORTED_VERSIONS = (6, 7, 8, 9, 10)
+SUPPORTED_VERSIONS = (6, 7, 8, 9, 10, 11)
 _META_DTYPE = {md.KIND_I64: np.int64, md.KIND_F64: np.float64,
                md.KIND_STR: np.int32}
 _COARSE_CODE = {"sign": 1, "crumb": 2}
@@ -150,6 +176,12 @@ class _Reader:
 
     def u8(self, name: str) -> int:
         return self.take(1, name)[0]
+
+    def i64(self, name: str) -> int:
+        return struct.unpack("<q", self.take(8, name))[0]
+
+    def f64(self, name: str) -> float:
+        return struct.unpack("<d", self.take(8, name))[0]
 
     def str_(self, name: str) -> str:
         nbytes = self.u32(f"{name} length")
@@ -204,6 +236,7 @@ class MvecFile:
     extras: List[ExtraSegment] = dataclasses.field(default_factory=list)
     tombs: Optional[List[np.ndarray]] = None   # [1+len(extras)] bool bitmaps
     meta: Optional[md.MetaStore] = None        # v9: per-row metadata columns
+    tune: Optional[object] = None              # v11: repro.tune.TuneResult
 
 
 def _bytes_per_vector(dim_pad: int, bits: int, n4_dims: int) -> int:
@@ -214,6 +247,91 @@ def _bytes_per_vector(dim_pad: int, bits: int, n4_dims: int) -> int:
     return n4_dims // 2 + (dim_pad - n4_dims) // 4   # mixed
 
 
+def _write_tune(buf: io.BytesIO, tune) -> None:
+    """Serialize one TuneResult as the v11 TUNE envelope (module docstring).
+
+    Duck-typed on the TuneResult attribute names so this module never needs
+    a ``repro.tune`` import.  Knobs and ladders are written in sorted name
+    order, so the bytes are independent of dict construction order.
+    """
+    body = io.BytesIO()
+    body.write(struct.pack("<IdIIQB", 1, float(tune.recall_target),
+                           int(tune.k), int(tune.n_queries),
+                           int(tune.seed) & 0xFFFFFFFFFFFFFFFF,
+                           1 if tune.met_target else 0))
+    knobs = dict(tune.knobs)
+    body.write(struct.pack("<I", len(knobs)))
+    for name in sorted(knobs):
+        _write_str(body, name)
+        body.write(struct.pack("<q", int(knobs[name])))
+    ladder = dict(tune.ladder)
+    body.write(struct.pack("<I", len(ladder)))
+    for name in sorted(ladder):
+        _write_str(body, name)
+        rungs = tuple(ladder[name])
+        body.write(struct.pack("<I", len(rungs)))
+        for r in rungs:
+            body.write(struct.pack("<qd", int(r.value), float(r.recall)))
+    if tune.boost is None:
+        body.write(struct.pack("<B", 0))
+    else:
+        points = tuple(tune.boost.points)
+        body.write(struct.pack("<BI", 1, len(points)))
+        for p in points:
+            body.write(struct.pack("<dqd", float(p.selectivity),
+                                   int(p.mult), float(p.recall)))
+    payload = body.getvalue()
+    buf.write(struct.pack("<Q", len(payload)))
+    buf.write(payload)
+
+
+def _read_tune(rd: _Reader):
+    """Parse the TUNE envelope into a ``repro.tune.TuneResult``."""
+    from repro.tune.result import (BoostCurve, BoostPoint, KnobRung,
+                                   TuneResult)
+    tune_len = rd.u64("tune length")
+    sub = _Reader(rd.take(tune_len, "tune"))
+    fmt_code = sub.u32("tune format")
+    if fmt_code != 1:
+        raise ValueError(
+            f".mvec corrupt block 'tune': unknown tune format {fmt_code}")
+    recall_target = sub.f64("tune recall_target")
+    k = sub.u32("tune k")
+    n_queries = sub.u32("tune n_queries")
+    seed = sub.u64("tune seed")
+    met = sub.u8("tune met_target")
+    if met not in (0, 1):
+        raise ValueError(
+            f".mvec corrupt block 'tune': met_target must be 0 or 1, "
+            f"got {met}")
+    knobs = {}
+    for i in range(sub.u32("tune knob count")):
+        name = sub.str_(f"tune knob[{i}] name")
+        knobs[name] = sub.i64(f"tune knob[{i}] value")
+    ladder = {}
+    for i in range(sub.u32("tune ladder count")):
+        name = sub.str_(f"tune ladder[{i}] name")
+        ladder[name] = tuple(
+            KnobRung(value=sub.i64(f"tune ladder[{i}] rung[{ri}] value"),
+                     recall=sub.f64(f"tune ladder[{i}] rung[{ri}] recall"))
+            for ri in range(sub.u32(f"tune ladder[{i}] rung count")))
+    boost = None
+    if sub.u8("tune has_boost"):
+        points = tuple(
+            BoostPoint(selectivity=sub.f64(f"tune boost[{pi}] selectivity"),
+                       mult=sub.i64(f"tune boost[{pi}] mult"),
+                       recall=sub.f64(f"tune boost[{pi}] recall"))
+            for pi in range(sub.u32("tune boost point count")))
+        try:
+            boost = BoostCurve(points=points)
+        except ValueError as e:
+            raise ValueError(f".mvec corrupt block 'tune': {e}") from None
+    sub.expect_eof()
+    return TuneResult(recall_target=recall_target, k=k, n_queries=n_queries,
+                      seed=seed, met_target=bool(met), knobs=knobs,
+                      ladder=ladder, boost=boost)
+
+
 def save(path: str, f: MvecFile) -> None:
     enc = f.enc
     mutated = bool(f.extras) or (
@@ -222,7 +340,8 @@ def save(path: str, f: MvecFile) -> None:
     has_meta = f.meta is not None and bool(f.meta)
     seg_encs = [enc] + [seg.enc for seg in f.extras]
     with_codes = [e.ccodes is not None for e in seg_encs]
-    if any(with_codes):
+    has_codes = any(with_codes)
+    if has_codes:
         if not all(with_codes):
             raise ValueError(
                 "coarse codes must be attached to every segment or to none "
@@ -230,6 +349,9 @@ def save(path: str, f: MvecFile) -> None:
             )
         if any(e.coarse != enc.coarse for e in seg_encs):
             raise ValueError("segments disagree on the coarse-code kind")
+    if f.tune is not None:
+        version = 11
+    elif has_codes:
         version = 10
     elif has_meta:
         version = 9
@@ -254,8 +376,8 @@ def save(path: str, f: MvecFile) -> None:
         1 if has_std else 0,
         1 if (version >= 8 and has_perm) else 0,
         bytes([
-            _COARSE_CODE[enc.coarse] if version == 10 else 0,
-            1 if (version == 10 and has_meta) else 0,
+            _COARSE_CODE[enc.coarse] if (version >= 10 and has_codes) else 0,
+            1 if (version >= 10 and has_meta) else 0,
         ]) + b"\x00" * 8,
     )
     assert len(header) == HEADER_LEN, len(header)
@@ -296,9 +418,11 @@ def save(path: str, f: MvecFile) -> None:
             for lo, hi in zip(bounds, bounds[1:]):
                 _write_array(buf, np.asarray(
                     col.values[lo:hi], dtype=_META_DTYPE[col.kind]))
-    if version == 10:
+    if version >= 10 and has_codes:
         for e in seg_encs:
             _write_array(buf, np.asarray(e.ccodes, dtype=np.uint8))
+    if version == 11:
+        _write_tune(buf, f.tune)
     with open(path, "wb") as fh:
         fh.write(buf.getvalue())
 
@@ -328,13 +452,17 @@ def load(path: str) -> MvecFile:
         )
     coarse_kind = None
     has_meta_flag = False
-    if version == 10:
-        if _tail[0] not in _COARSE_NAME:
+    if version >= 10:
+        # v10 is DEFINED by its coarse codes; v11 (tune block) may carry
+        # them or not, COARSE_KIND 0 meaning "no CODE blocks follow".
+        if _tail[0] not in _COARSE_NAME and not (version >= 11
+                                                 and _tail[0] == 0):
             raise ValueError(
-                f".mvec corrupt header: version 10 requires COARSE_KIND 1 "
-                f"(sign) or 2 (crumb), got {_tail[0]}"
+                f".mvec corrupt header: version {version} requires "
+                f"COARSE_KIND 1 (sign) or 2 (crumb)"
+                f"{' or 0' if version >= 11 else ''}, got {_tail[0]}"
             )
-        coarse_kind = _COARSE_NAME[_tail[0]]
+        coarse_kind = _COARSE_NAME.get(_tail[0])
         has_meta_flag = bool(_tail[1])
     rd = _Reader(data, HEADER_LEN)
     std = None
@@ -437,7 +565,7 @@ def load(path: str) -> MvecFile:
             cols[name] = md.Column(kind=kind, values=values, vocab=vocab)
         meta = md.MetaStore(columns=cols)
 
-    if version == 10:
+    if version >= 10 and coarse_kind is not None:
         from .binary import code_bytes
         cb = code_bytes(dim_pad, coarse_kind)
         seg_ns = [int(count)] + [int(e.ids.shape[0]) for e in extras]
@@ -451,13 +579,14 @@ def load(path: str) -> MvecFile:
         for seg, cc in zip(extras, seg_codes[1:]):
             seg.enc = dataclasses.replace(seg.enc, coarse=coarse_kind,
                                           ccodes=cc)
+    tune = _read_tune(rd) if version == 11 else None
     rd.expect_eof()
 
     return MvecFile(
         enc=enc, ids=ids, index_type=int(index_type),
         index_param=int(index_param), index_data=blob,
         index_param2=int(param2),
-        extras=extras, tombs=tombs, meta=meta,
+        extras=extras, tombs=tombs, meta=meta, tune=tune,
     )
 
 

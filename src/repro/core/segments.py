@@ -156,6 +156,23 @@ def reconstruct_vectors(enc: qz.Encoded) -> np.ndarray:
     return x
 
 
+def reconstruct_rows(enc: qz.Encoded, rows: np.ndarray) -> np.ndarray:
+    """``reconstruct_vectors`` restricted to a row subset.
+
+    The autotuner (repro.tune) draws its seeded sample queries from the
+    corpus itself; decoding only the sampled rows keeps tuning O(samples)
+    instead of O(n).  Row-sliced packed codes decode independently (packing
+    is per-row), so this equals ``reconstruct_vectors(enc)[rows]``.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    sub = dataclasses.replace(
+        enc,
+        packed=np.asarray(enc.packed)[rows],
+        qnorms=np.asarray(enc.qnorms)[rows],
+    )
+    return reconstruct_vectors(sub)
+
+
 # ---------------------------------------------------------------------------
 # Segmented search.
 # ---------------------------------------------------------------------------
@@ -243,6 +260,7 @@ def search_segmented(
     where_mask=None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    tuned=None,
     **kwargs,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k over base segment + extras, tombstones masked pre-top-k.
@@ -255,5 +273,5 @@ def search_segmented(
     from .. import engine
     return engine.search_backend(
         backend, state, queries, k, allow=allow, where_mask=where_mask,
-        use_kernel=use_kernel, interpret=interpret, **kwargs,
+        use_kernel=use_kernel, interpret=interpret, tuned=tuned, **kwargs,
     )

@@ -123,3 +123,10 @@ class TenantRegistry:
     def compact(self, token: Optional[str], name: str) -> int:
         """Compact a tenant's collection; returns rows reclaimed."""
         return self.get(token, name).compact()
+
+    def autotune(self, token: Optional[str], name: str,
+                 recall_target: float = 0.95, **kwargs):
+        """Autotune a tenant's collection (DESIGN.md §12); returns the
+        TuneResult now riding on the collection (and persisted by save())."""
+        return self.get(token, name).autotune(
+            recall_target=recall_target, **kwargs).tuned

@@ -35,6 +35,7 @@ class ShardedMonaVec:
     mesh: object
     n: int                   # true (unpadded) corpus rows
     meta: Optional[MetaStore] = None   # metadata columns (carried from MonaVec)
+    tuned: Optional[object] = None     # repro.tune.TuneResult (carried over)
 
     # -- construction ------------------------------------------------------
 
@@ -48,9 +49,10 @@ class ShardedMonaVec:
         (IVF/HNSW traversals are pointer-chasing, not row scans).
         """
         from repro.core.api import MonaVec
-        meta = None
+        meta = tuned = None
         if isinstance(index, MonaVec):
             meta = index.meta
+            tuned = index.tuned
             index = index.backend
         if isinstance(index, BruteForceIndex):
             enc, ids = index.enc, index.ids
@@ -77,7 +79,7 @@ class ShardedMonaVec:
         enc_sharded = dataclasses.replace(enc, packed=packed, qnorms=qnorms,
                                           ccodes=ccodes)
         return ShardedMonaVec(enc=enc_sharded, ids=np.asarray(ids), mesh=mesh,
-                              n=n, meta=meta)
+                              n=n, meta=meta, tuned=tuned)
 
     @staticmethod
     def load(path: str, mesh=None) -> "ShardedMonaVec":
@@ -125,7 +127,8 @@ class ShardedMonaVec:
                 mask = pm if mask is None else mask & pm
             self._trace_shards(n_shards)
             return engine.search_sharded(self, queries, k, where_mask=mask,
-                                         rescore_mult=rescore_mult)
+                                         rescore_mult=rescore_mult,
+                                         tuned=self.tuned)
 
     def _trace_shards(self, n_shards: int) -> None:
         """Under an active QueryTrace, record one structural span per shard

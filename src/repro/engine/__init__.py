@@ -12,13 +12,14 @@ from repro.obs import DeltaStats  # noqa: F401 — back-compat re-export: the
 
 from .batcher import BatcherStats, MicroBatcher, Ticket
 from .plan import (PlanCache, PlanKey, PlanStats, SearchPlan, Searcher,
-                   plan_cache, plan_key_digest, search_backend,
-                   search_sharded, set_stage_observer, shape_bucket)
+                   plan_cache, plan_key_digest, resolve_knobs,
+                   search_backend, search_sharded, set_stage_observer,
+                   shape_bucket)
 from .fusion import search_hybrid
 
 __all__ = [
     "BatcherStats", "DeltaStats", "MicroBatcher", "Ticket",
     "PlanCache", "PlanKey", "PlanStats", "SearchPlan", "Searcher",
-    "plan_cache", "plan_key_digest", "search_backend", "search_hybrid",
-    "search_sharded", "set_stage_observer", "shape_bucket",
+    "plan_cache", "plan_key_digest", "resolve_knobs", "search_backend",
+    "search_hybrid", "search_sharded", "set_stage_observer", "shape_bucket",
 ]

@@ -241,10 +241,15 @@ def _validate_knobs(backend: Any, kwargs: dict) -> None:
 
 
 def _normalize_knobs(backend: Any, extras: Sequence[Any], kwargs: dict,
-                     k: int) -> dict:
+                     k: int, tuned: Any = None) -> dict:
     """Fill defaults and clamp exactly like the pre-engine search paths, so
     the normalized knobs are part of the plan key (nprobe=min(nprobe,nlist);
     the HNSW beam auto-widens to max(ef, k)).
+
+    Default resolution (DESIGN.md §12): an EXPLICIT per-call kwarg always
+    wins; otherwise a persisted autotune result (``tuned.knobs``) supplies
+    the default; otherwise the engine's built-in default.  Passing the knob
+    as ``None`` means "not given" on every rung of that ladder.
 
     BruteForce: ``rescore_mult=r > 0`` selects the binarized cascade with a
     rescore budget of m = r*k survivors per segment.  When every segment
@@ -252,13 +257,22 @@ def _normalize_knobs(backend: Any, extras: Sequence[Any], kwargs: dict,
     AWAY and the plan IS the plain full-scan plan — which is exactly how
     the m=n cascade is bit-identical to the full 4-bit scan (the exactness
     pin in tests/test_cascade.py)."""
+    tuned_knobs = {} if tuned is None else dict(getattr(tuned, "knobs", {}))
     kind = type(backend).__name__
     if kind == "IvfFlatIndex":
-        return {"nprobe": min(int(kwargs.get("nprobe", 8)), backend.nlist)}
+        nprobe = kwargs.get("nprobe")
+        if nprobe is None:
+            nprobe = tuned_knobs.get("nprobe", 8)
+        return {"nprobe": min(int(nprobe), backend.nlist)}
     if kind == "HnswIndex":
-        return {"ef": max(int(kwargs.get("ef", 64)), k)}
+        ef = kwargs.get("ef")
+        if ef is None:
+            ef = tuned_knobs.get("ef", 64)
+        return {"ef": max(int(ef), k)}
     if kind == "BruteForceIndex":
         rm = kwargs.get("rescore_mult")
+        if rm is None:
+            rm = tuned_knobs.get("rescore_mult")
         rm = 0 if rm is None else int(rm)
         if rm < 0:
             raise ValueError(f"rescore_mult must be >= 0, got {rm}")
@@ -273,6 +287,48 @@ def _normalize_knobs(backend: Any, extras: Sequence[Any], kwargs: dict,
             return {}   # full rescore everywhere == the full scan
         return {"rescore_mult": rm}
     return {}
+
+
+def _boost_knobs(backend: Any, extras: Sequence[Any], knobs: dict, k: int,
+                 mult: int) -> dict:
+    """Scale the candidate budget by a boost-curve multiplier (DESIGN.md §12).
+
+    Applied AFTER normalization and BEFORE plan keying, on selective
+    filtered queries only: IVF probes more lists (clamped to nlist), the
+    cascade widens its survivor budget (re-checking the full-scan collapse).
+    The HNSW beam is not boosted — ef gates graph traversal before the live
+    mask is known, and the tuned ef already meets the unfiltered target.
+    Boosted knobs mint ordinary plan keys, so the extra plans are bounded by
+    the multiplier ladder.
+    """
+    if mult <= 1 or not knobs:
+        return knobs
+    kind = type(backend).__name__
+    if kind == "IvfFlatIndex":
+        return {"nprobe": min(knobs["nprobe"] * int(mult), backend.nlist)}
+    if kind == "BruteForceIndex" and "rescore_mult" in knobs:
+        rm = knobs["rescore_mult"] * int(mult)
+        encs = [backend.enc] + [s.enc for s in extras]
+        if rm * k >= max(e.n for e in encs):
+            return {}   # boosted into a full rescore == the full scan
+        return {"rescore_mult": rm}
+    return knobs
+
+
+def resolve_knobs(backend: Any, state: Any, k: int, *, tuned: Any = None,
+                  **kwargs: Any) -> dict:
+    """The exact knobs a search with these arguments would run with.
+
+    Same validation + normalization as ``search_backend`` (explicit kwarg >
+    persisted tuned knob > engine default; nprobe clamped to nlist, ef
+    auto-widened to k, rescore_mult collapsed to the full scan when the
+    budget covers every segment) — surfaced so callers can SEE silent
+    clamping instead of wondering why nprobe=64 behaves like nprobe=16.
+    Selectivity boosting is per-query, so it is not included here.
+    """
+    _validate_knobs(backend, kwargs)
+    extras = state.extras if state is not None else []
+    return dict(_normalize_knobs(backend, extras, kwargs, k, tuned=tuned))
 
 
 def _fingerprint(backend: Any, extras: Sequence[Any], knobs: dict) -> tuple:
@@ -587,6 +643,7 @@ def search_backend(
     where_mask: Optional[np.ndarray] = None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    tuned: Any = None,
     **kwargs,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Bucketed compiled-plan search: (scores [b,k], external ids [b,k]).
@@ -605,10 +662,14 @@ def search_backend(
     ``where_mask=`` is the already-computed [n_total] boolean row mask for
     callers that evaluated a predicate themselves; it is ANDed host-side
     (the live mask is a dynamic argument, so no new plan is minted).
+
+    ``tuned=`` (a ``repro.tune.TuneResult``) supplies knob DEFAULTS and,
+    when it carries a boost curve, the per-query selectivity boost on
+    filtered searches (DESIGN.md §12).
     """
     _validate_knobs(backend, kwargs)
     extras = state.extras if state is not None else []
-    knobs = _normalize_knobs(backend, extras, kwargs, k)
+    knobs = _normalize_knobs(backend, extras, kwargs, k, tuned=tuned)
     use_kernel, interpret = ops.resolve_dispatch(use_kernel, interpret)
     kind = type(backend).__name__
 
@@ -632,6 +693,14 @@ def search_backend(
     else:
         live = np.ones(base_n, dtype=bool)
 
+    boost = None if tuned is None else getattr(tuned, "boost", None)
+    filtered = where is not None or where_mask is not None
+    # Denominator of the selectivity ratio: live∩allowed rows BEFORE the
+    # caller's filter — "1% selectivity" means 1% of what an unfiltered
+    # search of this index would rank.
+    pre_filter_n = (int(np.count_nonzero(live))
+                    if boost is not None and filtered and knobs else 0)
+
     if where_mask is not None:
         wm = np.asarray(where_mask, dtype=bool)
         if wm.shape != (n_total,):
@@ -653,6 +722,23 @@ def search_backend(
         where_sig = pred.structure(where, meta)
         where_args = tuple(
             jnp.asarray(a) for a in pred.flatten_args(where, meta))
+
+    # Selectivity-aware candidate budgets (DESIGN.md §12): on filtered
+    # searches of a boost-tuned index, measure how selective the filter is
+    # (exact popcount, cached per predicate structure+constants) and widen
+    # nprobe / rescore_mult via the tuned curve BEFORE plan keying — the
+    # fix for filtered recall collapsing at 1% selectivity.
+    if boost is not None and filtered and knobs and pre_filter_n > 0:
+        if where is not None:
+            from repro.tune.selectivity import estimate_matches
+            matched = estimate_matches(where, meta, live)
+        else:
+            matched = int(np.count_nonzero(live))
+        mult = boost.multiplier(matched / pre_filter_n)
+        if mult > 1:
+            knobs = _boost_knobs(backend, extras, knobs, k, mult)
+            obs.inc("engine.boost_applied",
+                    **{"backend": kind, "mult": str(mult)})
 
     fingerprint = _fingerprint(backend, extras, knobs)
     if where_sig is not None:
@@ -696,6 +782,7 @@ def search_backend(
 def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
                    where_mask: Optional[np.ndarray] = None,
                    rescore_mult: Optional[int] = None,
+                   tuned: Any = None,
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """The shard_map scan as a cached plan: same bucketing, same counters,
     same [b, k] sentinel-padded contract as the single-device engines.
@@ -723,9 +810,20 @@ def search_sharded(index: Any, queries: jnp.ndarray, k: int, *,
             raise ValueError(
                 f"where_mask covers {where_mask.shape} rows but the index "
                 f"has {index.n}")
+    if rescore_mult is None and tuned is not None:
+        rescore_mult = dict(getattr(tuned, "knobs", {})).get("rescore_mult")
     rm = 0 if rescore_mult is None else int(rescore_mult)
     if rm < 0:
         raise ValueError(f"rescore_mult must be >= 0, got {rm}")
+    boost = None if tuned is None else getattr(tuned, "boost", None)
+    if boost is not None and masked and rm > 0 and index.n > 0:
+        # Sharded corpora are static (no tombstones): selectivity is the
+        # mask's exact popcount over the whole corpus.
+        mult = boost.multiplier(int(np.count_nonzero(where_mask)) / index.n)
+        if mult > 1:
+            rm *= int(mult)
+            obs.inc("engine.boost_applied",
+                    **{"backend": "ShardedMonaVec", "mult": str(mult)})
     if rm > 0 and enc.ccodes is None:
         raise ValueError(
             "rescore_mult requires an index built with a binarized coarse "

@@ -20,6 +20,15 @@ compile time.
     PYTHONPATH=src python -m repro.launch.serve --n 200000 --shard
     PYTHONPATH=src python -m repro.launch.serve --n 20000 --mutate --compact
     PYTHONPATH=src python -m repro.launch.serve --n 20000 --micro-batch 8
+    PYTHONPATH=src python -m repro.launch.serve --n 50000 --index ivf \
+        --autotune --recall-target 0.95
+
+--autotune runs the training-free autotuner (DESIGN.md §12) after build or
+load: seeded sample queries drawn from the corpus are swept against an exact
+full-scan oracle over the SAME quantized segments, and the cheapest knob
+rung meeting --recall-target becomes the serving default (every phase report
+prints the resolved knobs).  With --save the tuned knobs persist as the
+.mvec v11 TUNE block and reload as defaults.
 
 --shard serves the BruteForce scan through repro.dist: the corpus is split
 over every local device and each batch runs the shard_map scan + cross-shard
@@ -121,6 +130,16 @@ def main() -> None:
                          "all rows, rescore only the top R*k survivors with "
                          "the 4-bit kernel (0 = full scan; requires --coarse "
                          "or a v10 .mvec)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the training-free autotuner (DESIGN.md §12) "
+                         "after build/load: seeded sample queries vs an "
+                         "exact oracle pick the cheapest backend knob "
+                         "meeting --recall-target; the tuned knobs become "
+                         "the serving defaults (persisted with --save as "
+                         ".mvec v11)")
+    ap.add_argument("--recall-target", type=float, default=0.95,
+                    metavar="R", help="autotune recall@k target (default "
+                    "0.95; requires --autotune)")
     ap.add_argument("--use-kernel", default="auto", choices=["auto", "on", "off"],
                     help="scoring dispatch: auto = Pallas kernel on TPU / "
                          "pure-jnp elsewhere; on/off force it (all backends)")
@@ -201,9 +220,27 @@ def main() -> None:
               + (f" (+ bucket metadata column, {args.filter_every} values)"
                  if meta else "")
               + (f" (+ {coarse} coarse codes)" if coarse else ""))
-        if args.save:
-            index.save(args.save)
-            print(f"[serve] saved {args.save}")
+
+    if args.autotune:
+        # Training-free knob selection (DESIGN.md §12): seeded corpus-drawn
+        # sample queries vs an exact full-scan oracle over the SAME
+        # quantized segments; the chosen knobs ride on index.tuned and
+        # become the defaults for every phase below.
+        t0 = time.time()
+        index.autotune(recall_target=args.recall_target, k=args.k)
+        tr = index.tuned
+        print(f"[serve] autotune: knobs={tr.knobs or '{} (full scan)'} "
+              f"met_target={tr.met_target} "
+              f"(recall@{tr.k} >= {tr.recall_target}, "
+              f"{tr.n_queries} sample queries, {time.time() - t0:.1f}s)"
+              + (f"; boost curve over {len(tr.boost.points)} selectivity "
+                 f"breakpoints" if tr.boost is not None else ""))
+
+    if args.save and (not args.load or args.autotune):
+        # A loaded index is only re-saved when --autotune gave it new knobs
+        # to persist (the v11 TUNE block); --mutate saves again at the end.
+        index.save(args.save)
+        print(f"[serve] saved {args.save}")
 
     if args.shard:
         import jax
@@ -260,6 +297,15 @@ def main() -> None:
                                   where=where,
                                   use_kernel=use_kernel, interpret=interpret,
                                   **knobs)
+        live_idx = reg.get(args.token, "default")
+        if hasattr(live_idx, "resolved_knobs"):
+            # The exact knobs this phase runs with, after tuned-default
+            # resolution and the engine's clamps (DESIGN.md §12) — sharded
+            # indexes carry tuned defaults but resolve per call instead.
+            resolved = live_idx.resolved_knobs(args.k, **knobs)
+            print(f"[serve] {label}: knobs={resolved or '{} (full scan)'}"
+                  + (" (tuned)" if getattr(live_idx, "tuned", None) is not None
+                     else ""))
         # Untimed warm-up: the first batch of a phase pays jit trace +
         # compile; measured QPS must not include it (at small --batches the
         # old numbers were dominated by compile time).

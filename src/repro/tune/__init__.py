@@ -1,0 +1,18 @@
+# Training-free autotuning (DESIGN.md §12): recall-targeted knob selection
+# persisted in the .mvec (v11 TUNE block), plus exact predicate-selectivity
+# estimation driving the engine's filtered candidate-budget boost.
+#
+# Import shape: result.py is pure data (no repro imports — mvec_format and
+# engine.plan both name TuneResult without a cycle); autotune.py drives the
+# real engine; selectivity.py exports the popcount PLAN STAGE the analysis
+# auditor witnesses.
+
+from .autotune import autotune, knob_ladder, measure_recall, sample_queries
+from .result import BoostCurve, BoostPoint, KnobRung, TuneResult
+from .selectivity import clear_caches, estimate_matches, make_popcount_fn
+
+__all__ = [
+    "BoostCurve", "BoostPoint", "KnobRung", "TuneResult",
+    "autotune", "clear_caches", "estimate_matches", "knob_ladder",
+    "make_popcount_fn", "measure_recall", "sample_queries",
+]

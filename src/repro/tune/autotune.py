@@ -1,0 +1,258 @@
+"""Recall-targeted, training-free knob autotuning (DESIGN.md §12).
+
+The paper's "one file, one call" pitch leaves nprobe/ef/rescore_mult to the
+user; Faiss's autotune and the recall/latency Pareto framing in Foundations
+of Vector Retrieval point at the fix: sweep each backend's knob ladder
+offline against an exact oracle and persist the cheapest setting meeting a
+recall target.  MonaVec's version is deterministic end to end:
+
+  * sample queries are LIVE CORPUS ROWS (strided over the live positions,
+    reconstructed from the quantized codes) plus seeded gaussian jitter —
+    no held-out data, no training;
+  * the oracle is a brute-force full scan over the SAME quantized segments
+    (``BruteForceIndex`` wrapped around the backend's own encoding), so
+    recall isolates exactly what the knob controls — candidate generation —
+    from quantization error;
+  * recall is an exact hit-count rational; the chosen rung is the SMALLEST
+    one meeting the target (knob ladders are cost-monotone, so smallest ==
+    cheapest without measuring wall-clock — QPS never enters the persisted
+    result, which is what makes re-tuning byte-deterministic).
+
+The same machinery tunes the selectivity BOOST CURVE: at seeded selectivity
+probes (1%, 10%, 50%) it finds the smallest knob multiplier restoring the
+target under a filter — the fix for filtered IVF recall collapsing at 1%
+selectivity (benchmarks/filtered_bench.py), applied per query by
+``engine.plan`` via the exact popcount in ``tune.selectivity``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.core import segments as seg
+from repro.core.bruteforce import BruteForceIndex
+
+from .result import BoostCurve, BoostPoint, KnobRung, TuneResult
+
+#: Boost-curve selectivity probes and the multiplier ladder swept at each.
+BOOST_SELECTIVITIES = (0.01, 0.1, 0.5)
+BOOST_MULTS = (1, 2, 4, 8, 16, 32)
+
+_NOISE = 0.15      # query jitter, in units of the sampled rows' std
+
+
+# ---------------------------------------------------------------------------
+# Seeded sample queries + the exact oracle.
+# ---------------------------------------------------------------------------
+
+def sample_queries(index: Any, n_queries: int, seed: int) -> np.ndarray:
+    """[n_q, dim] f32 — strided live corpus rows + seeded gaussian jitter.
+
+    Strided selection over the live row positions covers every segment and
+    every IVF list proportionally; the jitter keeps queries off the exact
+    lattice points (a query equal to a stored row is the easy case for any
+    candidate generator).  Pure function of (corpus bytes, seed).
+    """
+    encs = [index.backend.enc] + [s.enc for s in index.mut.extras]
+    live = seg.live_mask(index.mut, None, index.backend.enc.n)
+    positions = np.flatnonzero(live)
+    if positions.size == 0:
+        raise ValueError("autotune: the index has no live rows")
+    n_q = int(min(n_queries, positions.size))
+    sel = positions[np.linspace(0, positions.size - 1, n_q).round()
+                    .astype(np.int64)]
+    sel = np.unique(sel)
+
+    offsets = np.concatenate([[0], np.cumsum([e.n for e in encs])])
+    rows: List[np.ndarray] = []
+    for i, enc in enumerate(encs):
+        local = sel[(sel >= offsets[i]) & (sel < offsets[i + 1])] - offsets[i]
+        if local.size:
+            rows.append(seg.reconstruct_rows(enc, local))
+    base = np.concatenate(rows).astype(np.float32)
+    rng = np.random.RandomState(seed & 0xFFFFFFFF)
+    sigma = float(np.std(base)) or 1.0
+    noise = (_NOISE * sigma) * rng.randn(*base.shape)
+    return (base + noise.astype(np.float32)).astype(np.float32)
+
+
+def _oracle_backend(index: Any) -> BruteForceIndex:
+    """Exact full scan over the backend's OWN quantized encoding."""
+    return BruteForceIndex(enc=index.backend.enc, ids=index.backend.ids)
+
+
+def _engine_state(index: Any) -> Any:
+    return None if index.mut.is_static else index.mut
+
+
+def _search_ids(backend: Any, state: Any, queries: np.ndarray, k: int,
+                where_mask: Optional[np.ndarray] = None,
+                **kwargs: Any) -> np.ndarray:
+    from repro import engine
+    _, ids = engine.search_backend(backend, state, queries, k,
+                                   where_mask=where_mask, **kwargs)
+    return ids
+
+
+def measure_recall(ids: np.ndarray, oracle_ids: np.ndarray) -> float:
+    """Exact recall@k: |pred ∩ oracle| / |oracle|, sentinels excluded.
+
+    Rows where the oracle itself has no admissible result contribute
+    nothing to either count; an all-sentinel oracle (empty filter) is
+    vacuously 1.0.
+    """
+    num = den = 0
+    sent = int(seg.SENTINEL_ID)
+    for row_pred, row_gold in zip(np.asarray(ids), np.asarray(oracle_ids)):
+        gold = {int(x) for x in row_gold if int(x) != sent}
+        den += len(gold)
+        num += len(gold & {int(x) for x in row_pred})
+    return 1.0 if den == 0 else num / den
+
+
+# ---------------------------------------------------------------------------
+# Knob ladders (ascending == cheapest first; cost is monotone in each knob).
+# ---------------------------------------------------------------------------
+
+def knob_ladder(index: Any, k: int) -> Tuple[Optional[str], Tuple[int, ...]]:
+    """(knob name, ascending candidate values) for this backend.
+
+    (None, ()) means the backend has nothing to tune — a plain BruteForce
+    full scan is already exact, so its tuned knobs are empty and
+    ``met_target`` is trivially True.
+    """
+    backend = index.backend
+    kind = type(backend).__name__
+    if kind == "IvfFlatIndex":
+        vals = []
+        p = 1
+        while p < backend.nlist:
+            vals.append(p)
+            p <<= 1
+        vals.append(int(backend.nlist))          # always-safe ceiling
+        return "nprobe", tuple(vals)
+    if kind == "HnswIndex":
+        n = int(backend.enc.n)
+        lo, cap = max(k, 8), min(max(n, 8), 1024)
+        vals = []
+        e = lo
+        while e < cap:
+            vals.append(e)
+            e <<= 1
+        vals.append(cap)
+        return "ef", tuple(vals)
+    # BruteForce: only the cascade has a knob, and only when every segment
+    # carries coarse codes.
+    encs = [backend.enc] + [s.enc for s in index.mut.extras]
+    if any(e.ccodes is None for e in encs):
+        return None, ()
+    max_n = max(e.n for e in encs)
+    vals = []
+    rm = 1
+    while rm * k < max_n:
+        vals.append(rm)
+        rm <<= 1
+    vals.append(rm)     # collapses to the full scan: recall 1.0 by construction
+    return "rescore_mult", tuple(vals)
+
+
+def _pick(rungs: Sequence[KnobRung], target: float) -> Tuple[KnobRung, bool]:
+    """Smallest rung meeting the target, else the best-recall rung (ties to
+    the smaller value — rungs are ascending)."""
+    for r in rungs:
+        if r.recall >= target:
+            return r, True
+    best = rungs[0]
+    for r in rungs[1:]:
+        if r.recall > best.recall:
+            best = r
+    return best, False
+
+
+# ---------------------------------------------------------------------------
+# The tuner.
+# ---------------------------------------------------------------------------
+
+def _tune_boost(index: Any, knob: str, chosen: int, queries: np.ndarray,
+                k: int, recall_target: float, seed: int) -> Optional[BoostCurve]:
+    """Smallest knob multiplier restoring the target at each selectivity
+    probe.  Probe masks are seeded Bernoulli draws over ALL rows (the same
+    distribution the filtered benchmark sweeps); the oracle is the filtered
+    full scan, so recall isolates candidate-generation loss under the mask."""
+    backend, state = index.backend, _engine_state(index)
+    oracle = _oracle_backend(index)
+    n_total = int(index.n_total)
+    points = []
+    for i, s in enumerate(BOOST_SELECTIVITIES):
+        rng = np.random.RandomState((seed * 1000003 + i) % (1 << 32))
+        mask = rng.rand(n_total) < s
+        if not mask.any():
+            continue                      # probe degenerate at this corpus size
+        gold = _search_ids(oracle, state, queries, k, where_mask=mask)
+        mult, recall = 1, 0.0
+        for mult in BOOST_MULTS:
+            ids = _search_ids(backend, state, queries, k, where_mask=mask,
+                              **{knob: chosen * mult})
+            recall = measure_recall(ids, gold)
+            if recall >= recall_target:
+                break
+        points.append(BoostPoint(selectivity=float(s), mult=int(mult),
+                                 recall=float(recall)))
+    return BoostCurve(points=tuple(points)) if points else None
+
+
+def autotune(index: Any, *, recall_target: float = 0.95, k: int = 10,
+             n_queries: int = 32, seed: int = 0xA07001,
+             boost: bool = True) -> TuneResult:
+    """Sweep the backend's knob ladder against the exact oracle and return
+    the cheapest setting meeting ``recall@k >= recall_target``.
+
+    Pure function of (corpus bytes, arguments): the returned TuneResult —
+    and therefore the saved v11 file — is byte-deterministic across runs
+    and platforms.  Wall-clock lands only in obs histograms, never in the
+    result.
+    """
+    if not (0.0 < recall_target <= 1.0):
+        raise ValueError(
+            f"recall_target must be in (0, 1], got {recall_target}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    backend, state = index.backend, _engine_state(index)
+    kind = type(backend).__name__
+    with obs.timed_span("autotune", histogram="tune.autotune_us",
+                        labels={"backend": kind}):
+        queries = sample_queries(index, n_queries, seed)
+        knob, values = knob_ladder(index, k)
+        if knob is None:
+            result = TuneResult(
+                recall_target=float(recall_target), k=int(k),
+                n_queries=int(queries.shape[0]), seed=int(seed),
+                met_target=True, knobs={}, ladder={}, boost=None)
+        else:
+            oracle = _oracle_backend(index)
+            gold = _search_ids(oracle, state, queries, k)
+            rungs = tuple(
+                KnobRung(value=int(v), recall=float(measure_recall(
+                    _search_ids(backend, state, queries, k, **{knob: v}),
+                    gold)))
+                for v in values)
+            chosen, met = _pick(rungs, recall_target)
+            curve = None
+            if boost and kind in ("IvfFlatIndex", "BruteForceIndex"):
+                curve = _tune_boost(index, knob, chosen.value, queries, k,
+                                    recall_target, seed)
+            result = TuneResult(
+                recall_target=float(recall_target), k=int(k),
+                n_queries=int(queries.shape[0]), seed=int(seed),
+                met_target=met, knobs={knob: int(chosen.value)},
+                ladder={knob: rungs}, boost=curve)
+    obs.inc("tune.runs", **{"backend": kind,
+                            "met_target": str(result.met_target)})
+    return result
+
+
+__all__ = ["BOOST_MULTS", "BOOST_SELECTIVITIES", "autotune", "knob_ladder",
+           "measure_recall", "sample_queries"]

@@ -1,0 +1,142 @@
+"""Exact predicate-selectivity estimation (DESIGN.md §12).
+
+Filtered IVF recall collapses at low selectivity because candidate lists are
+pruned BEFORE the predicate mask; the fix (the boost curve in
+``tune.autotune``) needs to know, per query, how selective the predicate is.
+"Estimate" here means an EXACT popcount of the compiled predicate mask ANDed
+with the live mask — the same ``predicate.build_stage_fn`` lowering the
+engine fuses into its plans, reduced to an int32 count instead of consumed
+by a scan.  Exactness keeps the boost decision deterministic (cache keys and
+plan keys never depend on a sampling RNG) and lets the hypothesis suite pin
+the device count against the host ``predicate.evaluate`` oracle bit-for-bit.
+
+Two caches keep this off the per-query hot path:
+
+  * one compiled popcount program per predicate STRUCTURE (same sharing rule
+    as the plan cache: constants ride as dynamic operands, so Eq("a", 1) and
+    Eq("a", 2) share a trace);
+  * an LRU of computed counts keyed by (structure, encoded constants, used
+    columns' version tokens, row count, live-mask digest).  Column version
+    tokens (``metadata.Column.version``) are minted per construction and
+    every mutation path builds new Column objects, so a token mismatch is a
+    sound staleness signal without hashing value arrays.
+
+The popcount is a PLAN STAGE for the determinism auditor: invocations are
+reported through ``engine.plan``'s stage-observer slot and the analysis grid
+witnesses ``selectivity_popcount`` captures (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import predicate as pred_mod
+from repro.core.metadata import MetaStore, encode_constant
+
+#: repro.analysis coverage hook: the popcount program is a compiled stage the
+#: auditor must capture from a live grid run (grid point ``tuned+where``).
+PLAN_STAGES = ("make_popcount_fn",)
+
+_STAGE_NAME = "selectivity_popcount"
+
+#: structure -> (raw stage fn, jitted stage fn)
+_FN_CACHE: Dict[tuple, Tuple[Callable, Callable]] = {}
+
+#: LRU of exact counts; bounded so long-lived servers cannot grow it.
+_COUNT_CACHE: "collections.OrderedDict[tuple, int]" = collections.OrderedDict()
+_COUNT_CACHE_MAX = 256
+
+
+def make_popcount_fn(p: "pred_mod.Predicate") -> Callable[..., jnp.ndarray]:
+    """Compile ``fn(live, *args) -> int32 count of live & mask``.
+
+    Same argument convention as ``predicate.build_stage_fn`` (whose lowering
+    this wraps): constants are dynamic operands, never trace constants.  The
+    reduction is integer, so the count is exact under any XLA fusion.
+    """
+    mask_fn = pred_mod.build_stage_fn(p)
+
+    def popcount(live: jnp.ndarray, *args: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(mask_fn(live, *args).astype(jnp.int32))
+
+    return popcount
+
+
+def _constants_key(p: "pred_mod.Predicate", store: MetaStore) -> tuple:
+    """Encoded constants per leaf, preorder — hashable, exact."""
+    out = []
+    for leaf in pred_mod._leaves(p):
+        col = store[leaf.col]
+        vocab = col.vocab_map()
+        values = leaf.values if isinstance(leaf, pred_mod.In) else (leaf.value,)
+        out.append(tuple(encode_constant(col.kind, v, vocab) for v in values))
+    return tuple(out)
+
+
+def _live_key(live: Optional[np.ndarray]) -> Optional[tuple]:
+    if live is None:
+        return None
+    arr = np.asarray(live)
+    return (int(arr.shape[0]), hash(arr.tobytes()))
+
+
+def estimate_matches(p: "pred_mod.Predicate", store: MetaStore,
+                     live: Optional[np.ndarray] = None) -> int:
+    """Exact count of rows passing ``p`` (restricted to ``live`` if given).
+
+    Cached per (structure, constants, column versions, rows, live mask);
+    misses run the compiled popcount stage on device.
+    """
+    structure = pred_mod.structure(p, store)
+    key = (
+        structure,
+        _constants_key(p, store),
+        tuple(store[c].version for c in pred_mod.used_columns(p)),
+        store.n_rows,
+        _live_key(live),
+    )
+    hit = _COUNT_CACHE.get(key)
+    if hit is not None:
+        _COUNT_CACHE.move_to_end(key)
+        obs.inc("tune.selectivity_cache.hits")
+        return hit
+    obs.inc("tune.selectivity_cache.misses")
+
+    cached = _FN_CACHE.get(structure)
+    if cached is None:
+        import jax
+        raw = make_popcount_fn(p)
+        cached = _FN_CACHE[structure] = (raw, jax.jit(raw))
+    raw, jitted = cached
+
+    if live is None:
+        live_arr = jnp.ones((store.n_rows,), dtype=bool)
+    else:
+        live_arr = jnp.asarray(np.asarray(live, dtype=bool))
+    args = pred_mod.flatten_args(p, store)
+
+    from repro.engine import plan as plan_mod
+    if plan_mod._STAGE_OBSERVER is not None:
+        plan_mod._STAGE_OBSERVER(
+            "SelectivityEstimator", _STAGE_NAME, raw, (live_arr,) + args)
+
+    count = int(jitted(live_arr, *args))
+    _COUNT_CACHE[key] = count
+    while len(_COUNT_CACHE) > _COUNT_CACHE_MAX:
+        _COUNT_CACHE.popitem(last=False)
+    return count
+
+
+def clear_caches() -> None:
+    """Drop both caches (tests; never required for correctness)."""
+    _FN_CACHE.clear()
+    _COUNT_CACHE.clear()
+
+
+__all__ = ["PLAN_STAGES", "clear_caches", "estimate_matches",
+           "make_popcount_fn"]

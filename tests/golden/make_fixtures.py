@@ -92,12 +92,28 @@ def build_v10_coarse_bruteforce():
     return idx
 
 
+def build_v11_tuned_ivf():
+    """v11: TUNE block (knobs + ladder + boost curve) over an IVF index
+    with metadata — autotuned with seeded sample queries against the exact
+    quantized oracle, smallest-rung tie-break, so the persisted envelope is
+    byte-stable (DESIGN.md §12)."""
+    from repro.core import MonaVec
+    idx = MonaVec.build(
+        _data(24, 16, 109), metric="cosine", index="ivf", seed=7, nlist=3,
+        train_iters=5,
+        meta={"price": np.arange(24, dtype=np.int64) - 6,
+              "cat": np.array(["red", "green", "blue"] * 8)})
+    idx.autotune(recall_target=0.9, k=4, n_queries=8, seed=11)
+    return idx
+
+
 FIXTURES = {
     "v6_bruteforce.mvec": build_v6_bruteforce,
     "v7_perm_bruteforce.mvec": build_v7_perm_bruteforce,
     "v8_segmented_ivf.mvec": build_v8_segmented_ivf,
     "v9_meta_bruteforce.mvec": build_v9_meta_bruteforce,
     "v10_coarse_bruteforce.mvec": build_v10_coarse_bruteforce,
+    "v11_tuned_ivf.mvec": build_v11_tuned_ivf,
 }
 
 

@@ -348,14 +348,15 @@ class TestMvecFormat:
         with pytest.raises(ValueError):
             fmt.load(str(p))
 
-    @pytest.mark.parametrize("version", [1, 3, 5, 11])
+    @pytest.mark.parametrize("version", [1, 3, 5, 12])
     def test_rejects_unsupported_versions(self, version, corpus, tmp_path):
         """Versions 1-5 predate the v6 header layout (parsing them against it
         would misread every field) and future versions are unknown: all must
         be rejected with an error naming the version found.  (8 is the
         segmented layout since DESIGN.md §6, 9 adds metadata columns per
-        DESIGN.md §8, 10 adds coarse CODE blocks per DESIGN.md §11 — none
-        of those is rejected any more.)"""
+        DESIGN.md §8, 10 adds coarse CODE blocks per DESIGN.md §11, 11 adds
+        the TUNE envelope per DESIGN.md §12 — none of those is rejected any
+        more; the error's ceiling is pinned by test_mvec_golden.)"""
         import struct
         from repro.core import mvec_format as fmt
         p = str(tmp_path / "v.mvec")

@@ -65,6 +65,7 @@ class TestGoldenFixtures:
         assert open(os.path.join(GOLD, "v8_segmented_ivf.mvec"), "rb").read()[4] == 8
         assert open(os.path.join(GOLD, "v9_meta_bruteforce.mvec"), "rb").read()[4] == 9
         assert open(os.path.join(GOLD, "v10_coarse_bruteforce.mvec"), "rb").read()[4] == 10
+        assert open(os.path.join(GOLD, "v11_tuned_ivf.mvec"), "rb").read()[4] == 11
 
     def test_v9_meta_survives_roundtrip(self, tmp_path):
         """The v9 fixture's columns load with exact values and survive a
@@ -98,6 +99,22 @@ class TestGoldenFixtures:
         scores, ids = idx.search(q, k=4, rescore_mult=2)
         assert ids.shape == (3, 4)
 
+    def test_v11_tune_survives_roundtrip(self):
+        """The v11 fixture's TUNE block loads as a full TuneResult — chosen
+        knobs, the swept ladder with its measured recalls, and the boost
+        curve — and the tuned knob is what resolved_knobs() serves by
+        default (DESIGN.md §12)."""
+        idx = MonaVec.load(os.path.join(GOLD, "v11_tuned_ivf.mvec"))
+        t = idx.tuned
+        assert t is not None and t.met_target
+        assert (t.recall_target, t.k, t.n_queries, t.seed) == (0.9, 4, 8, 11)
+        assert t.knobs == {"nprobe": 3}
+        assert [r.value for r in t.ladder["nprobe"]] == [1, 2, 3]
+        recalls = [r.recall for r in t.ladder["nprobe"]]
+        assert recalls == sorted(recalls) and recalls[-1] == 1.0
+        assert t.boost is not None and len(t.boost.points) >= 1
+        assert idx.resolved_knobs(4) == {"nprobe": 3}
+
     def test_unknown_version_names_highest_supported(self, tmp_path):
         """Bugfix regression: the unknown-version error must tell the user
         the highest version this build reads, not just echo the bad byte."""
@@ -107,7 +124,7 @@ class TestGoldenFixtures:
         with open(p, "wb") as fh:
             fh.write(bytes(raw))
         with pytest.raises(ValueError, match=r"version 99.*highest supported "
-                                             r"version is 10"):
+                                             r"version is 11"):
             fmt.load(p)
 
 
@@ -143,7 +160,8 @@ class TestTruncationFuzz:
     @pytest.mark.parametrize("name", ["v6_bruteforce.mvec",
                                       "v8_segmented_ivf.mvec",
                                       "v9_meta_bruteforce.mvec",
-                                      "v10_coarse_bruteforce.mvec"])
+                                      "v10_coarse_bruteforce.mvec",
+                                      "v11_tuned_ivf.mvec"])
     def test_every_truncation_offset_raises(self, name, tmp_path):
         raw = open(os.path.join(GOLD, name), "rb").read()
         p = str(tmp_path / "cut.mvec")

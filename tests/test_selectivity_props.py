@@ -1,0 +1,150 @@
+"""Hypothesis property suite for exact selectivity estimation (DESIGN.md §12).
+
+``repro.tune.selectivity.estimate_matches`` claims an EXACT popcount of the
+compiled predicate mask — the same ``build_stage_fn`` lowering the engine
+fuses into plans, reduced to an int32 count.  The property: for ANY random
+predicate AST over random typed columns, any live mask, and any mutation of
+the backing store, the device count equals the host numpy oracle
+``np.count_nonzero(predicate.evaluate(p, store) & live)`` bit for bit.
+
+The count cache is keyed by column version tokens, so the suite also pins
+the staleness contract: mutating the store (append/gather) must never serve
+a stale count.
+
+AST generation mirrors tests/test_predicate_props.py (abstract tokens,
+deterministic materialization) so shrinking stays cheap.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                                         "(pip install -r requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.core import metadata as md  # noqa: E402
+from repro.core import predicate as pred  # noqa: E402
+from repro.tune.selectivity import clear_caches, estimate_matches  # noqa: E402
+
+I64_POOL = [np.iinfo(np.int64).min, np.iinfo(np.int64).max, -1, 0, 1,
+            -7, 42, 1 << 62]
+F64_POOL = [0.0, -0.0, 1.5, -2.25, 1e300, -1e300, 1e-300, float("inf"),
+            float("-inf")]
+STR_POOL = ["red", "green", "blue", "cyan", "missing", ""]
+
+_cmp = st.tuples(st.sampled_from(["eq", "ne", "lt", "le", "gt", "ge"]),
+                 st.sampled_from(["i", "f", "s"]),
+                 st.integers(0, 8))
+_in = st.tuples(st.just("in"), st.sampled_from(["i", "f", "s"]),
+                st.lists(st.integers(0, 8), min_size=1, max_size=3))
+leaf_tokens = st.one_of(_cmp, _in)
+ast_tokens = st.recursive(
+    leaf_tokens,
+    lambda inner: st.one_of(
+        st.tuples(st.just("and"), inner, inner),
+        st.tuples(st.just("or"), inner, inner),
+        st.tuples(st.just("not"), inner)),
+    max_leaves=6)
+
+_OPS = {"eq": pred.Eq, "ne": pred.Ne, "lt": pred.Lt, "le": pred.Le,
+        "gt": pred.Gt, "ge": pred.Ge}
+
+
+def _const(col: str, idx: int, store: md.MetaStore):
+    if col == "i":
+        pool = I64_POOL + [int(v) for v in store["i"].values[:4]]
+        return int(pool[idx % len(pool)])
+    if col == "f":
+        pool = F64_POOL + [float(v) for v in store["f"].values[:4]]
+        return float(pool[idx % len(pool)])
+    return STR_POOL[idx % len(STR_POOL)]
+
+
+def _materialize(tok, store: md.MetaStore) -> pred.Predicate:
+    if tok[0] == "and":
+        return pred.And(_materialize(tok[1], store),
+                        _materialize(tok[2], store))
+    if tok[0] == "or":
+        return pred.Or(_materialize(tok[1], store),
+                       _materialize(tok[2], store))
+    if tok[0] == "not":
+        return pred.Not(_materialize(tok[1], store))
+    if tok[0] == "in":
+        _, col, idxs = tok
+        return pred.In(col, tuple(_const(col, i, store) for i in idxs))
+    op, col, idx = tok
+    if col == "s" and op in ("lt", "le", "gt", "ge"):
+        op = "eq"                     # ordering on str is rejected by design
+    return _OPS[op](col, _const(col, idx, store))
+
+
+def _store(seed: int, n: int = 32) -> md.MetaStore:
+    rng = np.random.RandomState(seed)
+    i64 = rng.randint(-50, 50, n).astype(np.int64)
+    i64[: min(4, n)] = I64_POOL[: min(4, n)]
+    f64 = rng.randn(n) * 5.0
+    f64[: min(4, n)] = F64_POOL[: min(4, n)]
+    strs = np.array(STR_POOL[:4])[rng.randint(0, 4, n)]
+    return md.MetaStore.build({"i": i64, "f": f64, "s": strs}, n)
+
+
+def _oracle(p: pred.Predicate, store: md.MetaStore, live=None) -> int:
+    m = pred.evaluate(p, store)
+    if live is not None:
+        m = m & live
+    return int(np.count_nonzero(m))
+
+
+COMMON = dict(deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+class TestPopcountOracleAgreement:
+    @settings(max_examples=60, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**16))
+    def test_count_equals_host_oracle(self, tok, seed):
+        store = _store(seed)
+        p = _materialize(tok, store)
+        assert estimate_matches(p, store) == _oracle(p, store), str(tok)
+
+    @settings(max_examples=30, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**16),
+           live_seed=st.integers(0, 2**16))
+    def test_count_respects_live_mask(self, tok, seed, live_seed):
+        store = _store(seed)
+        p = _materialize(tok, store)
+        live = np.random.RandomState(live_seed).rand(store.n_rows) < 0.5
+        got = estimate_matches(p, store, live)
+        assert got == _oracle(p, store, live), str(tok)
+
+    @settings(max_examples=20, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**14))
+    def test_mutated_store_never_serves_stale_counts(self, tok, seed):
+        """append() and gather() mint new Column version tokens, so a count
+        cached against the old store must not be returned for the new one
+        (and vice versa) — both must equal their own oracle."""
+        s1 = _store(seed, n=24)
+        p1 = _materialize(tok, s1)
+        before = estimate_matches(p1, s1)
+        assert before == _oracle(p1, s1)
+        extra = _store(seed + 1, n=8)
+        s1.append({"i": extra["i"].values, "f": extra["f"].values,
+                   "s": extra["s"].decoded().astype(str)}, 8)
+        p2 = _materialize(tok, s1)
+        assert estimate_matches(p2, s1) == _oracle(p2, s1), str(tok)
+        keep = np.arange(s1.n_rows) % 3 != 0
+        s2 = s1.gather(keep)
+        p3 = _materialize(tok, s2)
+        assert estimate_matches(p3, s2) == _oracle(p3, s2), str(tok)
+
+    @settings(max_examples=20, **COMMON)
+    @given(tok=ast_tokens, seed=st.integers(0, 2**16))
+    def test_cache_hit_equals_miss(self, tok, seed):
+        """The LRU must be a pure memo: a cold call (caches cleared) and a
+        warm repeat return the same exact count."""
+        store = _store(seed)
+        p = _materialize(tok, store)
+        clear_caches()
+        cold = estimate_matches(p, store)
+        warm = estimate_matches(p, store)
+        assert cold == warm == _oracle(p, store), str(tok)
